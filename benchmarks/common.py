@@ -1,0 +1,29 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def timed(fn, *args, repeat=3, **kwargs):
+    """Returns (result, microseconds_per_call) — result from the last call."""
+    fn(*args, **kwargs)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        res = fn(*args, **kwargs)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return res, us
+
+
+def emit(rows: list[dict], name: str):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def csv_line(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

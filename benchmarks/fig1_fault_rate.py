@@ -1,0 +1,83 @@
+"""Paper Fig. 1: fault rate vs voltage for VC707 / KC705-A / KC705-B,
+with and without built-in ECC.
+
+The tested memory matches the paper's hardware design: 512 memories of
+1024 x 64-bit words (full BRAM utilization on VC707). For each voltage in the
+critical region we count raw faulty words and the residual (uncorrected)
+faulty words after SECDED — the ECC bars of Fig. 1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, emit, timed
+from repro.core import ecc, voltage
+from repro.core.faultsim import FaultField
+from repro.core.telemetry import FaultStats
+
+N_WORDS = 512 * 1024  # 512 x (1024 x 64-bit) words
+
+
+def _stats_at(field: FaultField, v: float) -> FaultStats:
+    masks = field.masks(v)
+    # ECC outcome: a 1-flip word corrects, >=2-flip words detect or alias.
+    # Build statuses via the decoder on a zero memory (content-independent:
+    # syndromes depend only on the flip pattern).
+    import jax.numpy as jnp
+
+    lo = jnp.asarray(masks.lo)
+    hi = jnp.asarray(masks.hi)
+    par = ecc.encode(jnp.zeros_like(lo), jnp.zeros_like(hi)) ^ jnp.asarray(masks.parity)
+    _, _, status = ecc.decode(lo, hi, par)
+    return FaultStats.from_decode(np.asarray(status), masks.flip_counts())
+
+
+def run() -> list[dict]:
+    rows = []
+    for pname, prof in voltage.PLATFORMS.items():
+        field = FaultField(prof, N_WORDS, seed=17)
+        vs = np.round(np.arange(prof.v_crash, prof.v_min + 1e-9, 0.01), 3)
+        for v in vs:
+            st, us = timed(_stats_at, field, float(v), repeat=1)
+            mbits = N_WORDS * 72 / (1024 * 1024)
+            rows.append(
+                {
+                    "platform": pname,
+                    "voltage": float(v),
+                    "faults_per_mbit": st.faulty_bits / mbits,
+                    "faulty_words": st.faulty_words,
+                    "residual_after_ecc": st.detected + st.silent,
+                    "ecc_reduction": 1.0
+                    - (st.detected + st.silent) / max(st.faulty_words, 1),
+                    "model_rate_per_mbit": prof.faults_per_mbit(float(v)),
+                    "us": us,
+                }
+            )
+    emit(rows, "fig1_fault_rate")
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(
+            csv_line(
+                f"fig1/{r['platform']}@{r['voltage']:.2f}V",
+                r["us"],
+                f"faults_per_mbit={r['faults_per_mbit']:.1f};"
+                f"ecc_reduction={100 * r['ecc_reduction']:.1f}%",
+            )
+        )
+    # headline anchors vs paper
+    vc = [r for r in rows if r["platform"] == "vc707"]
+    crash = vc[0]
+    print(
+        f"# VC707 @V_crash: {crash['faults_per_mbit']:.0f} faults/Mbit "
+        f"(paper 652); ECC removes {100 * crash['ecc_reduction']:.1f}% "
+        f"(paper >90% corrected)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU) + roofline model.
+
+Wall-times here are CPU-interpret numbers (NOT TPU performance); the derived
+column reports the *kernel roofline model* for TPU v5e — the quantity used in
+EXPERIMENTS.md §Perf to compare the fused ECC-matmul read path against the
+naive decode-then-matmul baseline:
+
+  naive  HBM bytes = planes(9B/8w) + int8 W write + int8 W read + x + out
+  fused  HBM bytes = planes(9B/8w) + x + out          (decode lives in VMEM)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, emit, timed
+from repro.kernels import ops, ref
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def _roofline(m, k, n, fused: bool):
+    planes = (k // 8) * n * 9  # lo+hi (8B) + parity (1B) per 8 int8 weights
+    x_io = m * k * 4 + m * n * 4
+    w_rt = 0 if fused else 2 * k * n  # int8 W write + read for naive
+    t_mem = (planes + x_io + w_rt) / HBM_BW
+    t_comp = 2 * m * k * n / PEAK
+    return t_mem, t_comp
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    # encode/decode planes
+    for n_words in (1 << 14, 1 << 17):
+        lo = jnp.asarray(rng.integers(0, 2**32, n_words, dtype=np.uint32))
+        hi = jnp.asarray(rng.integers(0, 2**32, n_words, dtype=np.uint32))
+        par, us_e = timed(lambda: jax.block_until_ready(ops.encode(lo, hi)))
+        _, us_d = timed(lambda: jax.block_until_ready(ops.decode(lo, hi, par)))
+        rows.append({"kernel": "secded_encode", "words": n_words, "us": us_e})
+        rows.append({"kernel": "secded_decode", "words": n_words, "us": us_d})
+    # fused vs naive ecc_matmul
+    for (m, k, n) in ((128, 1024, 512), (256, 2048, 1024)):
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, n)) * 0.05, jnp.float32)
+        ew = ops.pack_ecc_weights(w)
+        _, us_f = timed(lambda: jax.block_until_ready(ops.ecc_matmul(x, ew, fuse=True)), repeat=2)
+        _, us_n = timed(lambda: jax.block_until_ready(ops.ecc_matmul(x, ew, fuse=False)), repeat=2)
+        tm_f, tc = _roofline(m, k, n, fused=True)
+        tm_n, _ = _roofline(m, k, n, fused=False)
+        rows.append(
+            {
+                "kernel": "ecc_matmul", "mkn": [m, k, n],
+                "us_fused_interp": us_f, "us_naive_interp": us_n,
+                "tpu_model_mem_fused_s": tm_f, "tpu_model_mem_naive_s": tm_n,
+                "tpu_model_compute_s": tc,
+                "fused_traffic_saving": 1 - tm_f / tm_n,
+            }
+        )
+    emit(rows, "kernel_micro")
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        if r["kernel"] == "ecc_matmul":
+            m, k, n = r["mkn"]
+            print(
+                csv_line(
+                    f"kernel/ecc_matmul_{m}x{k}x{n}", r["us_fused_interp"],
+                    f"fused_vs_naive_hbm_saving={100 * r['fused_traffic_saving']:.1f}%;"
+                    f"model_mem_fused={r['tpu_model_mem_fused_s']:.2e}s",
+                )
+            )
+        else:
+            print(csv_line(f"kernel/{r['kernel']}_{r['words']}w", r["us"], "interpret"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""§Perf helper: compare baseline vs hillclimb-variant dry-run records."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt(r):
+    return (
+        f"t_comp={r['t_compute_s']:.3e} t_mem={r['t_memory_s']:.3e} "
+        f"t_coll={r['t_collective_s']:.3e} bound={r['bottleneck']} "
+        f"roofline_bound={r['roofline_bound_s']:.3e}s "
+        f"mem/chip={r['memory']['peak_est_gib']:.2f}GiB "
+        f"useful={r.get('useful_flops_ratio', 0) or 0:.2f}"
+    )
+
+
+def main():
+    paths = sys.argv[1:] or ["benchmarks/out/dryrun.json", "benchmarks/out/hillclimb.json"]
+    rows = []
+    for p in paths:
+        try:
+            rows += load(p)
+        except FileNotFoundError:
+            pass
+    by_cell: dict = {}
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        by_cell.setdefault((r["arch"], r["shape"], r["mesh"]), []).append(r)
+    for (arch, shape, mesh), rs in sorted(by_cell.items()):
+        if len(rs) < 2 and not any(r.get("label") for r in rs):
+            continue
+        print(f"\n== {arch} x {shape} @ {mesh} ==")
+        base = next((r for r in rs if not r.get("label")), None)
+        for r in sorted(rs, key=lambda x: (x.get("label") or "")):
+            tag = r.get("label") or "baseline"
+            line = f"  {tag:28s} {fmt(r)}"
+            if base and r is not base:
+                speedup = base["roofline_bound_s"] / max(r["roofline_bound_s"], 1e-30)
+                line += f"  [{speedup:.2f}x vs baseline]"
+            print(line)
+
+
+if __name__ == "__main__":
+    main()

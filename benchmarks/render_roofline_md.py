@@ -1,0 +1,43 @@
+"""Render EXPERIMENTS.md roofline tables from dryrun.json/hillclimb.json."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "benchmarks/out/dryrun.json"
+    with open(path) as f:
+        rows = [r for r in json.load(f) if r["status"] == "ok"]
+    print("| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | bound | useful | GiB/chip | fits16G |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    arch_order = [
+        "qwen3-0.6b", "qwen1.5-4b", "minitron-8b", "qwen2-7b",
+        "llama-3.2-vision-11b", "rwkv6-3b", "musicgen-medium",
+        "llama4-scout-17b-a16e", "mixtral-8x22b", "jamba-1.5-large-398b",
+    ]
+    shape_order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+    def key(r):
+        return (
+            arch_order.index(r["arch"]) if r["arch"] in arch_order else 99,
+            shape_order.index(r["shape"]) if r["shape"] in shape_order else 9,
+            r["mesh"],
+            r.get("label") or "",
+        )
+
+    for r in sorted(rows, key=key):
+        label = f" ({r['label']})" if r.get("label") else ""
+        print(
+            f"| {r['arch']}{label} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio'] or 0:.2f} "
+            f"| {r['memory']['peak_est_gib']:.1f} "
+            f"| {'yes' if r['memory']['fits_16g'] else 'NO'} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/out/dryrun.json (produced by repro.launch.dryrun) and
+prints, per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and per-chip memory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import OUT_DIR, csv_line
+
+DRYRUN = os.path.join(OUT_DIR, "dryrun.json")
+
+
+def run() -> list[dict]:
+    if not os.path.exists(DRYRUN):
+        return []
+    with open(DRYRUN) as f:
+        return json.load(f)
+
+
+def main():
+    rows = run()
+    if not rows:
+        print("# no dryrun.json yet — run: python -m repro.launch.dryrun")
+        return
+    ok = [r for r in rows if r["status"] == "ok"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(
+            csv_line(
+                f"roofline/{r['arch']}/{r['shape']}@{r['mesh']}",
+                r["seconds"]["total"] * 1e6,
+                f"t_comp={r['t_compute_s']:.3e};t_mem={r['t_memory_s']:.3e};"
+                f"t_coll={r['t_collective_s']:.3e};bound={r['bottleneck']};"
+                f"useful={r['useful_flops_ratio']:.2f};"
+                f"mem_gib={r['memory']['peak_est_gib']:.1f}",
+            )
+        )
+    fails = [r for r in rows if r["status"] != "ok"]
+    print(f"# {len(ok)} ok / {len(fails)} failed cells")
+    for r in fails:
+        print(f"# FAIL {r['arch']}/{r['shape']}@{r['mesh']}: {r.get('error', '?')}")
+
+
+if __name__ == "__main__":
+    main()

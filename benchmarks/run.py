@@ -1,0 +1,51 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark, mirroring the
+paper's result set plus the kernel and roofline sections.
+
+  fig1    fault rate vs voltage, 3 platforms, ECC on/off      (paper Fig. 1)
+  fig2    fault-type histogram + FIP                          (paper Fig. 2b/2c)
+  table1  ECC area/power overhead + derived savings           (paper Table I)
+  fig3    NN accelerator error vs voltage, ECC on/off         (paper Fig. 3)
+  kernels Pallas kernel micro + fused-vs-naive roofline model
+  roofline dry-run roofline table (reads benchmarks/out/dryrun.json)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    fig1_fault_rate,
+    fig2_fault_types,
+    fig3_nn_accuracy,
+    kernel_micro,
+    roofline,
+    table1_overhead,
+)
+
+SECTIONS = [
+    ("fig1", fig1_fault_rate),
+    ("fig2", fig2_fault_types),
+    ("table1", table1_overhead),
+    ("fig3", fig3_nn_accuracy),
+    ("kernels", kernel_micro),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in SECTIONS:
+        if only and name != only:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===")
+        mod.main()
+        print(f"# {name} finished in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: the paper's mechanism in 60 lines.
+
+1. Put an array into an ECC-protected "BRAM" voltage domain.
+2. Undervolt below V_min — faults appear at the calibrated exponential rate.
+3. Read through the SECDED decoder: >90% corrected, ~7% detected.
+4. Let the DED-canary controller find the minimum safe voltage at runtime.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    EccMemoryDomain,
+    FaultStats,
+    PLATFORMS,
+    UndervoltController,
+    voltage,
+)
+
+rng = np.random.default_rng(0)
+weights = rng.standard_normal((512, 1024)).astype(np.float32)
+
+# 1. Write into the domain (SECDED(72,64)-encoded word planes).
+dom = EccMemoryDomain(platform="vc707", seed=42)
+dom.write("weights", weights)
+
+# 2-3. Sweep the rail through the critical region.
+prof = PLATFORMS["vc707"]
+print(f"V_nom={prof.v_nom} V_min={prof.v_min} V_crash={prof.v_crash} "
+      f"(guardband {100 * prof.guardband:.0f}%)")
+for v in (1.0, 0.61, 0.58, 0.56, 0.54):
+    out, stats = dom.read("weights", voltage=v)
+    wrong = int((np.asarray(out) != weights).sum())
+    print(
+        f"V={v:.2f}: faulty_words={stats.faulty_words:5d} "
+        f"corrected={stats.corrected:5d} detected={stats.detected:4d} "
+        f"silent={stats.silent:3d} wrong_values={wrong:5d} "
+        f"bram_power={voltage.bram_power(v, ecc=True):.3f} W"
+    )
+
+# 4. Runtime undervolting: lower until the first DED event, then lock.
+ctrl = UndervoltController(prof, step_v=0.01)
+while not ctrl.locked:
+    dom.stats = FaultStats()
+    _, stats = dom.read("weights", voltage=ctrl.voltage)
+    ctrl.update(stats)
+print(
+    f"controller locked at {ctrl.voltage:.2f} V "
+    f"({100 * (1 - voltage.bram_power(ctrl.voltage, ecc=True) / voltage.bram_power(1.0)):.1f}% "
+    f"BRAM power saving vs nominal, zero uncorrected faults)"
+)

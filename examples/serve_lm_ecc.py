@@ -1,0 +1,64 @@
+"""Serve a small LM with batched requests under an undervolted, ECC-protected
+weight memory — the paper's technique as a first-class serving feature.
+
+* Weights are int8-quantized, packed to BRAM word geometry, SECDED-encoded
+  (`inline` mode: every matmul runs the fused Pallas decode read path).
+* The engine scrubs fault telemetry between rounds and the DED-canary
+  controller walks the rail down until the first detected-uncorrectable
+  event (paper §III/IV runtime undervolting).
+* Output-token agreement vs the clean model + modeled power are reported at
+  each voltage.
+
+Run: PYTHONPATH=src python examples/serve_lm_ecc.py
+"""
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving.engine import ReliabilityConfig, ServingEngine
+
+import jax
+
+
+def main():
+    cfg = get_smoke_config("qwen3-0.6b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(4, 8)).astype(np.int32)
+
+    clean = ServingEngine(cfg, params, rel=None, max_len=64)
+    ref_out = clean.generate(prompts, n_tokens=24)
+
+    print("batched generation under undervolting (inline SECDED weights):")
+    print(f"{'V':>5} | {'agree':>6} | {'corrected':>9} | {'detected':>8} | {'power W':>8}")
+    for v in (1.0, 0.58, 0.56, 0.54):
+        eng = ServingEngine(
+            cfg, params,
+            rel=ReliabilityConfig(platform="vc707", ecc=True, voltage=v, mode="inline"),
+            max_len=64,
+        )
+        out = eng.generate(prompts, n_tokens=24)
+        agree = float((out == ref_out).mean())
+        s = eng.stats
+        print(f"{v:5.2f} | {100 * agree:5.1f}% | {s.corrected:9d} | {s.detected:8d} "
+              f"| {eng.power_w():8.2f}")
+
+    # Runtime undervolting: find the minimum safe voltage via the DED canary.
+    eng = ServingEngine(
+        cfg, params,
+        rel=ReliabilityConfig(platform="vc707", ecc=True, voltage=1.0, mode="inline"),
+        max_len=64,
+    )
+    v_safe, history = eng.autotune_voltage()
+    out = eng.generate(prompts, n_tokens=24)
+    agree = float((out == ref_out).mean())
+    print(
+        f"\nDED-canary controller locked at {v_safe:.2f} V after {len(history)} rounds; "
+        f"token agreement at locked voltage: {100 * agree:.1f}%; "
+        f"accelerator power {eng.power_w():.2f} W (nominal {ServingEngine(cfg, params, rel=ReliabilityConfig(voltage=1.0)).power_w():.2f} W)"
+    )
+
+
+if __name__ == "__main__":
+    main()

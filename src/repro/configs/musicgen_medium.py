@@ -1,0 +1,31 @@
+"""Architecture config: musicgen-medium [audio] — decoder-only over EnCodec tokens (frontend stub)
+
+[arXiv:2306.05284; hf]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    """Exact published configuration (dry-run / full-scale)."""
+    return ModelConfig(
+    name="musicgen-medium", family="audio",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab=2048, n_codebooks=4,
+    norm_type="layernorm", gated_mlp=False, mlp_act="gelu",
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+)
+
+
+def smoke_config() -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    return dataclasses.replace(
+    config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab=64, param_dtype=jnp.float32, compute_dtype=jnp.float32,
+)

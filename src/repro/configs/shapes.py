@@ -1,0 +1,104 @@
+"""Assigned input-shape sets and ShapeDtypeStruct builders for the dry-run.
+
+Every LM-family arch is paired with four shapes:
+  train_4k    seq 4096,   global_batch 256  -> train_step
+  prefill_32k seq 32768,  global_batch 32   -> prefill_step
+  decode_32k  seq 32768 (KV), global_batch 128 -> serve_step (1 new token)
+  long_500k   seq 524288 (KV), global_batch 1  -> serve_step; sub-quadratic
+              archs only (rwkv6 SSM, mixtral SWA, jamba hybrid) — skips are
+              recorded in DESIGN.md §Arch-applicability.
+
+`input_specs` returns ShapeDtypeStructs only: the dry-run never allocates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# Sub-quadratic bar for long_500k: SSM / SWA / hybrid only.
+LONG_CONTEXT_ARCHS = {"rwkv6-3b", "mixtral-8x22b", "jamba-1.5-large-398b"}
+
+
+def supported_shapes(arch: str) -> list[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_ARCHS:
+        names.append("long_500k")
+    return names
+
+
+def _tok_struct(cfg: ModelConfig, b: int, s: int):
+    if cfg.n_codebooks:
+        return jax.ShapeDtypeStruct((b, cfg.n_codebooks, s), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *, batch_override: int = 0):
+    """ShapeDtypeStruct stand-ins for every input of the step function."""
+    sh = SHAPES[shape_name]
+    b = batch_override or sh.global_batch
+    s = sh.seq_len
+
+    if sh.kind == "train":
+        specs = {
+            "tokens": _tok_struct(cfg, b, s),
+            "labels": _tok_struct(cfg, b, s),
+        }
+        if cfg.family == "vlm":
+            specs["img"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), cfg.compute_dtype
+            )
+        return specs
+
+    if sh.kind == "prefill":
+        specs = {
+            "tokens": _tok_struct(cfg, b, s),
+            "cache": cache_struct(cfg, b, s),
+        }
+        if cfg.family == "vlm":
+            specs["img"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), cfg.compute_dtype
+            )
+        return specs
+
+    # decode: one new token against a seq_len-deep cache/state
+    specs = {
+        "tokens": _tok_struct(cfg, b, 1),
+        "cache": cache_struct(cfg, b, s),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["img"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_img_tokens, cfg.d_model), cfg.compute_dtype
+        )
+    return specs
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree of the decode cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: lm.init_cache(
+            cfg, batch, max_len, img_tokens=cfg.n_img_tokens
+        )
+    )

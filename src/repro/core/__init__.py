@@ -1,0 +1,24 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+Built-in-ECC-under-undervolting for ML memory systems:
+  * `hsiao` / `ecc`    — Hsiao(72,64) SECDED code (Xilinx BRAM geometry)
+  * `voltage`          — calibrated fault-rate + power models (VC707/KC705-A/B)
+  * `faultsim`         — per-bitcell failure-threshold field (FIP by construction)
+  * `memory`           — EccMemoryDomain: SECDED-protected array storage
+  * `controller`       — DED-canary runtime undervolting controller
+  * `telemetry`        — CORRECTED / DETECTED / SILENT fault accounting
+  * `quantize`         — int8 + 64-bit word packing (BRAM word geometry)
+"""
+
+from repro.core import controller, ecc, faultsim, hsiao, memory, quantize, telemetry, voltage
+from repro.core.controller import UndervoltController
+from repro.core.faultsim import FaultField, FlipMasks
+from repro.core.memory import EccMemoryDomain
+from repro.core.telemetry import FaultStats
+from repro.core.voltage import PLATFORMS, PlatformProfile
+
+__all__ = [
+    "controller", "ecc", "faultsim", "hsiao", "memory", "quantize",
+    "telemetry", "voltage", "UndervoltController", "FaultField", "FlipMasks",
+    "EccMemoryDomain", "FaultStats", "PLATFORMS", "PlatformProfile",
+]

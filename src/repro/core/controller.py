@@ -1,0 +1,73 @@
+"""Application-aware runtime undervolting controller (paper §III.A / §IV).
+
+The paper's key enabler: because of FIP, *correctable* faults always manifest
+before *detectable* faults, which manifest before *undetectable* faults. The
+DED (detected-but-uncorrectable) flag of the built-in ECC is therefore a safe
+canary: keep lowering the rail while reads are clean-or-corrected; on the
+first DED event, back off one step and lock. Silent-risk events (which the
+hardware cannot see — we track them in simulation as ground truth) are also
+treated as trip events when `paranoid=True`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.telemetry import FaultStats
+from repro.core.voltage import PlatformProfile
+
+
+@dataclasses.dataclass
+class ControllerRecord:
+    voltage: float
+    corrected: int
+    detected: int
+    silent: int
+    action: str
+
+
+class UndervoltController:
+    """DED-canary voltage search: V_nom -> first-DED, then back off + lock."""
+
+    def __init__(
+        self,
+        platform: PlatformProfile,
+        step_v: float = 0.01,
+        backoff_steps: int = 1,
+        paranoid: bool = False,
+    ):
+        self.platform = platform
+        self.step_v = step_v
+        self.backoff_steps = backoff_steps
+        self.paranoid = paranoid
+        self.voltage = platform.v_nom
+        self.locked = False
+        self.history: list[ControllerRecord] = []
+
+    def update(self, stats: FaultStats) -> float:
+        """Feed one read-interval's telemetry; returns the next rail voltage."""
+        trip = stats.detected > 0 or (self.paranoid and stats.silent > 0)
+        if self.locked:
+            action = "hold"
+        elif trip:
+            self.voltage = min(
+                self.platform.v_nom,
+                self.voltage + self.backoff_steps * self.step_v,
+            )
+            self.locked = True
+            action = "trip+backoff"
+        else:
+            nxt = self.voltage - self.step_v
+            if nxt < self.platform.v_crash:
+                # Never cross the crash rail; lock at the last operable point.
+                self.locked = True
+                action = "floor"
+            else:
+                self.voltage = nxt
+                action = "lower"
+        self.history.append(
+            ControllerRecord(
+                self.voltage, stats.corrected, stats.detected, stats.silent, action
+            )
+        )
+        return self.voltage

@@ -1,0 +1,103 @@
+"""Pure-JAX Hsiao(72,64) SECDED encode / decode.
+
+Codeword layout (TPU-friendly — no 72-bit scalar type exists):
+  data  : (..., 2) uint32   -- [lo, hi] little-endian 64-bit word
+  parity: (...,)   uint8    -- 8 check bits, stored in a parallel plane
+
+These functions are the *oracle* implementations; `repro.kernels.secded_*`
+provides the Pallas TPU kernels that must match them bit-exactly.
+
+Status codes (see also `repro.core.telemetry`):
+  0 = CLEAN      syndrome zero
+  1 = CORRECTED  single-bit (data or parity) error corrected
+  2 = DETECTED   uncorrectable error flagged (double-bit class)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hsiao
+
+STATUS_CLEAN = 0
+STATUS_CORRECTED = 1
+STATUS_DETECTED = 2
+
+_MASK_LO = jnp.asarray(hsiao.MASK_LO)  # (8,) uint32
+_MASK_HI = jnp.asarray(hsiao.MASK_HI)  # (8,) uint32
+_LUT = jnp.asarray(hsiao.SYNDROME_LUT)  # (256,) int32
+
+
+def parity32(v: jnp.ndarray) -> jnp.ndarray:
+    """Bitwise parity of each uint32 lane (XOR-fold), returns uint32 in {0,1}."""
+    v = v ^ (v >> 16)
+    v = v ^ (v >> 8)
+    v = v ^ (v >> 4)
+    v = v ^ (v >> 2)
+    v = v ^ (v >> 1)
+    return v & jnp.uint32(1)
+
+
+def encode(lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """Compute the 8 parity bits for 64-bit words given as two uint32 lanes.
+
+    lo, hi: (...,) uint32.  Returns parity (...,) uint8.
+    """
+    lo = lo[..., None]  # (..., 1) broadcast against (8,) masks
+    hi = hi[..., None]
+    bits = parity32(lo & _MASK_LO) ^ parity32(hi & _MASK_HI)  # (..., 8)
+    weights = jnp.asarray([1 << r for r in range(8)], dtype=jnp.uint32)
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+
+
+def syndrome(lo: jnp.ndarray, hi: jnp.ndarray, parity: jnp.ndarray) -> jnp.ndarray:
+    """Syndrome = recomputed parity XOR stored parity. (...,) uint8."""
+    return encode(lo, hi) ^ parity
+
+
+def decode(lo: jnp.ndarray, hi: jnp.ndarray, parity: jnp.ndarray):
+    """SECDED decode.
+
+    Returns (lo', hi', status) where status is int32 in {0,1,2} per word.
+    Single-bit data errors are corrected in (lo', hi'); parity-bit errors are
+    treated as corrected (data passes through untouched).
+    """
+    s = syndrome(lo, hi, parity).astype(jnp.int32)
+    action = jnp.take(_LUT, s)  # -1 clean, -2 detect, 0..63 data bit, 64..71 parity bit
+
+    is_clean = action == hsiao.LUT_CLEAN
+    is_detect = action == hsiao.LUT_DETECT
+    is_databit = (action >= 0) & (action < 64)
+
+    bitidx = jnp.clip(action, 0, 63).astype(jnp.uint32)
+    flip_lo = jnp.where(
+        is_databit & (bitidx < 32), jnp.uint32(1) << (bitidx & 31), jnp.uint32(0)
+    )
+    flip_hi = jnp.where(
+        is_databit & (bitidx >= 32), jnp.uint32(1) << (bitidx & 31), jnp.uint32(0)
+    )
+    status = jnp.where(
+        is_clean,
+        jnp.int32(STATUS_CLEAN),
+        jnp.where(is_detect, jnp.int32(STATUS_DETECTED), jnp.int32(STATUS_CORRECTED)),
+    )
+    return lo ^ flip_lo, hi ^ flip_hi, status
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) reference used by tests for exhaustive bit-level checks.
+# ---------------------------------------------------------------------------
+def encode_np(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    def par32(v):
+        v = v ^ (v >> 16)
+        v = v ^ (v >> 8)
+        v = v ^ (v >> 4)
+        v = v ^ (v >> 2)
+        v = v ^ (v >> 1)
+        return v & np.uint32(1)
+
+    lo = np.asarray(lo, np.uint32)[..., None]
+    hi = np.asarray(hi, np.uint32)[..., None]
+    bits = par32(lo & hsiao.MASK_LO) ^ par32(hi & hsiao.MASK_HI)
+    return (bits << np.arange(8, dtype=np.uint32)).sum(-1).astype(np.uint8)

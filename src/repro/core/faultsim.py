@@ -1,0 +1,146 @@
+"""Deterministic per-bitcell failure-threshold field (undervolting fault model).
+
+Model (DESIGN.md §8): every bitcell *i* of a word-plane memory has a latent
+uniform draw ``u_i`` (counter-based PRNG keyed by (seed, word-chunk, bitplane))
+and every word (the paper's BRAM *row*) has a lognormal weakness factor
+``f_w`` (E[f]=1). At rail voltage V the cell is faulty iff
+
+    u_i < clip(rate(V) * f_w, 0, P_MAX)
+
+Because ``rate(V)`` is monotone-decreasing in V and ``u_i`` is fixed, the
+faulty set at V' < V is a superset of the faulty set at V — the paper's Fault
+Inclusion Property (FIP) holds *by construction* and is property-tested.
+
+The lognormal row weakness reproduces the paper's observed fault clustering:
+uniform sparsity alone would make only ~2% of faulty words double-bit at
+V_crash, whereas the paper measures ~7% detectable (double-bit) faults; with
+row_sigma≈1.1 the model lands in the measured band (see tests/test_faultsim.py).
+
+Fault semantics are read-time bit flips (XOR), so the observed-fault-rate
+calibration against the paper's counters is exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.voltage import PlatformProfile
+
+P_MAX = 0.5  # per-bit fault probability ceiling (clip for extreme weak rows)
+N_BITPLANES = 72  # 64 data + 8 parity
+
+
+@dataclasses.dataclass(frozen=True)
+class FlipMasks:
+    """Read-time XOR masks for a (n_words,) memory at one voltage."""
+
+    lo: np.ndarray  # (n,) uint32 — flips in data bits 0..31
+    hi: np.ndarray  # (n,) uint32 — flips in data bits 32..63
+    parity: np.ndarray  # (n,) uint8 — flips in the 8 parity bits
+
+    @property
+    def n_words(self) -> int:
+        return self.lo.shape[0]
+
+    def flip_counts(self) -> np.ndarray:
+        """Ground-truth number of flipped bits per 72-bit codeword."""
+        cnt = _popcount32(self.lo) + _popcount32(self.hi)
+        return (cnt + _popcount32(self.parity.astype(np.uint32))).astype(np.int32)
+
+    def total_flips(self) -> int:
+        return int(self.flip_counts().sum())
+
+
+def _popcount32(v: np.ndarray) -> np.ndarray:
+    v = v.astype(np.uint32).copy()
+    v = v - ((v >> 1) & np.uint32(0x55555555))
+    v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
+    v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
+    return ((v * np.uint32(0x01010101)) >> 24).astype(np.int64)
+
+
+class FaultField:
+    """Failure-threshold field over ``n_words`` 72-bit codewords.
+
+    Deterministic in (platform, seed): repeated calls, any voltage order, and
+    any chunking produce identical masks. Generation is chunked so peak host
+    memory stays ~``72 * chunk_words * 4`` bytes.
+    """
+
+    def __init__(
+        self,
+        platform: PlatformProfile,
+        n_words: int,
+        seed: int = 0,
+        chunk_words: int = 1 << 18,
+    ):
+        self.platform = platform
+        self.n_words = int(n_words)
+        self.seed = int(seed)
+        self.chunk_words = int(chunk_words)
+
+    # -- internals ----------------------------------------------------------
+    def _chunk_rng(self, chunk_idx: int) -> np.random.Generator:
+        return np.random.Generator(
+            np.random.Philox(key=(self.seed ^ (0xECC << 32), chunk_idx))
+        )
+
+    def _chunk_row_factor(self, rng: np.random.Generator, m: int) -> np.ndarray:
+        sigma = self.platform.row_sigma
+        z = rng.standard_normal(m, dtype=np.float32)
+        return np.exp(sigma * z - 0.5 * sigma * sigma)
+
+    def _chunk_masks(self, chunk_idx: int, m: int, rate: float):
+        rng = self._chunk_rng(chunk_idx)
+        f_row = self._chunk_row_factor(rng, m)
+        # NOTE: u is drawn *after* f_row from the same counter stream; both are
+        # voltage-independent, so FIP is preserved.
+        u = rng.random((N_BITPLANES, m), dtype=np.float32)
+        p_word = np.clip(rate * f_row, 0.0, P_MAX)[None, :]  # (1, m)
+        bits = u < p_word  # (72, m) bool
+        lo = np.zeros(m, np.uint32)
+        hi = np.zeros(m, np.uint32)
+        par = np.zeros(m, np.uint8)
+        for b in range(32):
+            lo |= bits[b].astype(np.uint32) << np.uint32(b)
+        for b in range(32):
+            hi |= bits[32 + b].astype(np.uint32) << np.uint32(b)
+        for b in range(8):
+            par |= bits[64 + b].astype(np.uint8) << np.uint8(b)
+        return lo, hi, par
+
+    # -- public -------------------------------------------------------------
+    def masks(self, v: float) -> FlipMasks:
+        """XOR flip masks for the whole memory at rail voltage ``v``."""
+        rate = self.platform.fault_rate(v)
+        los, his, pars = [], [], []
+        for ci, start in enumerate(range(0, self.n_words, self.chunk_words)):
+            m = min(self.chunk_words, self.n_words - start)
+            lo, hi, par = self._chunk_masks(ci, m, rate)
+            los.append(lo)
+            his.append(hi)
+            pars.append(par)
+        if not los:  # zero-sized memory
+            z32 = np.zeros(0, np.uint32)
+            return FlipMasks(z32, z32, np.zeros(0, np.uint8))
+        return FlipMasks(np.concatenate(los), np.concatenate(his), np.concatenate(pars))
+
+    def sweep_histogram(self, voltages) -> list[dict]:
+        """Per-voltage fault statistics (paper Fig. 1 / Fig. 2b machinery)."""
+        out = []
+        for v in voltages:
+            mk = self.masks(v)
+            counts = mk.flip_counts()
+            out.append(
+                {
+                    "voltage": float(v),
+                    "faulty_bits": int(counts.sum()),
+                    "faults_per_mbit": counts.sum() / (self.n_words * 72 / (1024 * 1024)),
+                    "words_1bit": int((counts == 1).sum()),
+                    "words_2bit": int((counts == 2).sum()),
+                    "words_multi": int((counts >= 3).sum()),
+                }
+            )
+        return out

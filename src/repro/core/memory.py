@@ -1,0 +1,155 @@
+"""EccMemoryDomain — software-defined "BRAM" voltage/reliability domain.
+
+Arrays written into the domain are stored bit-exact as SECDED(72,64)-encoded
+word planes (two uint32 data lanes + one uint8 parity plane). Reads happen at
+the domain's current rail voltage: the fault field's XOR masks are applied to
+*all three planes* (parity bits undervolt too, like the real BRAM), then the
+ECC decoder corrects/flags per word and telemetry is collected.
+
+The decode path itself is functional JAX (jit-able); mask generation is
+host-side numpy at voltage-set time, mirroring the physical reality that the
+fault pattern is a property of the silicon + rail, not of the computation.
+
+`read()` is the reference path used by benchmarks/examples; the serving stack
+uses the same planes with the fused Pallas read path (`kernels/ecc_matmul`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ecc, quantize
+from repro.core.faultsim import FaultField, FlipMasks
+from repro.core.telemetry import FaultStats
+from repro.core.voltage import PLATFORMS, PlatformProfile
+
+
+@dataclasses.dataclass
+class EncodedArray:
+    """One array stored in the domain (host-resident planes + metadata)."""
+
+    lo: np.ndarray  # (n,) uint32
+    hi: np.ndarray  # (n,) uint32
+    parity: np.ndarray  # (n,) uint8
+    nbytes: int
+    shape: tuple
+    dtype: Any
+    field: FaultField
+
+    @property
+    def n_words(self) -> int:
+        return self.lo.shape[0]
+
+
+def _encode_planes(arr: np.ndarray):
+    lo, hi, nbytes = quantize.array_to_words_np(arr)
+    parity = np.asarray(ecc.encode_np(lo, hi))
+    return lo, hi, parity, nbytes
+
+
+class EccMemoryDomain:
+    """A named collection of SECDED-protected arrays under one voltage rail."""
+
+    def __init__(
+        self,
+        platform: str | PlatformProfile = "vc707",
+        seed: int = 0,
+        ecc_enabled: bool = True,
+        voltage: float | None = None,
+    ):
+        self.platform = (
+            PLATFORMS[platform] if isinstance(platform, str) else platform
+        )
+        self.seed = seed
+        self.ecc_enabled = ecc_enabled
+        self.voltage = self.platform.v_nom if voltage is None else voltage
+        self._store: dict[str, EncodedArray] = {}
+        self.stats = FaultStats()
+
+    # -- rail control --------------------------------------------------------
+    def set_voltage(self, v: float) -> None:
+        if v < self.platform.v_crash:
+            raise RuntimeError(
+                f"rail collapsed: {v:.3f} V < V_crash={self.platform.v_crash} V"
+            )
+        self.voltage = float(v)
+
+    # -- storage --------------------------------------------------------------
+    def write(self, name: str, arr) -> None:
+        arr = np.asarray(arr)
+        lo, hi, parity, nbytes = _encode_planes(arr)
+        # Per-array fault field, deterministic in (domain seed, array name).
+        fseed = (self.seed * 0x9E3779B1 + zlib.crc32(name.encode())) & 0x7FFFFFFF
+        field = FaultField(self.platform, lo.shape[0], seed=fseed)
+        self._store[name] = EncodedArray(
+            lo, hi, parity, nbytes, tuple(arr.shape), arr.dtype, field
+        )
+
+    def write_pytree(self, prefix: str, tree) -> None:
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        for path, leaf in flat:
+            self.write(prefix + jax.tree_util.keystr(path), leaf)
+
+    def names(self):
+        return list(self._store)
+
+    def entry(self, name: str) -> EncodedArray:
+        return self._store[name]
+
+    # -- read path -------------------------------------------------------------
+    def read(self, name: str, voltage: float | None = None, collect_stats: bool = True):
+        """Read one array at the rail voltage. Returns (array, FaultStats)."""
+        e = self._store[name]
+        v = self.voltage if voltage is None else voltage
+        masks = e.field.masks(v)
+        arr, stats = decode_read(
+            e, masks, ecc_enabled=self.ecc_enabled, collect_stats=collect_stats
+        )
+        if collect_stats:
+            self.stats.merge(stats)
+        return arr, stats
+
+    def read_pytree(self, prefix: str, tree_like, voltage: float | None = None):
+        """Read a whole pytree (written with write_pytree). Returns (tree, stats)."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        out, agg = [], FaultStats()
+        for path, _ in flat:
+            arr, stats = self.read(prefix + jax.tree_util.keystr(path), voltage)
+            out.append(arr)
+            agg.merge(stats)
+        return jax.tree_util.tree_unflatten(treedef, out), agg
+
+
+def decode_read(
+    e: EncodedArray,
+    masks: FlipMasks,
+    ecc_enabled: bool = True,
+    collect_stats: bool = True,
+):
+    """Functional fault-inject + SECDED-decode read of one EncodedArray."""
+    lo = jnp.asarray(e.lo) ^ jnp.asarray(masks.lo)
+    hi = jnp.asarray(e.hi) ^ jnp.asarray(masks.hi)
+    parity = jnp.asarray(e.parity) ^ jnp.asarray(masks.parity)
+    if ecc_enabled:
+        lo, hi, status = ecc.decode(lo, hi, parity)
+    else:
+        status = jnp.zeros(lo.shape, jnp.int32)
+    arr = quantize.words_to_array(lo, hi, e.nbytes, e.shape, e.dtype)
+    stats = (
+        FaultStats.from_decode(np.asarray(status), masks.flip_counts())
+        if collect_stats and ecc_enabled
+        else FaultStats(
+            words=e.n_words,
+            words_1bit=int((masks.flip_counts() == 1).sum()),
+            words_2bit=int((masks.flip_counts() == 2).sum()),
+            words_multi=int((masks.flip_counts() >= 3).sum()),
+            faulty_bits=masks.total_flips(),
+        )
+    )
+    return arr, stats

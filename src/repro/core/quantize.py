@@ -1,0 +1,82 @@
+"""Int8 symmetric quantization + 64-bit word packing.
+
+The paper's NN accelerator keeps fixed-point weights in BRAM; we keep int8
+weights in the ECC memory domain: 8 int8 values form one 64-bit codeword
+(two uint32 lanes), matching the Xilinx ECC word geometry exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize(x: jnp.ndarray, axis: int | None = None):
+    """Symmetric int8 quantization. Returns (q_int8, scale_float32).
+
+    ``axis`` selects a per-slice scale (e.g. per output channel); None means
+    one scale for the whole tensor.
+    """
+    absmax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
+        jnp.abs(x), axis=tuple(i for i in range(x.ndim) if i != axis), keepdims=True
+    )
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def pack_int8_to_words(q: jnp.ndarray):
+    """Pack int8 values into 64-bit words: returns (lo, hi) uint32 of shape
+    (ceil(q.size/8),). Pads with zeros to a multiple of 8."""
+    flat = q.reshape(-1)
+    pad = (-flat.size) % 8
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.int8)])
+    words = jax.lax.bitcast_convert_type(flat.reshape(-1, 2, 4), jnp.uint32)  # (n, 2)
+    return words[:, 0], words[:, 1]
+
+
+def unpack_words_to_int8(lo: jnp.ndarray, hi: jnp.ndarray, size: int) -> jnp.ndarray:
+    """Inverse of pack_int8_to_words; returns int8 (size,)."""
+    words = jnp.stack([lo, hi], axis=-1)  # (n, 2)
+    q = jax.lax.bitcast_convert_type(words, jnp.int8).reshape(-1)  # (n*8,)
+    return q[:size]
+
+
+# ---------------------------------------------------------------------------
+# Raw-bit packing for arbitrary dtypes (float32/bf16/int32/...): the memory
+# domain stores exact bits, dtype-agnostic.
+# ---------------------------------------------------------------------------
+def array_to_words_np(arr: np.ndarray):
+    """Host-side: arbitrary array -> (lo, hi) uint32 word planes + byte count."""
+    raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+    nbytes = raw.size
+    pad = (-nbytes) % 8
+    if pad:
+        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+    words = raw.view(np.uint32).reshape(-1, 2)
+    return np.ascontiguousarray(words[:, 0]), np.ascontiguousarray(words[:, 1]), nbytes
+
+
+def words_to_array(lo: jnp.ndarray, hi: jnp.ndarray, nbytes: int, shape, dtype):
+    """JAX-side: word planes -> array of the original shape/dtype (bit-exact)."""
+    itemsize = np.dtype(dtype).itemsize
+    if itemsize == 8:
+        # 64-bit dtypes need x64 mode for a jax bitcast; reconstruct host-side
+        # (bit-exactness is what matters for the memory domain).
+        raw = np.stack([np.asarray(lo), np.asarray(hi)], axis=-1)
+        raw = raw.astype(np.uint32).view(np.uint8).reshape(-1)[:nbytes]
+        # returned as numpy: jnp.asarray would silently downcast f64 -> f32
+        return raw.view(dtype).reshape(shape)
+    words = jnp.stack([lo, hi], axis=-1)  # (n, 2)
+    raw = jax.lax.bitcast_convert_type(words, jnp.uint8).reshape(-1)[:nbytes]
+    if itemsize == 1:
+        out = jax.lax.bitcast_convert_type(raw, dtype)
+    else:
+        out = jax.lax.bitcast_convert_type(raw.reshape(-1, itemsize), dtype)
+    return out.reshape(shape)

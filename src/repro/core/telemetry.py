@@ -1,0 +1,65 @@
+"""Fault telemetry: ECC outcomes vs. ground truth (paper Fig. 1/2 counters)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import ecc
+
+
+@dataclasses.dataclass
+class FaultStats:
+    """Aggregated per-read fault statistics for one memory domain."""
+
+    words: int = 0
+    clean: int = 0  # syndrome 0, no ground-truth flips
+    corrected: int = 0  # ECC corrected a genuine single-bit fault
+    detected: int = 0  # ECC raised the uncorrectable (DED) flag
+    silent: int = 0  # >=2 flips that ECC mis-corrected or aliased to clean
+    # ground-truth fault classes (paper's correctable/detectable/undetectable)
+    words_1bit: int = 0
+    words_2bit: int = 0
+    words_multi: int = 0
+    faulty_bits: int = 0
+
+    def merge(self, other: "FaultStats") -> "FaultStats":
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+    @property
+    def faulty_words(self) -> int:
+        return self.words_1bit + self.words_2bit + self.words_multi
+
+    def coverage(self) -> dict:
+        """Fractions of faulty words by ECC outcome (paper's >90% / 7% split)."""
+        n = max(self.faulty_words, 1)
+        return {
+            "correctable": self.corrected / n,
+            "detectable": self.detected / n,
+            "silent": self.silent / n,
+        }
+
+    @classmethod
+    def from_decode(cls, status: np.ndarray, flip_counts: np.ndarray) -> "FaultStats":
+        """Build stats from per-word ECC status codes + ground-truth flip counts."""
+        status = np.asarray(status).reshape(-1)
+        flips = np.asarray(flip_counts).reshape(-1)
+        corrected_true = (status == ecc.STATUS_CORRECTED) & (flips == 1)
+        detected = status == ecc.STATUS_DETECTED
+        silent = (flips >= 2) & ~detected
+        # A 1-flip word always syndromes to its column => corrected; a 0-flip
+        # word always syndromes to 0 => clean. Anything else is silent risk.
+        return cls(
+            words=int(status.size),
+            clean=int(((status == ecc.STATUS_CLEAN) & (flips == 0)).sum()),
+            corrected=int(corrected_true.sum()),
+            detected=int(detected.sum()),
+            silent=int(silent.sum()),
+            words_1bit=int((flips == 1).sum()),
+            words_2bit=int((flips == 2).sum()),
+            words_multi=int((flips >= 3).sum()),
+            faulty_bits=int(flips.sum()),
+        )

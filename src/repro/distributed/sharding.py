@@ -1,0 +1,192 @@
+"""Logical-axis -> mesh sharding rules (DP / FSDP / TP / EP / SP).
+
+Parameters carry logical axes from the model spec tree; this module maps them
+onto the production mesh with automatic legality fallbacks:
+
+  * "vocab" / "heads" / "ffn" / "experts" -> "model"  (TP / EP)
+  * "embed"        -> batch super-axis ("pod","data") when FSDP is enabled
+  * "layers"/None  -> replicated
+
+One mesh axis is never used twice in a spec; non-divisible dims fall back to
+replication (e.g. mixtral's 8 experts on a 16-way model axis fall back to
+TP-on-ffn, which is the right call anyway). Decode KV caches are sharded over
+the *sequence* axis on "model" (flash-decoding: softmax reductions over the
+sharded axis lower to tiny all-reduces), and over every axis for the B=1
+long-context cells.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import lm
+from repro.models.base import ModelConfig, Spec
+
+TP_AXES = ("vocab", "heads", "ffn", "experts")
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+
+
+def _axes_size(mesh: Mesh, axes: tuple) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def spec_for(logical: tuple, shape: tuple, mesh: Mesh, fsdp: bool) -> P:
+    used: set = set()
+    parts = []
+    for ax, dim in zip(logical, shape):
+        target: tuple = ()
+        granularity = 0  # extra unit-count constraint (head-granular TP)
+        if ax is not None and ax.startswith("heads:"):
+            target = ("model",)
+            granularity = int(ax.split(":")[1])
+        elif ax in TP_AXES:
+            target = ("model",)
+        elif ax == "embed" and fsdp:
+            target = batch_axes(mesh)
+        size = _axes_size(mesh, target) if target else 1
+        ok = (
+            target
+            and not (set(target) & used)
+            and dim % size == 0
+            and (granularity == 0 or granularity % size == 0)
+        )
+        if ok:
+            used.update(target)
+            parts.append(target[0] if len(target) == 1 else tuple(target))
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, fsdp: bool):
+    """NamedSharding tree matching lm.param_struct(cfg)."""
+    specs = lm.init_specs(cfg)
+
+    def one(s: Spec):
+        return NamedSharding(mesh, spec_for(s.axes, s.shape, mesh, fsdp))
+
+    return jax.tree_util.tree_map(one, specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def spec_fsdp_only(logical: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Pure ZeRO-3: no tensor parallelism — shard the largest weight dim over
+    ALL mesh axes combined (weights gathered per layer, zero activation
+    all-reduces). The §Perf alternative for small-activation-heavy models."""
+    all_axes = tuple(mesh.axis_names)
+    size = _axes_size(mesh, all_axes)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    parts: list = [None] * len(shape)
+    for i in order:
+        if logical[i] != "layers" and shape[i] % size == 0:
+            parts[i] = all_axes if len(all_axes) > 1 else all_axes[0]
+            break
+    return P(*parts)
+
+
+def param_shardings_fsdp_only(cfg: ModelConfig, mesh: Mesh):
+    specs = lm.init_specs(cfg)
+
+    def one(s: Spec):
+        return NamedSharding(mesh, spec_fsdp_only(s.axes, s.shape, mesh))
+
+    return jax.tree_util.tree_map(one, specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def data_sharding_all_axes(mesh: Mesh, global_batch: int):
+    """Batch sharded over every mesh axis (pure-DP/FSDP regime)."""
+    axes = tuple(mesh.axis_names)
+    if global_batch % _axes_size(mesh, axes) == 0:
+        return NamedSharding(mesh, P(axes))
+    return data_sharding(mesh, global_batch)
+
+
+def data_sharding(mesh: Mesh, global_batch: int):
+    """Sharding for (B, ...) batch arrays; replicate if B doesn't divide."""
+    ba = batch_axes(mesh)
+    if ba and global_batch % _axes_size(mesh, ba) == 0:
+        return NamedSharding(mesh, P(ba if len(ba) > 1 else ba[0]))
+    return NamedSharding(mesh, P())
+
+
+def batch_shardings(mesh: Mesh, batch_struct):
+    """Apply data_sharding to every leaf of a {tokens, labels, img} batch."""
+
+    def one(leaf):
+        return data_sharding(mesh, leaf.shape[0])
+
+    return jax.tree_util.tree_map(one, batch_struct)
+
+
+def _seq_axes(mesh: Mesh, b: int, s: int):
+    """Axes for the KV sequence dim: 'model' plus (if batch is unshardable)
+    the batch axes too — used by B=1 long-context decode."""
+    ba = batch_axes(mesh)
+    batch_ok = ba and b % _axes_size(mesh, ba) == 0
+    axes = ("model",) if batch_ok else tuple(ba) + ("model",)
+    if s % _axes_size(mesh, axes) == 0:
+        return axes, batch_ok
+    return (), batch_ok
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_struct):
+    """Sharding tree for the decode cache (see module docstring)."""
+    ba = batch_axes(mesh)
+    b_axis = ba if len(ba) > 1 else (ba[0] if ba else None)
+
+    def one(path, leaf):
+        key = jax.tree_util.keystr(path)
+        b = leaf.shape[1]
+        batch_ok = ba and b % _axes_size(mesh, ba) == 0
+        bspec = b_axis if batch_ok else None
+        if "kv_scale" in key:
+            s = leaf.shape[2]
+            seq_axes, _ = _seq_axes(mesh, b, s)
+            sspec = (
+                None if not seq_axes
+                else (seq_axes[0] if len(seq_axes) == 1 else tuple(seq_axes))
+            )
+            return NamedSharding(mesh, P(None, bspec, sspec, None, None))
+        if "'k'" in key or "'v'" in key:
+            s = leaf.shape[2]
+            seq_axes, _ = _seq_axes(mesh, b, s)
+            sspec = (
+                None
+                if not seq_axes
+                else (seq_axes[0] if len(seq_axes) == 1 else tuple(seq_axes))
+            )
+            return NamedSharding(mesh, P(None, bspec, sspec, None, None))
+        if "conv" in key:
+            return NamedSharding(
+                mesh,
+                P(None, bspec, None, "model" if leaf.shape[3] % mesh.shape["model"] == 0 else None),
+            )
+        if "ssm" in key:
+            return NamedSharding(
+                mesh,
+                P(None, bspec, "model" if leaf.shape[2] % mesh.shape["model"] == 0 else None, None),
+            )
+        if "shift" in key:
+            return NamedSharding(
+                mesh,
+                P(None, bspec, "model" if leaf.shape[2] % mesh.shape["model"] == 0 else None),
+            )
+        if "wkv" in key:
+            h = leaf.shape[2]
+            return NamedSharding(
+                mesh,
+                P(None, bspec, "model" if h % mesh.shape["model"] == 0 else None, None, None),
+            )
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

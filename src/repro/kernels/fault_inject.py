@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: read-time undervolting fault injection (XOR flip masks).
+
+Applies the fault field's flip masks to all three codeword planes in one
+streaming pass — the software analogue of the physical bit-error process on
+the BRAM read port. Pure elementwise XOR, memory-bound by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _inject_kernel(lo_ref, hi_ref, par_ref, mlo_ref, mhi_ref, mpar_ref,
+                   olo_ref, ohi_ref, opar_ref):
+    olo_ref[...] = lo_ref[...] ^ mlo_ref[...]
+    ohi_ref[...] = hi_ref[...] ^ mhi_ref[...]
+    opar_ref[...] = par_ref[...] ^ mpar_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def inject_2d(lo, hi, parity, mlo, mhi, mparity, *, block=(256, 512), interpret=False):
+    """XOR flip masks into 2D word planes. Shapes all (R, C)."""
+    bm, bn = block
+    grid = (pl.cdiv(lo.shape[0], bm), pl.cdiv(lo.shape[1], bn))
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _inject_kernel,
+        grid=grid,
+        in_specs=[spec] * 6,
+        out_specs=[spec] * 3,
+        out_shape=(
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint8),
+        ),
+        interpret=interpret,
+    )(lo, hi, parity, mlo, mhi, mparity)

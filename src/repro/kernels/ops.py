@@ -1,0 +1,177 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle arbitrary plane shapes (flatten/pad/reshape to lane-aligned 2D),
+choose interpret mode automatically off-TPU, and expose the weight-packing
+helpers used by the serving stack. `fuse=False` paths implement the *naive*
+ECC read (separate decode pass materialising corrected weights to HBM) used
+as the §Perf baseline against the fused kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ecc_matmul as _mm
+from repro.kernels import fault_inject as _fi
+from repro.kernels import ref as _ref
+from repro.kernels import secded as _secded
+
+LANES = 512  # default 2D width for flattened planes (multiple of 128)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_2d(*planes, lanes=LANES, block_rows=256):
+    """Flatten + zero-pad planes to a common (rows, lanes) 2D layout.
+
+    Rows are padded to a multiple of the kernel block so no grid step ever
+    touches out-of-bounds memory. Returns (planes_2d, n, block) with the
+    adapted (block_rows, lanes) block.
+    """
+    n = planes[0].size
+    rows = max(1, -(-n // lanes))
+    bm = min(block_rows, rows)
+    rows = _round_up(rows, bm)
+    pad = rows * lanes - n
+    out = []
+    for p in planes:
+        flat = p.reshape(-1)
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), p.dtype)])
+        out.append(flat.reshape(rows, lanes))
+    return out, n, (bm, lanes)
+
+
+def encode(lo: jnp.ndarray, hi: jnp.ndarray, *, interpret: bool | None = None):
+    """SECDED parity for word planes of any shape; returns uint8 like lo."""
+    interpret = use_interpret() if interpret is None else interpret
+    (lo2, hi2), n, block = _to_2d(lo, hi)
+    par = _secded.encode_2d(lo2, hi2, block=block, interpret=interpret)
+    return par.reshape(-1)[:n].reshape(lo.shape)
+
+
+def decode(lo, hi, parity, *, interpret: bool | None = None):
+    """SECDED decode for planes of any shape -> (lo', hi', status int32)."""
+    interpret = use_interpret() if interpret is None else interpret
+    (lo2, hi2, par2), n, block = _to_2d(lo, hi, parity)
+    olo, ohi, st = _secded.decode_2d(lo2, hi2, par2, block=block, interpret=interpret)
+    unpad = lambda a: a.reshape(-1)[:n].reshape(lo.shape)
+    return unpad(olo), unpad(ohi), unpad(st)
+
+
+def inject(lo, hi, parity, mlo, mhi, mparity, *, interpret: bool | None = None):
+    """Apply XOR flip masks to planes of any shape."""
+    interpret = use_interpret() if interpret is None else interpret
+    (a, b, c, d, e, f), n, block = _to_2d(lo, hi, parity, mlo, mhi, mparity)
+    olo, ohi, opar = _fi.inject_2d(a, b, c, d, e, f, block=block, interpret=interpret)
+    unpad = lambda x: x.reshape(-1)[:n].reshape(lo.shape)
+    return unpad(olo), unpad(ohi), unpad(opar)
+
+
+# ---------------------------------------------------------------------------
+# ECC-protected weights + fused matmul
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EccWeight:
+    """SECDED-encoded int8 weight matrix (K, N) as word planes (K/8, N)."""
+
+    lo: Any  # (K/8, N) uint32
+    hi: Any  # (K/8, N) uint32
+    parity: Any  # (K/8, N) uint8
+    scale: Any  # per-tensor () or per-column (N,) float32
+    k: int
+    n: int
+    fuse: bool = True  # fused Pallas read path vs naive decode-then-matmul
+
+    def tree_flatten(self):
+        return (self.lo, self.hi, self.parity, self.scale), (self.k, self.n, self.fuse)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def pack_ecc_weights(w: jnp.ndarray, axis_scale: int | None = 1, fuse: bool = True) -> EccWeight:
+    """Quantize a float (K, N) weight to int8 and SECDED-encode it."""
+    from repro.core import quantize as q
+
+    k, n = w.shape
+    assert k % 8 == 0, f"K={k} must be a multiple of 8 (64-bit codewords)"
+    qw, scale = q.quantize(w, axis=axis_scale)
+    lo, hi, parity = _ref.pack_ecc_weights_np(np.asarray(qw))
+    return EccWeight(
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(parity),
+        scale.reshape(-1) if axis_scale is not None else scale, k, n, fuse,
+    )
+
+
+def permute_k(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Activation permutation matching the codeword packing (free transpose)."""
+    k8 = k // 8
+    lead = x.shape[:-1]
+    return (
+        x.reshape(*lead, 8, k8).swapaxes(-1, -2).reshape(*lead, k)
+    )
+
+
+def ecc_matmul(
+    x: jnp.ndarray,
+    w: EccWeight,
+    *,
+    fuse: bool = True,
+    block=(128, 512, 256),
+    interpret: bool | None = None,
+):
+    """x @ decode(w) with ECC correction on the read path.
+
+    fuse=True : single-pass Pallas kernel (decode in VMEM, no extra HBM traffic)
+    fuse=False: naive baseline — full decode pass materialises corrected int8
+                weights to HBM, then a plain matmul re-reads them.
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, w.k)
+    if fuse:
+        xp = permute_k(x2, w.k)
+        m, k8, n = x2.shape[0], w.k // 8, w.n
+        # bk8 must divide K/8 exactly: the 8i+j interleave mapping is global,
+        # so the K dimension cannot be padded after packing.
+        bk8 = block[1] // 8
+        while k8 % bk8:
+            bk8 //= 2
+        # Pad M and N to block multiples (interpret-mode OOB reads are undefined).
+        bm = min(block[0], _round_up(m, 8))
+        bn = min(block[2], _round_up(n, 128))
+        mp, np_ = _round_up(m, bm), _round_up(n, bn)
+        xp = jnp.pad(xp, ((0, mp - m), (0, 0)))
+        pad_n = ((0, 0), (0, np_ - n))
+        out = _mm.ecc_matmul_2d(
+            jnp.pad(xp, ((0, 0), (0, 0))),
+            jnp.pad(w.lo, pad_n), jnp.pad(w.hi, pad_n), jnp.pad(w.parity, pad_n),
+            block=(bm, bk8 * 8, bn), interpret=interpret,
+        )[:m, :n]
+    else:
+        lo, hi, _ = decode(w.lo, w.hi, w.parity, interpret=interpret)
+        w_i8 = _ref.unpack_ecc_weights(lo, hi)  # materialised (K, N) int8
+        out = jnp.dot(x2.astype(jnp.float32), w_i8.astype(jnp.float32))
+    out = out * w.scale
+    return out.reshape(*lead, w.n)
+
+
+def scrub(w: EccWeight, *, interpret: bool | None = None):
+    """Telemetry pass (memory scrubber): decode all planes, return status."""
+    _, _, status = decode(w.lo, w.hi, w.parity, interpret=interpret)
+    return status

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact references)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ecc
+
+
+def encode_ref(lo, hi):
+    """(…,) uint32 planes -> (…,) uint8 parity."""
+    return ecc.encode(lo, hi)
+
+
+def decode_ref(lo, hi, parity):
+    """-> (lo', hi', status int32)."""
+    return ecc.decode(lo, hi, parity)
+
+
+def inject_ref(lo, hi, parity, mlo, mhi, mparity):
+    return lo ^ mlo, hi ^ mhi, parity ^ mparity
+
+
+def pack_ecc_weights_np(w_int8: np.ndarray):
+    """int8 (K, N), K % 8 == 0 -> (lo, hi) uint32 (K/8, N) + parity uint8.
+
+    Codeword i of column n packs W[j*K/8 + i, n] for j = 0..7.
+    """
+    k, n = w_int8.shape
+    assert k % 8 == 0, k
+    wr = (w_int8.reshape(8, k // 8, n).astype(np.int64) & 0xFF).astype(np.uint32)
+    lo = wr[0] | (wr[1] << 8) | (wr[2] << 16) | (wr[3] << 24)
+    hi = wr[4] | (wr[5] << 8) | (wr[6] << 16) | (wr[7] << 24)
+    parity = ecc.encode_np(lo, hi)
+    return lo, hi, parity
+
+
+def unpack_ecc_weights(lo, hi):
+    """Inverse packing: (K/8, N) planes -> (K, N) int8 (jnp)."""
+    planes = []
+    for word in (lo, hi):
+        for j in range(4):
+            planes.append((word >> jnp.uint32(8 * j)) & jnp.uint32(0xFF))
+    w = jnp.concatenate(planes, axis=0)  # (K, N), rows j-major: row j*K8 + i
+    return ((w.astype(jnp.int32) ^ 128) - 128).astype(jnp.int8)
+
+
+def ecc_matmul_ref(x, lo, hi, parity, scale=None):
+    """Oracle for the fused kernel: decode -> unpack -> dequant -> matmul.
+
+    x is the *unpermuted* (M, K) activation; planes are (K/8, N).
+    """
+    lo2, hi2, _ = ecc.decode(lo, hi, parity)
+    w = unpack_ecc_weights(lo2, hi2).astype(jnp.float32)  # (K, N)
+    out = jnp.dot(x.astype(jnp.float32), w)
+    if scale is not None:
+        out = out * scale
+    return out

@@ -1,0 +1,518 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16,16) and/or (2,16,16),
+  2. constructs ShapeDtypeStruct stand-ins for every step input (no
+     allocation anywhere — params included),
+  3. jit-lowers and compiles the step (train_step / prefill_step / serve_step),
+  4. records memory_analysis(), cost_analysis(), and collective link bytes
+     parsed from the optimized SPMD HLO,
+  5. derives the three roofline terms (TPU v5e constants) and appends the
+     record to benchmarks/out/dryrun.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+
+import argparse
+import json
+import math
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, input_specs, supported_shapes
+from repro.configs.shapes import SHAPES
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim import adamw
+from repro.serving import steps as serve_steps
+from repro.train import train_step as ts
+
+# TPU v5e roofline constants
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per link (ICI)
+
+FSDP_THRESHOLD = 6e9  # params above this are FSDP-sharded
+BF16_OPT_THRESHOLD = 60e9  # params above this use bf16 adam moments
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?P<sig>[^=]*?)\s*(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_link_bytes(hlo_text: str, n_devices: int = 256) -> dict:
+    """Per-device link-byte estimate per collective class, from optimized HLO.
+
+    Ring estimates from output size O and group size G:
+      all-reduce 2*O*(G-1)/G | all-gather O*(G-1)/G | reduce-scatter O*(G-1)
+      all-to-all O*(G-1)/G   | collective-permute O
+    """
+    per_op: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    comment_re = re.compile(r"/\*.*?\*/")
+    for line in hlo_text.splitlines():
+        # XLA prints /*index=N*/ markers inside long tuple types; the "="
+        # inside them breaks the signature capture — strip comments first.
+        line = comment_re.sub("", line)
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line:
+            continue
+        op = m.group("op")
+        out_bytes = _shape_bytes(m.group("sig"))
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        elif "replica_groups={}" in line:
+            g = n_devices  # empty group list = ALL devices participate
+        else:
+            gb = _GROUPS_BRACE_RE.search(line)
+            if gb:
+                g = len(gb.group(1).split(","))
+        if g <= 1:
+            continue
+        if op == "all-reduce":
+            b = 2 * out_bytes * (g - 1) / g
+        elif op == "all-gather":
+            b = out_bytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            b = out_bytes * (g - 1)
+        elif op == "all-to-all":
+            b = out_bytes * (g - 1) / g
+        else:  # collective-permute
+            b = out_bytes
+        per_op[op] = per_op.get(op, 0.0) + b
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes_per_device": per_op, "counts": counts,
+            "total_per_device": sum(per_op.values())}
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    total, active = lm.param_count(cfg)
+    sh = SHAPES[shape_name]
+    if sh.kind == "train":
+        return 6.0 * active * sh.global_batch * sh.seq_len
+    if sh.kind == "prefill":
+        return 2.0 * active * sh.global_batch * sh.seq_len
+    return 2.0 * active * sh.global_batch  # decode: per emitted token
+
+
+def build_cell(cfg, shape_name: str, mesh, *, fsdp=None, microbatches=1,
+               remat="full", opt_dtype=None, sharding_mode="tp_dp",
+               ecc_serve=False):
+    """Returns (fn, args_struct, in_shardings, donate) for one cell.
+
+    Hillclimb knobs:
+      sharding_mode: "tp_dp" (baseline rules) | "fsdp" (pure ZeRO-3, no TP)
+      ecc_serve:     serve cells read weights through the SECDED path
+                     (naive decode HLO; fused path modeled per kernel_micro)
+      microbatches / remat / fsdp / opt_dtype: as named.
+    """
+    total, _ = lm.param_count(cfg)
+    if fsdp is None:
+        fsdp = total >= FSDP_THRESHOLD
+    if opt_dtype is None:
+        opt_dtype = jnp.bfloat16 if total >= BF16_OPT_THRESHOLD else jnp.float32
+
+    if ecc_serve:
+        from repro.launch import ecc_struct
+
+        pstruct = ecc_struct.ecc_param_struct(cfg)
+        pshard = ecc_struct.ecc_param_shardings(cfg, mesh, fsdp)
+    elif sharding_mode in ("fsdp", "zero3"):
+        pstruct = lm.param_struct(cfg)
+        pshard = shd.param_shardings_fsdp_only(cfg, mesh)
+    elif sharding_mode == "dp":
+        pstruct = lm.param_struct(cfg)
+        pshard = jax.tree_util.tree_map(
+            lambda _: shd.replicated(mesh), lm.param_struct(cfg)
+        )
+    else:
+        pstruct = lm.param_struct(cfg)
+        pshard = shd.param_shardings(cfg, mesh, fsdp)
+    sh = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+    if sharding_mode in ("fsdp", "dp"):
+        # batch over every mesh axis; replaces the default batch sharders
+        def _ds(mesh_, b):
+            return shd.data_sharding_all_axes(mesh_, b)
+    else:
+        _ds = shd.data_sharding
+
+    if sh.kind == "train":
+        tcfg = ts.TrainConfig(
+            optimizer=adamw.AdamWConfig(state_dtype=opt_dtype),
+            microbatches=microbatches,
+            remat=remat,
+        )
+        fn = ts.make_train_step(cfg, tcfg)
+        opt_struct = jax.eval_shape(
+            lambda p: adamw.init(p, tcfg.optimizer), pstruct
+        )
+        opt_shard = {
+            "m": pshard, "v": pshard, "step": shd.replicated(mesh),
+        }
+        batch_struct = specs
+        batch_shard = jax.tree_util.tree_map(
+            lambda leaf: _ds(mesh, leaf.shape[0]), batch_struct
+        )
+        args = (pstruct, opt_struct, batch_struct)
+        shards = (pshard, opt_shard, batch_shard)
+        donate = (0, 1)
+        return fn, args, shards, donate
+
+    if sh.kind == "prefill":
+        fn = serve_steps.make_prefill_step(cfg)
+        cache_struct = specs["cache"]
+        cache_shard = shd.cache_shardings(cfg, mesh, cache_struct)
+        args = [pstruct, specs["tokens"], cache_struct]
+        shards = [pshard, _ds(mesh, sh.global_batch), cache_shard]
+        if "img" in specs:
+            args.append(specs["img"])
+            shards.append(_ds(mesh, sh.global_batch))
+        return fn, tuple(args), tuple(shards), (2,)
+
+    fn = serve_steps.make_serve_step(cfg)
+    cache_struct = specs["cache"]
+    cache_shard = shd.cache_shardings(cfg, mesh, cache_struct)
+    args = [pstruct, specs["tokens"], cache_struct, specs["pos"]]
+    shards = [
+        pshard,
+        _ds(mesh, sh.global_batch),
+        cache_shard,
+        shd.replicated(mesh),
+    ]
+    if "img" in specs:
+        args.append(specs["img"])
+        shards.append(_ds(mesh, sh.global_batch))
+    return fn, tuple(args), tuple(shards), (2,)
+
+
+def _lower_compile(cfg, shape_name, mesh, overrides):
+    fn, args, shards, donate = build_cell(cfg, shape_name, mesh, **overrides)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=shards, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def ssm_correction_flops(cfg, shape_name: str) -> float:
+    """Analytic FLOPs of the mamba/rwkv inner recurrence scans (global).
+
+    These stay lax.scan (While) even in analysis mode — unrolling 64-step
+    recurrences across 63 layers would blow up GSPMD compile time — so their
+    trip counts are restored analytically here.
+    """
+    sh = SHAPES[shape_name]
+    b = sh.global_batch
+    s = 1 if sh.kind == "decode" else sh.seq_len
+    if s == 1:
+        return 0.0  # decode path is a single recurrence step, counted by HLO
+    mult = 4.0 if sh.kind == "train" else 1.0  # fwd + remat-fwd + ~2x bwd
+    total = 0.0
+    for pos in range(cfg.period):
+        kind = cfg.layer_kind(pos)["mixer"]
+        if kind == "mamba":
+            per_layer = 4.0 * b * s * cfg.d_inner * cfg.d_state  # update+cumprod
+        elif kind == "rwkv":
+            n = cfg.rwkv_head_dim
+            per_layer = 6.0 * b * s * cfg.d_model * n  # H*N^2 state ops + cumprod
+        else:
+            continue
+        total += per_layer * cfg.n_groups * mult
+    return total
+
+
+def analytic_memory_bytes(cfg, shape_name: str, mesh, fsdp: bool, opt_bytes_per_param: int) -> dict:
+    """Fusion-aware per-device HBM traffic model (bytes per step).
+
+    XLA:CPU barely fuses, so cost_analysis 'bytes accessed' wildly
+    overestimates what a TPU (which fuses elementwise chains into the matmul
+    pipelines) would move. This model counts the irreducible streams:
+    weight shards, optimizer state, gradient traffic, remat boundaries,
+    KV-cache reads/writes. Reported alongside the raw HLO number.
+    """
+    sh = SHAPES[shape_name]
+    total, _ = lm.param_count(cfg)
+    p_item = jnp.dtype(cfg.param_dtype).itemsize
+    model_n = mesh.shape["model"]
+    batch_n = math.prod(v for k, v in mesh.shape.items() if k != "model")
+    chips = model_n * batch_n
+
+    p_stream = total * p_item / model_n / (batch_n if fsdp else 1)  # local shard
+    # weights move through each device once per pass regardless of who owns
+    # them (FSDP gathers are collective-term traffic; HBM sees the gathered
+    # copy once): per-pass weight bytes = TP-shard size.
+    w_pass = total * p_item / model_n / (1 if not fsdp else 1)
+
+    b_local = sh.global_batch / batch_n if sh.global_batch % batch_n == 0 else sh.global_batch
+    d = cfg.d_model
+    act_item = jnp.dtype(cfg.compute_dtype).itemsize
+
+    if sh.kind == "train":
+        bound = cfg.n_groups * b_local * sh.seq_len * d * act_item  # remat carries
+        opt = total * opt_bytes_per_param / model_n / (batch_n if fsdp else 1)
+        grads = p_stream
+        traffic = 3 * w_pass + 4 * opt + 2 * grads + 2 * bound
+        traffic += b_local * sh.seq_len * 8  # tokens+labels
+    elif sh.kind == "prefill":
+        kv_cache = _cache_bytes(cfg, sh, chips)
+        bound = cfg.n_groups * b_local * sh.seq_len * d * act_item
+        traffic = w_pass + kv_cache + bound
+    else:  # decode
+        kv_cache = _cache_bytes(cfg, sh, chips)
+        traffic = w_pass + kv_cache  # weights once + full cache read
+    return {"per_device": float(traffic)}
+
+
+def _cache_bytes(cfg, sh, chips) -> float:
+    """Per-device bytes of the decode cache (sharded over all chips)."""
+    act_item = jnp.dtype(cfg.compute_dtype).itemsize
+    if cfg.kv_quant:
+        # int8 planes + f32 per-(token,head) scales ~= 1 + 8/hd bytes/elem
+        act_item = 1.0 + 8.0 / max(cfg.hd, 1)
+    s = min(sh.seq_len, cfg.sliding_window) if cfg.sliding_window else sh.seq_len
+    total = 0.0
+    for pos in range(cfg.period):
+        kind = cfg.layer_kind(pos)["mixer"]
+        if kind == "attn":
+            total += 2 * sh.global_batch * s * cfg.n_kv_heads * cfg.hd
+        elif kind == "cross":
+            total += 2 * sh.global_batch * cfg.n_img_tokens * cfg.n_kv_heads * cfg.hd
+        elif kind == "mamba":
+            total += sh.global_batch * cfg.d_inner * (cfg.d_state + cfg.d_conv - 1)
+        elif kind == "rwkv":
+            n = cfg.rwkv_head_dim
+            total += sh.global_batch * cfg.d_model * (n + 2)
+    return total * cfg.n_groups * act_item / chips
+
+
+def _analysis_counts(cfg, shape_name, mesh, overrides):
+    """FLOPs + collective bytes via 1-group/2-group unrolled extrapolation."""
+    import dataclasses as _dc
+
+    def counts(groups: int):
+        c = _dc.replace(
+            cfg, n_layers=cfg.period * groups, scan_unroll=True, flash_chunk=4096
+        )
+        compiled = _lower_compile(c, shape_name, mesh, overrides)
+        ca = compiled.cost_analysis() or {}
+        coll = collective_link_bytes(
+            compiled.as_text(), n_devices=math.prod(mesh.shape.values())
+        )
+        return (
+            float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            float(coll["total_per_device"]),
+            coll["counts"],
+        )
+
+    f1, b1, c1, n1 = counts(1)
+    f2, b2, c2, n2 = counts(2)
+    g = cfg.n_groups
+    # Per-group deltas clamped at 0: tiny compiler-noise differences between
+    # the 1- and 2-group modules must not extrapolate negative.
+    flops = f1 + (g - 1) * max(f2 - f1, 0.0)
+    hbytes = b1 + (g - 1) * max(b2 - b1, 0.0)
+    cbytes = c1 + (g - 1) * max(c2 - c1, 0.0)
+    counts_x = {
+        k: n1.get(k, 0) + (g - 1) * max(n2.get(k, 0) - n1.get(k, 0), 0)
+        for k in set(n1) | set(n2)
+    }
+    return flops, hbytes, cbytes, counts_x
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, kv_quant=False,
+             pad_heads: int = 0, label: str | None = None, **overrides) -> dict:
+    """Per cell:
+      * memory pass — full depth, scans intact: memory_analysis + the
+        compile-success proof (this is what would run on the pod);
+      * analysis passes — 1-group and 2-group modules with every outer scan
+        unrolled (XLA HloCostAnalysis visits While bodies once), linearly
+        extrapolated to full depth; SSM inner-recurrence FLOPs added
+        analytically; memory term from a fusion-aware analytic model.
+    """
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if kv_quant:
+        cfg = _dc.replace(cfg, kv_quant=True)
+    if pad_heads:
+        # beyond-paper optimization: pad q-heads up to a TP-divisible count
+        # (zero-initialised extra heads; +pad/H FLOPs, restores 16-way TP)
+        cfg = _dc.replace(cfg, n_heads=pad_heads)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.shape.values())
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.shape.values()),
+        "chips": chips, "status": "ok",
+    }
+    if label:
+        rec["label"] = label
+    t0 = time.time()
+    try:
+        compiled = _lower_compile(cfg, shape_name, mesh, overrides)
+        ma = compiled.memory_analysis()
+        t_mem_pass = time.time() - t0
+
+        flops_dev, hlo_bytes_dev, coll_dev, coll_counts = _analysis_counts(
+            cfg, shape_name, mesh, overrides
+        )
+        flops_dev += ssm_correction_flops(cfg, shape_name) / chips
+
+        total_p, _ = lm.param_count(cfg)
+        fsdp = overrides.get("fsdp") or total_p >= FSDP_THRESHOLD
+        opt_b = 8 if total_p < BF16_OPT_THRESHOLD else 4
+        mem_model = analytic_memory_bytes(cfg, shape_name, mesh, fsdp, opt_b)
+        mf = model_flops(cfg, shape_name)
+
+        t_comp = flops_dev / PEAK_FLOPS
+        t_mem = mem_model["per_device"] / HBM_BW
+        t_mem_hlo = hlo_bytes_dev / HBM_BW
+        t_coll = coll_dev / LINK_BW
+        dom = max(
+            ("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+            key=lambda kv: kv[1],
+        )[0]
+        arg_b = ma.argument_size_in_bytes if ma else 0
+        tmp_b = ma.temp_size_in_bytes if ma else 0
+        out_b = ma.output_size_in_bytes if ma else 0
+        rec.update(
+            flops_per_device=flops_dev,
+            hlo_bytes_per_device=hlo_bytes_dev,
+            analytic_bytes_per_device=mem_model["per_device"],
+            collective_link_bytes_per_device=coll_dev,
+            collective_counts=coll_counts,
+            model_flops_global=mf,
+            useful_flops_ratio=(mf / (flops_dev * chips)) if flops_dev else None,
+            t_compute_s=t_comp,
+            t_memory_s=t_mem,
+            t_memory_hlo_s=t_mem_hlo,
+            t_collective_s=t_coll,
+            bottleneck=dom,
+            roofline_bound_s=max(t_comp, t_mem, t_coll),
+            compute_fraction=(t_comp / max(t_comp, t_mem, t_coll, 1e-30)),
+            memory=dict(
+                argument_bytes=arg_b, temp_bytes=tmp_b, output_bytes=out_b,
+                peak_est_gib=(arg_b + tmp_b) / 2**30,
+                fits_16g=(arg_b + tmp_b) < 16 * 2**30,
+            ),
+            seconds=dict(memory_pass=t_mem_pass, build=time.time() - t0),
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec.setdefault("seconds", {})["total"] = time.time() - t0
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--sharding", default="tp_dp",
+                    choices=["tp_dp", "fsdp", "zero3", "dp"])
+    ap.add_argument("--ecc", action="store_true", help="ECC-protected serve cells")
+    ap.add_argument("--kv-quant", action="store_true", help="int8 KV cache")
+    ap.add_argument("--pad-heads", type=int, default=0, help="pad q-heads to N")
+    ap.add_argument("--label", default=None, help="tag for hillclimb records")
+    ap.add_argument("--out", default="benchmarks/out/dryrun.json")
+    args = ap.parse_args()
+
+    archs = [a for a in ARCHS if a != "paper-nn"] if args.arch == "all" else [args.arch]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    def key(r):
+        return (r["arch"], r["shape"], r["mesh"], r.get("label"))
+
+    done = {key(r) for r in results if r.get("status") == "ok"}
+
+    for arch in archs:
+        shapes = (
+            supported_shapes(arch) if args.shape == "all" else [args.shape]
+        )
+        for shape in shapes:
+            if shape not in supported_shapes(arch):
+                print(f"SKIP {arch} x {shape} (not applicable)")
+                continue
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, shape, mesh_name) in done:
+                    print(f"CACHED {arch} x {shape} @ {mesh_name}")
+                    continue
+                print(f"RUN {arch} x {shape} @ {mesh_name} ...", flush=True)
+                rec = run_cell(
+                    arch, shape, mp,
+                    microbatches=args.microbatches, remat=args.remat,
+                    sharding_mode=args.sharding,
+                    ecc_serve=args.ecc and SHAPES[shape].kind != "train",
+                    kv_quant=args.kv_quant, pad_heads=args.pad_heads,
+                    label=args.label,
+                )
+                results = [r for r in results if key(r) != key(rec)] + [rec]
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                if rec["status"] == "ok":
+                    print(
+                        f"  ok: t_comp={rec['t_compute_s']:.3e}s "
+                        f"t_mem={rec['t_memory_s']:.3e}s "
+                        f"t_coll={rec['t_collective_s']:.3e}s "
+                        f"bottleneck={rec['bottleneck']} "
+                        f"mem/chip={rec['memory']['peak_est_gib']:.2f}GiB "
+                        f"({rec['seconds']['total']:.0f}s)",
+                        flush=True,
+                    )
+                else:
+                    print(f"  FAIL: {rec['error']}", flush=True)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    print(f"\n{n_ok}/{len(results)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

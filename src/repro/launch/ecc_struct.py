@@ -1,0 +1,86 @@
+"""Struct-level ECC parameter transform for the dry-run.
+
+Mirrors `serving.engine.protect_params_inline` on ShapeDtypeStructs: selected
+weight matrices become `EccWeight` nodes whose planes are ShapeDtypeStructs —
+no allocation — so ECC-protected serve cells can be lowered at full scale.
+Shardings for the planes derive from the original weight's logical axes:
+(K/8, N) inherits (axes_K, axes_N).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.distributed import sharding as shd
+from repro.kernels.ops import EccWeight
+from repro.models import lm
+from repro.models.base import Spec
+
+
+def _protectable(key: str, shape) -> bool:
+    # stacked (L, K, N) weight matrices of attention/MLP blocks
+    return (
+        ("attn" in key or "mlp" in key)
+        and len(shape) == 3
+        and shape[1] % 8 == 0
+        and min(shape[1:]) >= 64
+    )
+
+
+def ecc_param_struct(cfg, *, fuse: bool = False):
+    """ShapeDtypeStruct tree with EccWeight nodes replacing protected leaves.
+
+    fuse=False lowers the naive decode-then-matmul HLO (the measurable
+    baseline); the fused Pallas path is modeled analytically (kernel_micro).
+    """
+    specs = lm.init_specs(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, Spec)
+    )
+    out = []
+    for path, s in flat:
+        key = jax.tree_util.keystr(path)
+        if _protectable(key, s.shape):
+            l, k, n = s.shape
+            out.append(
+                EccWeight(
+                    lo=jax.ShapeDtypeStruct((l, k // 8, n), jnp.uint32),
+                    hi=jax.ShapeDtypeStruct((l, k // 8, n), jnp.uint32),
+                    parity=jax.ShapeDtypeStruct((l, k // 8, n), jnp.uint8),
+                    scale=jax.ShapeDtypeStruct((l, n), jnp.float32),
+                    k=k, n=n, fuse=fuse,
+                )
+            )
+        else:
+            out.append(jax.ShapeDtypeStruct(s.shape, cfg.param_dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def ecc_param_shardings(cfg, mesh, fsdp: bool, *, fuse: bool = False):
+    """NamedSharding tree matching ecc_param_struct."""
+    specs = lm.init_specs(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, Spec)
+    )
+    out = []
+    for path, s in flat:
+        key = jax.tree_util.keystr(path)
+        if _protectable(key, s.shape):
+            lax_, kax, nax = s.axes  # ("layers", axes_K, axes_N)
+            plane_shape = (s.shape[0], s.shape[1] // 8, s.shape[2])
+            plane = NamedSharding(
+                mesh, shd.spec_for((lax_, kax, nax), plane_shape, mesh, fsdp)
+            )
+            scale = NamedSharding(
+                mesh,
+                shd.spec_for((lax_, nax), (s.shape[0], s.shape[2]), mesh, fsdp),
+            )
+            out.append(
+                EccWeight(lo=plane, hi=plane, parity=plane, scale=scale,
+                          k=s.shape[1], n=s.shape[2], fuse=fuse)
+            )
+        else:
+            out.append(NamedSharding(mesh, shd.spec_for(s.axes, s.shape, mesh, fsdp)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Single pod: 256 chips as (16, 16) = ("data", "model").
+Multi-pod:  2 pods x 256 chips as (2, 16, 16) = ("pod", "data", "model") —
+the "pod" axis composes with "data" into the batch/FSDP super-axis (DCN-class
+links carry only data-parallel collectives, the TPU-pod-topology-aware choice).
+
+Defined as functions so importing this module never touches jax device state
+(device count is locked at first jax init; the dry-run forces 512 host
+devices *before* any import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh(
+        (n // model, model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,2 @@
+from repro.models import base, lm, layers, mamba, moe, rwkv6
+from repro.models.base import ModelConfig

@@ -1,0 +1,128 @@
+"""Selective SSM (Mamba-1) layer for the Jamba hybrid.
+
+Train-time lowering is *parallel-over-chunks, sequential-within-chunk*: the
+sequence is split into chunks of `CHUNK`; a lax.scan runs the exact recurrence
+inside each chunk with zero initial state (vmapped over chunks, so chunks run
+in parallel), a second cheap lax.scan propagates chunk-boundary states, and a
+closed-form correction adds the boundary state's contribution:
+
+    h_t = P_{1..t} * h_start + h0_t          (P = cumprod of per-step decay)
+    y_t = C_t . h_t = y0_t + C_t . (P_t * h_start)
+
+This is numerically exact (no log-space tricks), keeps the per-step working
+set at (B, CHUNK, d_inner, d_state) — d_inner is TP-sharded — and compiles to
+two While ops regardless of sequence length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 64
+
+
+def _conv_causal(x, w, b):
+    """Depthwise causal conv. x: (B,S,di), w: (di, K), b: (di,)."""
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[:, i]
+    return out + b
+
+
+def _ssm_scan_chunked(decay, inp, c_coef, h0, unroll=1):
+    """decay/inp: (B,S,di,ds); c_coef: (B,S,ds); h0: (B,di,ds).
+
+    Returns (y (B,S,di), h_final (B,di,ds)).
+    """
+    b, s, di, ds = decay.shape
+    nc = max(1, s // CHUNK)
+    lc = s // nc
+    assert nc * lc == s, (s, CHUNK)
+    dc = decay.reshape(b, nc, lc, di, ds)
+    ic = inp.reshape(b, nc, lc, di, ds)
+    cc = c_coef.reshape(b, nc, lc, ds)
+
+    # Within-chunk scan with zero init (vmapped over B and chunks via batching
+    # dims on the scan body's operands; scan is over the time axis).
+    def step(h, t):
+        d_t, i_t = t  # (B, nc, di, ds)
+        h = d_t * h + i_t
+        return h, h
+
+    h_zero = jnp.zeros((b, nc, di, ds), decay.dtype)
+    h_last, hs = jax.lax.scan(
+        step,
+        h_zero,
+        (dc.transpose(2, 0, 1, 3, 4), ic.transpose(2, 0, 1, 3, 4)),
+        unroll=unroll,
+    )
+    # hs: (lc, B, nc, di, ds) — zero-init within-chunk states h0_t
+    y0 = jnp.einsum("lbcdk,bclk->bcld", hs, cc.transpose(0, 1, 2, 3))
+
+    # Cross-chunk state propagation: h_start_{c+1} = P_c * h_start_c + M_c
+    p_cum = jnp.cumprod(dc, axis=2)  # (B, nc, lc, di, ds)
+    p_full = p_cum[:, :, -1]  # (B, nc, di, ds)
+
+    def cross(h, t):
+        p_c, m_c = t
+        return p_c * h + m_c, h
+
+    h_fin, h_starts = jax.lax.scan(
+        cross,
+        h0,
+        (p_full.transpose(1, 0, 2, 3), h_last.transpose(1, 0, 2, 3)),
+        unroll=unroll,
+    )
+    h_starts = h_starts.swapaxes(0, 1)  # (B, nc, di, ds): state entering chunk c
+    # Correction: y_t += C_t . (P_t * h_start_c)
+    y_corr = jnp.einsum("bcldk,bcdk,bclk->bcld", p_cum, h_starts, cc)
+    y = (y0 + y_corr).reshape(b, s, di)
+    return y, h_fin
+
+
+def mamba_layer(x, p, cfg, state=None):
+    """x: (B, S, D). state: None (train/prefill from scratch) or dict with
+    'conv' (B, d_conv-1, di) and 'ssm' (B, di, ds) for chunk-wise/decode use.
+
+    Returns (out (B,S,D), new_state).
+    """
+    b, s, d = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B,S,di)
+
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"], xs], axis=1)
+        new_conv = conv_in[:, -(cfg.d_conv - 1) :, :]
+        xs_c = _conv_causal(conv_in, p["conv_w"], p["conv_b"])[:, cfg.d_conv - 1 :, :]
+    else:
+        pad = max(0, (cfg.d_conv - 1) - s)
+        new_conv = jnp.pad(xs, ((0, 0), (pad, 0), (0, 0)))[:, -(cfg.d_conv - 1) :, :]
+        xs_c = _conv_causal(xs, p["conv_w"], p["conv_b"])
+    xs_c = jax.nn.silu(xs_c)
+
+    dbc = jnp.einsum("bsi,ie->bse", xs_c, p["x_proj"])
+    dt_rank = p["dt_proj"].shape[0]
+    delta, bmat, cmat = jnp.split(dbc, [dt_rank, dt_rank + ds], axis=-1)
+    delta = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", delta, p["dt_proj"]) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)).astype(x.dtype)  # (di, ds)
+
+    decay = jnp.exp(delta[..., None] * a)  # (B,S,di,ds)
+    inp = (delta * xs_c)[..., None] * bmat[:, :, None, :]  # (B,S,di,ds)
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((b, di, ds), x.dtype)
+    if s == 1:  # decode fast path: one recurrence step, no chunking
+        h = decay[:, 0] * h0 + inp[:, 0]
+        y = jnp.einsum("bdk,bk->bd", h, cmat[:, 0])[:, None, :]
+        h_fin = h
+    else:
+        # inner scans stay While-loops even in analysis mode; the dry-run
+        # adds their FLOPs analytically (see launch/dryrun.py ssm_correction).
+        y, h_fin = _ssm_scan_chunked(decay, inp, cmat, h0)
+
+    y = y + xs_c * p["d_skip"]
+    out = jnp.einsum("bsi,id->bsd", y * jax.nn.silu(z), p["out_proj"])
+    return out, {"conv": new_conv, "ssm": h_fin}

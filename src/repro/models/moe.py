@@ -1,0 +1,123 @@
+"""Mixture-of-Experts with FLOP-exact, batch-grouped sort dispatch.
+
+Dense "compute every expert" MoE inflates HLO FLOPs by E/top_k; GShard-style
+one-hot einsum dispatch costs O(T*E*C*D) FLOPs which dominates the expert
+FFNs at large T. We use sort-based dispatch instead — argsort token->expert
+assignments, rank within expert segments, gather into an (E, C) slot grid,
+batched expert einsum, scatter-add combine — so compiled FLOPs ~= active
+expert FLOPs (the 6*N_active*D quantity).
+
+Crucially the dispatch is *grouped by batch row* (sequence): each row sorts
+only its own S tokens, so under pjit the sort/gather stay local to the data
+shard that owns the row — a global-token argsort would force GSPMD to
+all-gather the entire (1M-token, d_model) activation tensor (measured: 5.8
+TiB/chip on jamba train_4k). Capacity is per (row, expert): C = S*k/E*cf,
+the standard GShard grouping. For decode (S == 1) the whole batch forms one
+group — B tokens are trivially cheap to sort globally.
+
+Expert weights are (E, D, F) with E on the "experts" logical axis -> "model"
+mesh axis (EP); the xe regroup to expert-major lowers to all-to-all over the
+EP axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def route_topk(x, router_w, n_experts, top_k):
+    """x: (..., D). Returns (expert_idx (..., k), probs (..., k), logits)."""
+    logits = jnp.einsum(
+        "...d,de->...e", x.astype(jnp.float32), router_w.astype(jnp.float32)
+    )
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    probs, idx = jax.lax.top_k(probs_full, top_k)
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)  # renormalize
+    return idx, probs.astype(x.dtype), logits
+
+
+def sort_dispatch(expert_idx, n_experts, capacity):
+    """(T, k) expert assignments -> (E*C,) slot->token-slot mapping.
+
+    Returns (slot_src, slot_valid, kept). Used per dispatch group (vmapped)."""
+    t, k = expert_idx.shape
+    flat_e = expert_idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(t * k) - first
+    kept_sorted = rank < capacity
+    slot_of_sorted = sorted_e * capacity + jnp.minimum(rank, capacity - 1)
+    dest = jnp.where(kept_sorted, slot_of_sorted, n_experts * capacity)
+    slot_src = jnp.full((n_experts * capacity,), t * k, jnp.int32)
+    slot_src = slot_src.at[dest].set(order.astype(jnp.int32), mode="drop")
+    slot_valid = slot_src < t * k
+    kept = jnp.zeros((t * k,), bool).at[order].set(kept_sorted)
+    return slot_src, slot_valid, kept
+
+
+def _expert_ffn(xe, p, cfg):
+    """xe: (G, E, C, D) -> (G, E, C, D) through the per-expert (Sw)MLP."""
+    if cfg.gated_mlp:
+        gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w1"]))
+        up = jnp.einsum("gecd,edf->gecf", xe, p["w3"])
+        return jnp.einsum("gecf,efd->gecd", gate * up, p["w2"])
+    h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, p["w1"]))
+    return jnp.einsum("gecf,efd->gecd", h, p["w2"])
+
+
+def moe_ffn(x, p, cfg):
+    """x: (B, S, D) -> (B, S, D). p: router (D,E), w1/w3 (E,D,F), w2 (E,F,D)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    if s == 1:  # decode: one global group over the (small) batch
+        xg = x.reshape(1, b, d)
+    else:  # train/prefill: one group per batch row (sequence)
+        xg = x  # (B, S, D) — groups are rows
+    g, t = xg.shape[0], xg.shape[1]
+    capacity = int(max(1, round(t * k / e * cfg.capacity_factor)))
+
+    expert_idx, probs, router_logits = route_topk(xg, p["router"], e, k)
+    slot_src, slot_valid, _ = jax.vmap(
+        lambda idx: sort_dispatch(idx, e, capacity)
+    )(expert_idx)
+
+    tok_of_slot = jnp.minimum(slot_src // k, t - 1)  # (G, E*C)
+    xe = jnp.take_along_axis(xg, tok_of_slot[..., None], axis=1)  # (G, E*C, D)
+    xe = xe * slot_valid[..., None].astype(xe.dtype)
+    xe = xe.reshape(g, e, capacity, d)
+
+    ye = _expert_ffn(xe, p, cfg)  # (G, E, C, D)
+
+    prob_flat = probs.reshape(g, t * k)
+    safe_src = jnp.minimum(slot_src, t * k - 1)
+    w_slot = jnp.where(
+        slot_valid, jnp.take_along_axis(prob_flat, safe_src, axis=1), 0.0
+    )  # (G, E*C)
+    y_flat = ye.reshape(g, e * capacity, d) * w_slot[..., None].astype(ye.dtype)
+
+    def combine(y_row, tok_row, valid_row):
+        return jnp.zeros((t, d), y_row.dtype).at[tok_row].add(
+            jnp.where(valid_row[:, None], y_row, 0.0)
+        )
+
+    out = jax.vmap(combine)(y_flat, tok_of_slot, slot_valid)  # (G, T, D)
+
+    if cfg.shared_expert:
+        gate = jax.nn.silu(jnp.einsum("gtd,df->gtf", xg, p["shared_w1"]))
+        up = jnp.einsum("gtd,df->gtf", xg, p["shared_w3"])
+        out = out + jnp.einsum("gtf,fd->gtd", gate * up, p["shared_w2"])
+
+    aux = load_balance_loss(router_logits.reshape(b * s, e), expert_idx.reshape(b * s, k), e)
+    return out.reshape(b, s, d), aux
+
+
+def load_balance_loss(router_logits, expert_idx, n_experts):
+    """Switch-style auxiliary load-balancing loss."""
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (T, E)
+    me = probs.mean(0)
+    one_hot = jax.nn.one_hot(expert_idx.reshape(-1, expert_idx.shape[-1])[:, 0],
+                             n_experts, dtype=probs.dtype)
+    ce = one_hot.mean(0)
+    return n_experts * jnp.sum(me * ce)

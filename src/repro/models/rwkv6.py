@@ -1,0 +1,158 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay, plus squared-ReLU channel-mix.
+
+Time-mix recurrence per head (N = head dim, state S in R^{NxN}):
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T        w_t = exp(-exp(wlog_t))
+
+with token-shift DDLERP inputs and LoRA-generated per-channel decay wlog_t.
+Train lowering uses the same exact parallel-over-chunks scheme as mamba.py:
+zero-init within-chunk scan + cross-chunk state propagation + closed-form
+boundary correction  y_t += (r_t * P_{t-1})^T S_start  (P = cumprod of w).
+No log-space/overflow tricks are needed because all factors are <= 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 64
+LORA_MIX = 32
+LORA_DECAY = 64
+N_MIX = 5  # r, k, v, g, w
+
+
+def _token_shift(x, last):
+    """x: (B,S,D); last: (B,D) previous token (zeros at sequence start)."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def _ddlerp(x, prev, p):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,g,w)."""
+    xx = prev - x
+    base = x + xx * p["mu_base"]
+    k5 = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, p["mix_a"]))  # (B,S,5*32)
+    b, s, _ = x.shape
+    k5 = k5.reshape(b, s, N_MIX, LORA_MIX)
+    dyn = jnp.einsum("bsfr,frd->bsfd", k5, p["mix_b"])  # (B,S,5,D)
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (p["mu_five"] + dyn)
+    return [mixed[:, :, i, :] for i in range(N_MIX)]
+
+
+def _wkv_chunked(r, k, v, w, u, s0, unroll=1):
+    """r/k/v/w: (B,S,H,N); u: (H,N); s0: (B,H,N,N). Exact chunked WKV.
+
+    Returns (y (B,S,H,N), s_final)."""
+    b, s, h, n = r.shape
+    nc = max(1, s // CHUNK)
+    lc = s // nc
+    assert nc * lc == s
+    rs = r.reshape(b, nc, lc, h, n)
+    ks = k.reshape(b, nc, lc, h, n)
+    vs = v.reshape(b, nc, lc, h, n)
+    ws = w.reshape(b, nc, lc, h, n)
+
+    def step(state, t):
+        r_t, k_t, v_t, w_t = t  # each (B, nc, H, N)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,nc,H,N,N)
+        y = jnp.einsum("bchi,bchij->bchj", r_t, state + u[:, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    s_zero = jnp.zeros((b, nc, h, n, n), r.dtype)
+    s_last, y0 = jax.lax.scan(
+        step,
+        s_zero,
+        (
+            rs.transpose(2, 0, 1, 3, 4),
+            ks.transpose(2, 0, 1, 3, 4),
+            vs.transpose(2, 0, 1, 3, 4),
+            ws.transpose(2, 0, 1, 3, 4),
+        ),
+        unroll=unroll,
+    )
+    y0 = y0.transpose(1, 2, 0, 3, 4)  # (B, nc, lc, H, N)
+
+    p_cum = jnp.cumprod(ws, axis=2)  # (B,nc,lc,H,N) — prod of w_1..t
+    p_full = p_cum[:, :, -1]
+
+    def cross(state, t):
+        p_c, m_c = t
+        return p_c[..., :, None] * state + m_c, state
+
+    s_fin, s_starts = jax.lax.scan(
+        cross, s0, (p_full.transpose(1, 0, 2, 3), s_last.transpose(1, 0, 2, 3, 4)),
+        unroll=unroll,
+    )
+    s_starts = s_starts.swapaxes(0, 1)  # (B,nc,H,N,N)
+
+    # y_t uses S_{t-1}: correction factor is P_{t-1} (exclusive cumprod).
+    p_excl = jnp.concatenate(
+        [jnp.ones_like(p_cum[:, :, :1]), p_cum[:, :, :-1]], axis=2
+    )
+    y_corr = jnp.einsum("bclhi,bchij->bclhj", rs * p_excl, s_starts)
+    y = (y0 + y_corr).reshape(b, s, h, n)
+    return y, s_fin
+
+
+def _group_norm(y, gamma, beta, eps=64e-5):
+    """Per-head LayerNorm (RWKV 'ln_x'). y: (B,S,H,N); gamma/beta: (H*N,)."""
+    b, s, h, n = y.shape
+    y32 = y.astype(jnp.float32)
+    mu = y32.mean(-1, keepdims=True)
+    var = ((y32 - mu) ** 2).mean(-1, keepdims=True)
+    yn = ((y32 - mu) * jax.lax.rsqrt(var + eps)).reshape(b, s, h * n)
+    return (yn * gamma + beta).astype(y.dtype)
+
+
+def time_mix(x, p, cfg, state=None):
+    """RWKV-6 attention substitute. state: {'shift': (B,D), 'wkv': (B,H,N,N)}."""
+    b, s, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    shift_in = state["shift"] if state is not None else jnp.zeros((b, d), x.dtype)
+    prev = _token_shift(x, shift_in)
+    xr, xk, xv, xg, xw = _ddlerp(x, prev, p)
+
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(b, s, h, n)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(b, s, h, n)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(b, s, h, n)
+    g = jnp.einsum("bsd,de->bse", xg, p["w_g"])
+    wlog = p["w_base"] + jnp.einsum(
+        "bsr,rd->bsd", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["decay_a"])), p["decay_b"]
+    )
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32))).astype(x.dtype).reshape(b, s, h, n)
+    u = p["u"].reshape(h, n)
+
+    s0 = state["wkv"] if state is not None else jnp.zeros((b, h, n, n), x.dtype)
+    if s == 1:  # decode fast path
+        kv = k[:, 0, :, :, None] * v[:, 0, :, None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r[:, 0], s0 + u[:, :, None] * kv)[:, None]
+        y = y.reshape(b, 1, h, n)
+        s_fin = w[:, 0, :, :, None] * s0 + kv
+    else:
+        # inner scans stay While-loops even in analysis mode (see dryrun).
+        y, s_fin = _wkv_chunked(r, k, v, w, u, s0)
+
+    y = _group_norm(y, p["ln_x_g"], p["ln_x_b"])
+    out = jnp.einsum("bsd,de->bse", y * jax.nn.silu(g), p["w_o"])
+    new_state = {"shift": x[:, -1, :], "wkv": s_fin}
+    return out, new_state
+
+
+def channel_mix(x, p, cfg, state=None):
+    """RWKV-6 FFN: squared-ReLU with token shift. state: {'shift': (B,D)}."""
+    b, s, d = x.shape
+    shift_in = state["shift"] if state is not None else jnp.zeros((b, d), x.dtype)
+    prev = _token_shift(x, shift_in)
+    xx = prev - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"])) * kv
+    return out, {"shift": x[:, -1, :]}

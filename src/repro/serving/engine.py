@@ -1,0 +1,229 @@
+"""Batched serving engine with ECC-protected weights under an undervolted rail.
+
+The paper's §IV evaluation as a service: model weights live in an
+`EccMemoryDomain` ("BRAM") at a configurable rail voltage; every voltage
+change re-materialises the faulty-but-corrected view of the weights through
+the SECDED read path; the DED-canary `UndervoltController` consumes scrub
+telemetry between generation rounds and walks the rail down until the first
+detected-uncorrectable event. Power comes from the calibrated Table-I model.
+
+Two protection layouts:
+  * mode="domain"  — any arch: raw weight bits stored in the domain, decoded
+    view refreshed per voltage (matches the paper's BRAM-resident weights);
+  * mode="inline"  — dense archs: big matrices replaced by int8 EccWeight
+    planes; every forward pass runs the (Pallas) decode-matmul read path,
+    faults injected into the planes XOR-style. This is the TPU-native fused
+    path (DESIGN.md §2) and the paper-representative dry-run/hillclimb cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import UndervoltController, voltage as vmod
+from repro.core.faultsim import FaultField
+from repro.core.memory import EccMemoryDomain
+from repro.core.telemetry import FaultStats
+from repro.kernels import ops as kops
+from repro.models import lm
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ReliabilityConfig:
+    platform: str = "vc707"
+    ecc: bool = True
+    voltage: float | None = None  # None -> nominal
+    protect: tuple = ("weights",)
+    mode: str = "domain"  # domain | inline
+    fuse: bool = True  # inline mode: fused Pallas read path vs naive
+    seed: int = 0
+    controller_step_v: float = 0.01
+
+
+def _pack_stacked(leaf) -> kops.EccWeight:
+    """Pack a layer-stacked (G, K, N) float weight into stacked ECC planes.
+
+    The scan over layer groups slices the leading G off every plane leaf, so
+    the in-scan view is exactly the 2D EccWeight the kernels expect."""
+    g = leaf.shape[0]
+    packed = [kops.pack_ecc_weights(jnp.asarray(leaf[i], jnp.float32)) for i in range(g)]
+    return kops.EccWeight(
+        lo=jnp.stack([p.lo for p in packed]),
+        hi=jnp.stack([p.hi for p in packed]),
+        parity=jnp.stack([p.parity for p in packed]),
+        scale=jnp.stack([p.scale for p in packed]),
+        k=packed[0].k,
+        n=packed[0].n,
+        fuse=packed[0].fuse,
+    )
+
+
+def protect_params_inline(params, cfg: ModelConfig, seed: int = 0):
+    """Replace weight matrices (K%8==0) with SECDED int8 EccWeight planes.
+
+    Handles both plain (K, N) and layer-stacked (G, K, N) leaves. Returns
+    (new_params, plane_sizes) where plane_sizes maps path -> word count
+    (for voltage-dependent fault injection).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out, fields = [], {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if not hasattr(leaf, "ndim") or not ("attn" in key or "mlp" in key):
+            out.append(leaf)
+            continue
+        if leaf.ndim == 2 and leaf.shape[0] % 8 == 0 and min(leaf.shape) >= 64:
+            ew = kops.pack_ecc_weights(jnp.asarray(leaf, jnp.float32))
+        elif leaf.ndim == 3 and leaf.shape[1] % 8 == 0 and min(leaf.shape[1:]) >= 64:
+            ew = _pack_stacked(leaf)
+        else:
+            out.append(leaf)
+            continue
+        out.append(ew)
+        fields[key] = ew.lo.size
+    return jax.tree_util.tree_unflatten(treedef, out), fields
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        rel: ReliabilityConfig | None = None,
+        max_len: int = 512,
+    ):
+        self.cfg = cfg
+        self.rel = rel
+        self.max_len = max_len
+        self.platform = vmod.PLATFORMS[rel.platform] if rel else None
+        self.controller = (
+            UndervoltController(self.platform, step_v=rel.controller_step_v)
+            if rel
+            else None
+        )
+        self.stats = FaultStats()
+        self._clean_params = params
+        if rel is None:
+            self.params = params
+            self.domain = None
+        elif rel.mode == "domain":
+            self.domain = EccMemoryDomain(
+                rel.platform, seed=rel.seed, ecc_enabled=rel.ecc,
+                voltage=rel.voltage or 1.0,
+            )
+            self.domain.write_pytree("w", params)
+            self.params = params  # refreshed by set_voltage
+            self.set_voltage(self.domain.voltage)
+        else:  # inline
+            self.domain = None
+            self.params, self._plane_sizes = protect_params_inline(
+                params, cfg, seed=rel.seed
+            )
+            self._clean_inline = self.params
+            self._fields: dict[str, FaultField] = {}
+            self.voltage = rel.voltage or self.platform.v_nom
+            self.set_voltage(self.voltage)
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(p, t, cfg, c, pos)
+        )
+        self._prefill = jax.jit(
+            lambda p, t, c: lm.prefill(p, t, cfg, c)
+        )
+
+    # -- voltage control ------------------------------------------------------
+    def set_voltage(self, v: float):
+        self.voltage = float(v)
+        if self.rel is None:
+            return
+        if self.rel.mode == "domain":
+            self.domain.set_voltage(v)
+            self.params, stats = self.domain.read_pytree("w", self._clean_params)
+            self.stats.merge(stats)
+        else:
+            self._apply_inline_faults(v)
+
+    def _apply_inline_faults(self, v: float):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            self._clean_inline, is_leaf=lambda x: isinstance(x, kops.EccWeight)
+        )
+        out = []
+        agg = FaultStats()
+        for path, leaf in flat:
+            if not isinstance(leaf, kops.EccWeight):
+                out.append(leaf)
+                continue
+            key = jax.tree_util.keystr(path)
+            field = self._fields.get(key)
+            if field is None:
+                import zlib
+
+                fseed = (self.rel.seed * 0x9E3779B1 + zlib.crc32(key.encode())) & 0x7FFFFFFF
+                field = FaultField(self.platform, leaf.lo.size, seed=fseed)
+                self._fields[key] = field
+            masks = field.masks(v)
+            mlo = jnp.asarray(masks.lo.reshape(leaf.lo.shape))
+            mhi = jnp.asarray(masks.hi.reshape(leaf.hi.shape))
+            mpar = jnp.asarray(masks.parity.reshape(leaf.parity.shape))
+            faulty = dataclasses.replace(
+                leaf, lo=leaf.lo ^ mlo, hi=leaf.hi ^ mhi, parity=leaf.parity ^ mpar
+            )
+            if not self.rel.ecc:
+                # No-ECC baseline: zero the parity contribution by decoding off
+                # — we emulate by treating planes as raw (decode would mis-fire),
+                # so instead keep faulty planes and a pass-through decode: the
+                # raw faulty bits flow straight into the matmul.
+                faulty = dataclasses.replace(faulty, parity=kops.encode(faulty.lo, faulty.hi))
+            status = np.asarray(kops.scrub(faulty))
+            agg.merge(FaultStats.from_decode(status, masks.flip_counts()))
+            out.append(faulty)
+        self.params = jax.tree_util.tree_unflatten(treedef, out)
+        self.stats.merge(agg)
+        self._last_scrub = agg
+
+    # -- serving --------------------------------------------------------------
+    def generate(self, prompts: np.ndarray, n_tokens: int):
+        """Greedy-decode a batch. prompts: (B, S0) int32. Returns (B, n)."""
+        b, s0 = prompts.shape
+        cache = lm.init_cache(self.cfg, b, self.max_len)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts), cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        outs = [tok]
+        for i in range(n_tokens - 1):
+            logits, cache = self._decode(self.params, tok, cache, s0 + i)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            outs.append(tok)
+        return np.concatenate([np.asarray(o) for o in outs], axis=1)
+
+    # -- runtime undervolting loop ---------------------------------------------
+    def autotune_voltage(self, max_rounds: int = 60):
+        """Paper §III/IV: lower the rail until the ECC's DED flag trips."""
+        assert self.rel is not None and self.controller is not None
+        for _ in range(max_rounds):
+            round_stats = (
+                self._last_scrub if self.rel.mode == "inline" else self._domain_scrub()
+            )
+            v = self.controller.update(round_stats)
+            if self.controller.locked:
+                # re-apply the backed-off (safe) voltage before serving
+                self.set_voltage(self.controller.voltage)
+                break
+            self.set_voltage(v)
+        return self.controller.voltage, self.controller.history
+
+    def _domain_scrub(self) -> FaultStats:
+        agg = FaultStats()
+        for name in self.domain.names():
+            _, st = self.domain.read(name)
+            agg.merge(st)
+        return agg
+
+    def power_w(self) -> float:
+        """Modeled accelerator power at the current rail voltage."""
+        return vmod.accelerator_power(self.voltage, ecc=bool(self.rel and self.rel.ecc))

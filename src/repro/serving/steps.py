@@ -1,0 +1,37 @@
+"""Serving step functions: prefill and single-token decode (greedy).
+
+`serve_step` is what decode_32k / long_500k dry-run cells lower: one new token
+against a seq_len-deep KV cache (or SSM state), returning the sampled token
+and the updated cache. Cache buffers are donated so the compiled step updates
+in place.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.base import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, cache, img=None):
+        logits, cache = lm.prefill(params, tokens, cfg, cache, img=img)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, cache, pos, img=None):
+        logits, cache = lm.decode_step(params, tokens, cfg, cache, pos, img=img)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if cfg.n_codebooks:
+            next_tok = next_tok[:, :, None]  # (B, K, 1)
+        else:
+            next_tok = next_tok[:, None]  # (B, 1)
+        return next_tok, cache
+
+    return serve_step

@@ -1,0 +1,91 @@
+"""Train step: microbatched grad accumulation + remat + AdamW.
+
+`make_train_step(cfg, tcfg)` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for pjit. Microbatching splits the global batch along B inside a
+lax.scan, keeping live activation memory at 1/n_micro while the collective
+payload per accumulation step stays pipelineable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.base import ModelConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatches: int = 1
+    remat: str | None = "full"  # None | "full" | "dots"
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    def loss_fn(params, batch):
+        loss, metrics = lm.train_loss(params, batch, cfg, remat=tcfg.remat)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    loss_fn = make_loss_fn(cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    # NOTE: cfg.unroll (dry-run analysis mode) must also unroll this scan, or
+    # XLA cost analysis undercounts the step by the microbatch count.
+
+    def train_step(params, opt_state, batch):
+        n = tcfg.microbatches
+        if n <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % n == 0, (b, n)
+                return x.reshape(n, b // n, *x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + loss), None
+
+            (g_sum, l_sum), _ = jax.lax.scan(
+                acc_step, (zero_g, 0.0), micro, unroll=cfg.unroll
+            )
+            grads = jax.tree_util.tree_map(lambda g: (g / n).astype(jnp.float32), g_sum)
+            loss = l_sum / n
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, opt_state, params, tcfg.optimizer
+        )
+        out_metrics: dict[str, Any] = {"loss": loss, **opt_metrics}
+        out_metrics.update({k: v for k, v in (metrics or {}).items()})
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, tcfg: TrainConfig):
+    loss_fn = make_loss_fn(cfg, tcfg)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step

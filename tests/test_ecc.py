@@ -1,0 +1,75 @@
+"""SECDED(72,64) code: construction invariants + codec properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import ecc, hsiao
+
+
+def test_hsiao_construction():
+    code = hsiao.build_code()
+    cols = list(code["data_cols"]) + list(code["parity_cols"])
+    # 72 distinct odd-weight columns
+    assert len(set(int(c) for c in cols)) == 72
+    assert all(bin(int(c)).count("1") % 2 == 1 for c in cols)
+    # balanced rows (hardware XOR-tree depth)
+    assert code["row_weight"].min() == code["row_weight"].max() == 26
+
+
+def test_roundtrip_and_all_single_bit_corrections():
+    rng = np.random.default_rng(1)
+    lo = jnp.asarray(rng.integers(0, 2**32, 32, dtype=np.uint32))
+    hi = jnp.asarray(rng.integers(0, 2**32, 32, dtype=np.uint32))
+    par = ecc.encode(lo, hi)
+    dlo, dhi, st_ = ecc.decode(lo, hi, par)
+    assert (np.asarray(st_) == ecc.STATUS_CLEAN).all()
+    for b in range(72):
+        flo, fhi, fpar = np.asarray(lo).copy(), np.asarray(hi).copy(), np.asarray(par).copy()
+        if b < 32:
+            flo ^= np.uint32(1 << b)
+        elif b < 64:
+            fhi ^= np.uint32(1 << (b - 32))
+        else:
+            fpar ^= np.uint8(1 << (b - 64))
+        dlo, dhi, st_ = ecc.decode(jnp.asarray(flo), jnp.asarray(fhi), jnp.asarray(fpar))
+        assert np.array_equal(np.asarray(dlo), np.asarray(lo)), b
+        assert np.array_equal(np.asarray(dhi), np.asarray(hi)), b
+        assert (np.asarray(st_) == ecc.STATUS_CORRECTED).all(), b
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    lo=st.integers(0, 2**32 - 1),
+    hi=st.integers(0, 2**32 - 1),
+    b1=st.integers(0, 71),
+    b2=st.integers(0, 71),
+)
+def test_double_bit_always_detected(lo, hi, b1, b2):
+    if b1 == b2:
+        return
+    lo_a = jnp.asarray([lo], jnp.uint32)
+    hi_a = jnp.asarray([hi], jnp.uint32)
+    par = ecc.encode(lo_a, hi_a)
+    flo, fhi, fpar = np.asarray(lo_a), np.asarray(hi_a), np.asarray(par)
+    for b in (b1, b2):
+        if b < 32:
+            flo = flo ^ np.uint32(1 << b)
+        elif b < 64:
+            fhi = fhi ^ np.uint32(1 << (b - 32))
+        else:
+            fpar = fpar ^ np.uint8(1 << (b - 64))
+    _, _, st_ = ecc.decode(jnp.asarray(flo), jnp.asarray(fhi), jnp.asarray(fpar))
+    assert int(st_[0]) == ecc.STATUS_DETECTED
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**64 - 1))
+def test_encode_matches_numpy_reference(word):
+    lo = jnp.asarray([word & 0xFFFFFFFF], jnp.uint32)
+    hi = jnp.asarray([word >> 32], jnp.uint32)
+    assert np.asarray(ecc.encode(lo, hi))[0] == ecc.encode_np(
+        np.asarray(lo), np.asarray(hi)
+    )[0]

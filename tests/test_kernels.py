@@ -1,0 +1,88 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize(
+    "shape", [(64,), (1000,), (256, 512), (7, 13), (3, 5, 7)]
+)
+def test_encode_decode_inject_match_oracle(shape, rng):
+    lo = jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    hi = jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    par_k = ops.encode(lo, hi)
+    par_r = ref.encode_ref(lo, hi)
+    assert np.array_equal(np.asarray(par_k), np.asarray(par_r))
+
+    mask = rng.integers(0, 2**32, shape, dtype=np.uint32)
+    for _ in range(4):  # sparsify
+        mask &= rng.integers(0, 2**32, shape, dtype=np.uint32)
+    z32 = jnp.zeros(shape, jnp.uint32)
+    zp = jnp.zeros(shape, jnp.uint8)
+    flo, fhi, fpar = ops.inject(lo, hi, par_k, jnp.asarray(mask), z32, zp)
+    r = ref.inject_ref(lo, hi, par_k, jnp.asarray(mask), z32, zp)
+    assert all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip((flo, fhi, fpar), r))
+
+    out_k = ops.decode(flo, fhi, fpar)
+    out_r = ref.decode_ref(flo, fhi, fpar)
+    for a, b in zip(out_k, out_r):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("mkn", [(8, 64, 128), (33, 512, 256), (128, 1024, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ecc_matmul_fused_naive_oracle(mkn, dtype, rng):
+    m, k, n = mkn
+    x = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.05, jnp.float32)
+    ew = ops.pack_ecc_weights(w)
+    out_f = np.asarray(ops.ecc_matmul(x, ew, fuse=True))
+    out_n = np.asarray(ops.ecc_matmul(x, ew, fuse=False))
+    out_r = np.asarray(ref.ecc_matmul_ref(x, ew.lo, ew.hi, ew.parity, ew.scale))
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out_f, out_r, rtol=tol, atol=tol)
+    np.testing.assert_allclose(out_n, out_r, rtol=tol, atol=tol)
+
+
+def test_fused_kernel_corrects_all_single_bit_faults(rng):
+    m, k, n = 16, 512, 256
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.05, jnp.float32)
+    ew = ops.pack_ecc_weights(w)
+    clean = np.asarray(ops.ecc_matmul(x, ew, fuse=True))
+    sel = rng.random(ew.lo.shape) < 0.2
+    bit = rng.integers(0, 64, ew.lo.shape)
+    mlo = np.where(sel & (bit < 32), np.uint32(1) << bit.astype(np.uint32), 0).astype(np.uint32)
+    mhi = np.where(sel & (bit >= 32), np.uint32(1) << (bit - 32).astype(np.uint32), 0).astype(np.uint32)
+    faulty = dataclasses.replace(ew, lo=ew.lo ^ jnp.asarray(mlo), hi=ew.hi ^ jnp.asarray(mhi))
+    out = np.asarray(ops.ecc_matmul(x, faulty, fuse=True))
+    np.testing.assert_array_equal(out, clean)
+    status = np.asarray(ops.scrub(faulty))
+    assert (status == 1).sum() == sel.sum()
+
+
+def test_int8_word_packing_roundtrip(rng):
+    from repro.core import quantize
+
+    q = jnp.asarray(rng.integers(-127, 128, 333, dtype=np.int8))
+    lo, hi = quantize.pack_int8_to_words(q)
+    q2 = quantize.unpack_words_to_int8(lo, hi, q.size)
+    assert np.array_equal(np.asarray(q2), np.asarray(q))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int8, np.uint32, np.float64])
+def test_bit_exact_array_words_roundtrip(dtype, rng):
+    from repro.core import quantize
+
+    arr = rng.standard_normal(97).astype(dtype) if dtype != np.uint32 else rng.integers(
+        0, 2**32, 97, dtype=np.uint32
+    )
+    lo, hi, nbytes = quantize.array_to_words_np(arr)
+    back = np.asarray(quantize.words_to_array(jnp.asarray(lo), jnp.asarray(hi), nbytes, arr.shape, arr.dtype))
+    assert np.array_equal(back.view(np.uint8), arr.view(np.uint8))

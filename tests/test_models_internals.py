@@ -1,0 +1,162 @@
+"""Model internals: attention variants, chunked scans, MoE dispatch."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, lm, moe
+from tests.conftest import tiny_cfg
+
+
+# -- attention ---------------------------------------------------------------
+@pytest.mark.parametrize("hkv", [1, 2, 4])
+def test_flash_matches_full(hkv, rng):
+    q = jnp.asarray(rng.standard_normal((2, 128, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 128, hkv, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 128, hkv, 16)), jnp.float32)
+    a = layers.full_attention(q, k, v, causal=True)
+    b = layers.flash_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_flash_noncausal_ragged_kv(rng):
+    q = jnp.asarray(rng.standard_normal((2, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 24, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 24, 2, 16)), jnp.float32)
+    a = layers.full_attention(q, k, v, causal=False)
+    b = layers.flash_attention(q, k, v, causal=False, q_chunk=16, kv_chunk=24)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 32])
+def test_banded_matches_full_window(window, rng):
+    q = jnp.asarray(rng.standard_normal((2, 128, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 128, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 128, 2, 16)), jnp.float32)
+    a = layers.full_attention(q, k, v, causal=True, window=window)
+    b = layers.banded_attention(q, k, v, window=window, q_chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_decode_attention_grouped_matches_full(rng):
+    # decode vs full attention on the last position
+    q = jnp.asarray(rng.standard_normal((2, 1, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 40, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 40, 2, 16)), jnp.float32)
+    out = layers.decode_attention(q, k, v, cur_len=40)
+    ref = layers.full_attention(q, k, v, causal=False)  # q sees all 40 slots
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# -- SSM chunked scans vs sequential reference --------------------------------
+def _mamba_sequential(decay, inp, c):
+    b, s, di, ds = decay.shape
+    h = np.zeros((b, di, ds), np.float32)
+    ys = []
+    for t in range(s):
+        h = np.asarray(decay[:, t]) * h + np.asarray(inp[:, t])
+        ys.append(np.einsum("bdk,bk->bd", h, np.asarray(c[:, t])))
+    return np.stack(ys, 1), h
+
+
+@settings(max_examples=5, deadline=None)
+@given(s=st.sampled_from([64, 128, 192]))
+def test_mamba_chunked_exact(s):
+    from repro.models.mamba import _ssm_scan_chunked
+
+    rng = np.random.default_rng(s)
+    b, di, ds = 2, 8, 4
+    decay = jnp.asarray(rng.random((b, s, di, ds)) * 0.9 + 0.05, jnp.float32)
+    inp = jnp.asarray(rng.standard_normal((b, s, di, ds)) * 0.1, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((b, s, ds)), jnp.float32)
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    y, hf = _ssm_scan_chunked(decay, inp, c, h0)
+    y_ref, h_ref = _mamba_sequential(decay, inp, c)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), h_ref, atol=1e-4)
+
+
+def test_rwkv_chunked_exact():
+    from repro.models.rwkv6 import _wkv_chunked
+
+    rng = np.random.default_rng(0)
+    b, s, h, n = 2, 128, 2, 8
+    r = jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, n)) * 0.3, jnp.float32)
+    w = jnp.asarray(rng.random((b, s, h, n)) * 0.5 + 0.45, jnp.float32)
+    u = jnp.asarray(rng.standard_normal((h, n)) * 0.3, jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((b, h, n, n)) * 0.1, jnp.float32)
+    y, sf = _wkv_chunked(r, k, v, w, u, s0)
+
+    # sequential reference
+    st_ = np.asarray(s0).copy()
+    ys = []
+    for t in range(s):
+        kv = np.asarray(k[:, t])[..., :, None] * np.asarray(v[:, t])[..., None, :]
+        ys.append(
+            np.einsum("bhi,bhij->bhj", np.asarray(r[:, t]), st_ + np.asarray(u)[:, :, None] * kv)
+        )
+        st_ = np.asarray(w[:, t])[..., :, None] * st_ + kv
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf), st_, atol=1e-4)
+
+
+# -- MoE dispatch --------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(4, 64),
+    e=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 2),
+    cap=st.integers(1, 64),
+)
+def test_sort_dispatch_invariants(t, e, k, cap):
+    rng = np.random.default_rng(t * 100 + e)
+    idx = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+    slot_src, slot_valid, kept = moe.sort_dispatch(idx, e, cap)
+    slot_src = np.asarray(slot_src)
+    slot_valid = np.asarray(slot_valid)
+    # every valid slot points to a real token-slot with the right expert
+    flat_e = np.asarray(idx).reshape(-1)
+    for s, (src, ok) in enumerate(zip(slot_src, slot_valid)):
+        if ok:
+            assert flat_e[src] == s // cap
+    # no token-slot appears twice; capacity respected per expert
+    srcs = slot_src[slot_valid]
+    assert len(np.unique(srcs)) == len(srcs)
+    per_e = slot_valid.reshape(e, cap).sum(1)
+    counts = np.bincount(flat_e, minlength=e)
+    np.testing.assert_array_equal(per_e, np.minimum(counts, cap))
+
+
+def test_moe_matches_dense_reference(rng):
+    cfg = tiny_cfg(family="moe", n_experts=4, top_k=2, capacity_factor=8.0)
+    from repro.models.lm import _moe_spec  # params via spec machinery
+    from repro.models import base
+
+    spec = _moe_spec(cfg)
+    p = base.materialize(spec, jax.random.PRNGKey(0), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)) * 0.5, jnp.float32)
+    out, router_logits = moe.moe_ffn(x, p, cfg)
+
+    # dense reference: full softmax-top2 mixture with no capacity drops
+    x2 = np.asarray(x).reshape(-1, cfg.d_model)
+    logits = x2 @ np.asarray(p["router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    top2 = np.argsort(-probs, axis=-1)[:, :2]
+    ref = np.zeros_like(x2)
+    for ti in range(x2.shape[0]):
+        pr = probs[ti, top2[ti]]
+        pr = pr / pr.sum()
+        for j, e in enumerate(top2[ti]):
+            h = x2[ti] @ np.asarray(p["w1"][e])
+            g = h * (1 / (1 + np.exp(-h)))  # silu
+            up = x2[ti] @ np.asarray(p["w3"][e])
+            ref[ti] += pr[j] * ((g * up) @ np.asarray(p["w2"][e]))
+    np.testing.assert_allclose(
+        np.asarray(out).reshape(-1, cfg.d_model), ref, atol=2e-3, rtol=2e-3
+    )

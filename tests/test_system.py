@@ -1,0 +1,36 @@
+"""End-to-end behaviour tests for the paper's system (top level).
+
+The paper's pipeline: undervolt -> faults -> ECC -> application metric.
+These tests run the whole chain at reduced scale.
+"""
+
+import numpy as np
+
+from repro.core import EccMemoryDomain, PLATFORMS
+
+
+def test_end_to_end_undervolt_read_chain():
+    dom = EccMemoryDomain("vc707", seed=0)
+    w = np.random.default_rng(0).standard_normal((128, 512)).astype(np.float32)
+    dom.write("w", w)
+    # guardband: bit-exact
+    out, st = dom.read("w", voltage=0.61)
+    assert np.array_equal(np.asarray(out), w) and st.faulty_words == 0
+    # critical region: faults appear, most are corrected
+    out, st = dom.read("w", voltage=0.54)
+    assert st.faulty_words > 0
+    assert st.corrected / max(st.faulty_words, 1) > 0.8
+    wrong_ecc = (np.asarray(out) != w).sum()
+    dom2 = EccMemoryDomain("vc707", seed=0, ecc_enabled=False)
+    dom2.write("w", w)
+    out2, _ = dom2.read("w", voltage=0.54)
+    wrong_raw = (np.asarray(out2) != w).sum()
+    assert wrong_ecc < wrong_raw  # ECC strictly reduces corrupted values
+
+
+def test_platform_ordering_matches_paper_fig1():
+    """VC707 >> KC705-A > KC705-B at their crash voltages."""
+    rates = {}
+    for name, prof in PLATFORMS.items():
+        rates[name] = prof.faults_per_mbit(prof.v_crash)
+    assert rates["vc707"] > rates["kc705a"] > rates["kc705b"]
