@@ -31,6 +31,47 @@ def _roofline(m, k, n, fused: bool):
     return t_mem, t_comp
 
 
+def voltage_sweep(n_steps: int = 10) -> dict:
+    """Wall time + Pallas launch count for an N-step undervolt sweep on the
+    paper NN config: historical per-leaf loop vs the batched arena path
+    (one fused inject_scrub launch per step)."""
+    import time
+
+    from repro.configs import get_config
+    from repro.core.nn_accel import EccMLP
+
+    cfg = get_config("paper-nn")
+    volts = np.linspace(0.60, 0.54, n_steps)
+    out = {"kernel": "voltage_sweep", "steps": n_steps,
+           "arch": cfg.name, "layer_sizes": list(cfg.layer_sizes)}
+    # perleaf/batched share host (oracle) masks: pure kernel-count comparison;
+    # "device" is the fully device-resident path (jax.random masks, no host
+    # mask materialisation) — the production voltage-sweep configuration.
+    for label, mask_source, batched in (
+        ("perleaf", "host", False),
+        ("batched", "host", True),
+        ("device", "device", True),
+    ):
+        mlp = EccMLP(cfg.layer_sizes, platform=cfg.platform, seed=0,
+                     mask_source=mask_source)
+        mlp.store()  # untrained weights: we time the rail loop, not accuracy
+
+        def sweep():
+            for v in volts:
+                mlp.set_voltage(float(v), batched=batched)
+
+        sweep()  # warmup / compile
+        ops.reset_launch_count()
+        t0 = time.perf_counter()
+        sweep()
+        out[f"us_{label}"] = (time.perf_counter() - t0) * 1e6
+        out[f"launches_{label}"] = ops.launch_count()
+    out["launch_ratio"] = out["launches_perleaf"] / max(out["launches_batched"], 1)
+    out["speedup"] = out["us_perleaf"] / out["us_batched"]
+    out["speedup_device"] = out["us_perleaf"] / out["us_device"]
+    return out
+
+
 def run() -> list[dict]:
     rows = []
     rng = np.random.default_rng(0)
@@ -60,6 +101,7 @@ def run() -> list[dict]:
                 "fused_traffic_saving": 1 - tm_f / tm_n,
             }
         )
+    rows.append(voltage_sweep())
     emit(rows, "kernel_micro")
     return rows
 
@@ -67,7 +109,17 @@ def run() -> list[dict]:
 def main():
     rows = run()
     for r in rows:
-        if r["kernel"] == "ecc_matmul":
+        if r["kernel"] == "voltage_sweep":
+            print(
+                csv_line(
+                    f"kernel/voltage_sweep_{r['steps']}step", r["us_batched"],
+                    f"speedup_vs_perleaf={r['speedup']:.2f}x;"
+                    f"device_resident={r['speedup_device']:.2f}x;"
+                    f"launches={r['launches_batched']}vs{r['launches_perleaf']}"
+                    f" ({r['launch_ratio']:.0f}x fewer)",
+                )
+            )
+        elif r["kernel"] == "ecc_matmul":
             m, k, n = r["mkn"]
             print(
                 csv_line(

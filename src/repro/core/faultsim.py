@@ -23,6 +23,7 @@ calibration against the paper's counters is exact.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -127,6 +128,10 @@ class FaultField:
             return FlipMasks(z32, z32, np.zeros(0, np.uint8))
         return FlipMasks(np.concatenate(los), np.concatenate(his), np.concatenate(pars))
 
+    def device_field(self) -> "DeviceFaultField":
+        """Device-resident counterpart over the same geometry (fresh stream)."""
+        return DeviceFaultField(self.platform, self.n_words, seed=self.seed)
+
     def sweep_histogram(self, voltages) -> list[dict]:
         """Per-voltage fault statistics (paper Fig. 1 / Fig. 2b machinery)."""
         out = []
@@ -144,3 +149,97 @@ class FaultField:
                 }
             )
         return out
+
+
+# ---------------------------------------------------------------------------
+# Device-resident fault field (DESIGN.md §8/§9)
+# ---------------------------------------------------------------------------
+def _device_chunk_masks(key, m: int, rate, row_sigma):
+    """jax implementation of the failure-threshold draw for one ``m``-word chunk.
+
+    Same statistical model as FaultField._chunk_masks (lognormal row weakness
+    x per-bit Bernoulli with clipped probability) but a different PRNG stream:
+    counter-based threefry on device, so a voltage sweep never materialises a
+    mask in host memory. Bernoulli draws compare raw uint32 random bits to
+    ``floor(p * 2^32)`` — exact to within float32 threshold rounding. FIP
+    holds by construction: the random bits depend only on (key, m), voltage
+    enters through the threshold alone.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    krow, kbits = jax.random.split(key)
+    z = jax.random.normal(krow, (m,), jnp.float32)
+    f_row = jnp.exp(row_sigma * z - 0.5 * row_sigma * row_sigma)
+    p_word = jnp.clip(rate * f_row, 0.0, P_MAX)
+    thresh = (p_word * 4294967296.0).astype(jnp.uint32)  # (m,)
+    bits = jax.random.bits(kbits, (N_BITPLANES, m), jnp.uint32)
+    faulty = bits < thresh[None, :]  # (72, m) bool
+    lo = jnp.zeros((m,), jnp.uint32)
+    hi = jnp.zeros((m,), jnp.uint32)
+    par = jnp.zeros((m,), jnp.uint32)
+    for b in range(32):
+        lo = lo | (faulty[b].astype(jnp.uint32) << b)
+    for b in range(32):
+        hi = hi | (faulty[32 + b].astype(jnp.uint32) << b)
+    for b in range(8):
+        par = par | (faulty[64 + b].astype(jnp.uint32) << b)
+    return lo, hi, par.astype(jnp.uint8)
+
+
+@functools.lru_cache(maxsize=None)
+def _device_chunk_masks_jit():
+    import jax
+
+    return jax.jit(_device_chunk_masks, static_argnames=("m",))
+
+
+class DeviceFaultField:
+    """Failure-threshold field generated on device with ``jax.random``.
+
+    Drop-in for FaultField in the batched undervolting loop: ``masks(v)``
+    returns device arrays and never touches host memory. The NumPy FaultField
+    remains the reference oracle — the two are statistically equivalent
+    (tested) but use different PRNG streams, so bit patterns differ.
+
+    Generation is chunked like the host field (key folded per chunk index) so
+    the transient (72, chunk) bits tensor stays ~72 MiB regardless of arena
+    size, instead of 288 bytes x n_words in one allocation.
+    """
+
+    def __init__(
+        self,
+        platform: PlatformProfile,
+        n_words: int,
+        seed: int = 0,
+        chunk_words: int = 1 << 18,
+    ):
+        import jax
+
+        self.platform = platform
+        self.n_words = int(n_words)
+        self.seed = int(seed)
+        self.chunk_words = int(chunk_words)
+        self._key = jax.random.PRNGKey(self.seed ^ 0xECC)
+
+    def masks(self, v: float):
+        """(lo, hi, parity) device flip masks at rail voltage ``v``."""
+        import jax
+        import jax.numpy as jnp
+
+        rate = jnp.float32(self.platform.fault_rate(v))
+        sigma = jnp.float32(self.platform.row_sigma)
+        fn = _device_chunk_masks_jit()
+        los, his, pars = [], [], []
+        for ci, start in enumerate(range(0, self.n_words, self.chunk_words)):
+            m = min(self.chunk_words, self.n_words - start)
+            lo, hi, par = fn(jax.random.fold_in(self._key, ci), m, rate, sigma)
+            los.append(lo)
+            his.append(hi)
+            pars.append(par)
+        if not los:  # zero-sized memory
+            z32 = jnp.zeros((0,), jnp.uint32)
+            return z32, z32, jnp.zeros((0,), jnp.uint8)
+        if len(los) == 1:
+            return los[0], his[0], pars[0]
+        return jnp.concatenate(los), jnp.concatenate(his), jnp.concatenate(pars)

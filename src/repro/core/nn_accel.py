@@ -15,7 +15,6 @@ Faithful reproduction of the FPGA methodology ([16]'s mapping):
 from __future__ import annotations
 
 import dataclasses
-import zlib
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +22,7 @@ import numpy as np
 
 from repro.core import voltage as vmod
 from repro.core.faultsim import FaultField
+from repro.core.planestore import PlaneStore, leaf_seed
 from repro.core.telemetry import FaultStats
 from repro.kernels import ops as kops
 
@@ -39,10 +39,14 @@ class _Layer:
 class EccMLP:
     """MLP classifier with SECDED-protected int8 weights (paper's accelerator)."""
 
-    def __init__(self, layer_sizes, platform: str = "vc707", seed: int = 0):
+    def __init__(
+        self, layer_sizes, platform: str = "vc707", seed: int = 0,
+        mask_source: str = "host",
+    ):
         self.sizes = tuple(layer_sizes)
         self.platform = vmod.PLATFORMS[platform]
         self.seed = seed
+        self.mask_source = mask_source
         self.layers: list[_Layer] = []
         self.voltage = self.platform.v_nom
         self.ecc_enabled = True
@@ -93,20 +97,42 @@ class EccMLP:
         """Quantize weights to int8 and SECDED-encode them (write to 'BRAM')."""
         for i, l in enumerate(self.layers):
             l.enc = kops.pack_ecc_weights(l.w)
-            fseed = (self.seed * 0x9E3779B1 + zlib.crc32(f"layer{i}".encode())) & 0x7FFFFFFF
-            l.field = FaultField(self.platform, l.enc.lo.size, seed=fseed)
+            l.field = FaultField(
+                self.platform, l.enc.lo.size, seed=leaf_seed(self.seed, f"layer{i}")
+            )
+        self._store = PlaneStore(
+            [l.enc for l in self.layers],
+            [f"layer{i}" for i in range(len(self.layers))],
+            self.platform,
+            seed=self.seed,
+            mask_source=self.mask_source,
+        )
         self.set_voltage(self.voltage, self.ecc_enabled)
 
-    def set_voltage(self, v: float, ecc: bool = True):
-        """Move the rail; regenerate the faulty view of every plane."""
+    def set_voltage(self, v: float, ecc: bool = True, batched: bool = True):
+        """Move the rail; regenerate the faulty view of every plane.
+
+        batched=True: one fused inject+scrub launch over the whole arena;
+        batched=False: the historical per-leaf reference loop (bit-identical,
+        kept for parity tests and the voltage_sweep benchmark baseline).
+        """
         self.voltage = float(v)
         self.ecc_enabled = ecc
+        if batched:
+            leaves, stats = self._store.set_voltage(v, ecc=ecc)
+            for l, faulty in zip(self.layers, leaves):
+                l.faulty = faulty
+            self.stats = stats
+            return
         agg = FaultStats()
         for l in self.layers:
             masks = l.field.masks(v)
-            lo = l.enc.lo ^ jnp.asarray(masks.lo.reshape(l.enc.lo.shape))
-            hi = l.enc.hi ^ jnp.asarray(masks.hi.reshape(l.enc.hi.shape))
-            par = l.enc.parity ^ jnp.asarray(masks.parity.reshape(l.enc.parity.shape))
+            lo, hi, par = kops.inject(
+                l.enc.lo, l.enc.hi, l.enc.parity,
+                jnp.asarray(masks.lo.reshape(l.enc.lo.shape)),
+                jnp.asarray(masks.hi.reshape(l.enc.hi.shape)),
+                jnp.asarray(masks.parity.reshape(l.enc.parity.shape)),
+            )
             if not ecc:
                 # ECC disabled: all 18 bits are data in the real BRAM; we
                 # emulate by making the decoder a no-op (parity recomputed on

@@ -1,0 +1,141 @@
+"""Batched plane store: every EccWeight plane of a model in one flat arena.
+
+The per-leaf undervolting loop launched 2-3 kernels *per weight matrix* per
+voltage step and synced a per-leaf status array back to the host each time.
+The store concatenates all (lo, hi, parity) planes into flat (n_words,)
+arenas at protect time, keeps a leaf -> [offset, offset+size) slice index,
+and makes a voltage step exactly one fused ``inject_scrub`` launch over the
+whole model with a single (8,) counter vector crossing to host
+(DESIGN.md §9).
+
+Mask sources:
+  * "host"   — the NumPy FaultField oracle, one field per leaf keyed exactly
+    like the historical per-leaf path (``leaf_seed``), so the batched step is
+    bit-identical to the per-leaf reference (tested);
+  * "device" — one DeviceFaultField over the arena: counter-based jax.random,
+    masks never exist in host memory (statistically equivalent, FIP holds).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.faultsim import DeviceFaultField, FaultField
+from repro.core.telemetry import FaultStats
+from repro.core.voltage import PlatformProfile
+from repro.kernels import ops as kops
+
+
+def leaf_seed(base_seed: int, key: str) -> int:
+    """Per-leaf fault-field seed; must stay stable across refactors — the
+    fault pattern is a property of (silicon sample, rail), i.e. (seed, leaf)."""
+    return (base_seed * 0x9E3779B1 + zlib.crc32(key.encode())) & 0x7FFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    """Arena placement of one EccWeight leaf's planes."""
+
+    key: str
+    offset: int
+    size: int
+    shape: tuple
+
+
+class PlaneStore:
+    """Flat arena over a sequence of EccWeight leaves (clean planes, device)."""
+
+    def __init__(
+        self,
+        leaves,
+        keys,
+        platform: PlatformProfile,
+        seed: int = 0,
+        mask_source: str = "host",
+    ):
+        assert mask_source in ("host", "device"), mask_source
+        assert len(leaves) == len(set(keys)), "leaf keys must be unique"
+        self.platform = platform
+        self.seed = int(seed)
+        self.mask_source = mask_source
+        slots, off = [], 0
+        los, his, pars = [], [], []
+        for key, leaf in zip(keys, leaves):
+            size = int(leaf.lo.size)
+            slots.append(Slot(key, off, size, tuple(leaf.lo.shape)))
+            los.append(leaf.lo.reshape(-1))
+            his.append(leaf.hi.reshape(-1))
+            pars.append(leaf.parity.reshape(-1))
+            off += size
+        # The arena owns the clean plane data; keep only plane-free leaf
+        # metadata (scale/k/n/fuse) so the store doesn't hold a second full
+        # copy of every plane.
+        self._leaves = [
+            dataclasses.replace(leaf, lo=None, hi=None, parity=None)
+            for leaf in leaves
+        ]
+        self.slots = tuple(slots)
+        self.n_words = off
+        if los:
+            self.lo = jnp.concatenate(los)
+            self.hi = jnp.concatenate(his)
+            self.parity = jnp.concatenate(pars)
+        else:
+            self.lo = jnp.zeros((0,), jnp.uint32)
+            self.hi = jnp.zeros((0,), jnp.uint32)
+            self.parity = jnp.zeros((0,), jnp.uint8)
+        self._host_fields = {
+            s.key: FaultField(platform, s.size, seed=leaf_seed(self.seed, s.key))
+            for s in self.slots
+        }
+        self._device_field = DeviceFaultField(platform, self.n_words, seed=self.seed)
+
+    # -- masks ---------------------------------------------------------------
+    def host_masks(self, v: float):
+        """Concatenated per-leaf oracle masks (bit-identical to the per-leaf
+        path: same fields, same seeds, same order)."""
+        mlos, mhis, mpars = [], [], []
+        for s in self.slots:
+            mk = self._host_fields[s.key].masks(v)
+            mlos.append(mk.lo)
+            mhis.append(mk.hi)
+            mpars.append(mk.parity)
+        cat = lambda xs, dt: (
+            jnp.asarray(np.concatenate(xs)) if xs else jnp.zeros((0,), dt)
+        )
+        return cat(mlos, jnp.uint32), cat(mhis, jnp.uint32), cat(mpars, jnp.uint8)
+
+    def masks(self, v: float):
+        if self.mask_source == "device":
+            return self._device_field.masks(v)
+        return self.host_masks(v)
+
+    # -- the batched voltage step --------------------------------------------
+    def set_voltage(self, v: float, ecc: bool = True):
+        """One fused inject+scrub launch for the whole store.
+
+        Returns (faulty_leaves, FaultStats). faulty_leaves are the input
+        EccWeight leaves with lo/hi/parity replaced by arena slices at rail
+        voltage ``v`` (scale/k/n/fuse untouched).
+        """
+        if self.n_words == 0:
+            return list(self._leaves), FaultStats()
+        mlo, mhi, mpar = self.masks(v)
+        flo, fhi, fpar, counters = kops.inject_scrub(
+            self.lo, self.hi, self.parity, mlo, mhi, mpar, reencode=not ecc
+        )
+        stats = FaultStats.from_counters(np.asarray(counters), words=self.n_words)
+        leaves = [
+            dataclasses.replace(
+                leaf,
+                lo=flo[s.offset : s.offset + s.size].reshape(s.shape),
+                hi=fhi[s.offset : s.offset + s.size].reshape(s.shape),
+                parity=fpar[s.offset : s.offset + s.size].reshape(s.shape),
+            )
+            for s, leaf in zip(self.slots, self._leaves)
+        ]
+        return leaves, stats

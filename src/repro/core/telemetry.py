@@ -8,6 +8,14 @@ import numpy as np
 
 from repro.core import ecc
 
+# Field order of the device-side counter vector produced by the fused
+# inject_scrub kernel (kernels/inject_scrub.py). `words` is not reduced on
+# device — the caller knows the store size.
+COUNTER_FIELDS = (
+    "clean", "corrected", "detected", "silent",
+    "words_1bit", "words_2bit", "words_multi", "faulty_bits",
+)
+
 
 @dataclasses.dataclass
 class FaultStats:
@@ -41,6 +49,19 @@ class FaultStats:
             "detectable": self.detected / n,
             "silent": self.silent / n,
         }
+
+    @classmethod
+    def from_counters(cls, counters, words: int) -> "FaultStats":
+        """Build stats from the fused kernel's device-reduced counter vector."""
+        c = np.asarray(counters).reshape(-1)
+        assert c.size >= len(COUNTER_FIELDS), c.shape
+        return cls(words=int(words), **{
+            f: int(c[i]) for i, f in enumerate(COUNTER_FIELDS)
+        })
+
+    def counters(self) -> np.ndarray:
+        """Inverse of from_counters (testing / serialization)."""
+        return np.array([getattr(self, f) for f in COUNTER_FIELDS], np.int64)
 
     @classmethod
     def from_decode(cls, status: np.ndarray, flip_counts: np.ndarray) -> "FaultStats":

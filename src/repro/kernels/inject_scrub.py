@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: fused undervolt fault injection + SECDED scrub.
+
+The runtime undervolting loop used to pay two full HBM round-trips over every
+codeword plane per voltage step — one streaming XOR (``fault_inject``) and one
+decode pass (``secded.decode_2d``) whose only consumed output was the per-word
+status — plus a third encode pass in the no-ECC baseline. This kernel does all
+of it in a single VMEM tile pass (DESIGN.md §9):
+
+  * XOR the flip masks into the (lo, hi, parity) planes and write them back
+    (the faulty-at-this-voltage view the serving read path consumes),
+  * optionally recompute parity over the faulty data (``reencode=True``, the
+    no-ECC baseline: the decoder becomes a syndrome-0 no-op),
+  * compute the SECDED syndrome and classify every word clean/corrected/
+    detected *in registers*, without materialising corrected planes,
+  * popcount the masks for the ground-truth flip distribution, and
+  * reduce the joint (ECC outcome x ground truth) histogram into a single
+    (1, 128) int32 counter block accumulated across all grid steps — the only
+    telemetry that ever crosses back to the host.
+
+Counter layout (first ``N_COUNTERS`` lanes, rest zero) matches
+``telemetry.COUNTER_FIELDS``:
+  0 clean (status 0, zero flips)      4 words_1bit
+  1 corrected (status 1, one flip)    5 words_2bit
+  2 detected (DED)                    6 words_multi (>= 3 flips)
+  3 silent (>= 2 flips, no DED)       7 faulty_bits (total flips)
+
+VMEM budget per grid step (default block 256x512): 6 input planes
+(2x u32 + u8, twice) ~2.25 MiB + 3 output planes ~1.1 MiB + counters
+(negligible) ~= 3.4 MiB — comfortably inside a v5e core's 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hsiao
+from repro.kernels.secded import _compute_parity
+
+_U32 = jnp.uint32
+
+N_COUNTERS = 8
+_CNT_LANES = 128  # lane-aligned counter row; only the first N_COUNTERS are used
+
+
+def _popcount32(v):
+    """Per-lane popcount of a uint32 plane -> int32."""
+    v = v - ((v >> 1) & _U32(0x55555555))
+    v = (v & _U32(0x33333333)) + ((v >> 2) & _U32(0x33333333))
+    v = (v + (v >> 4)) & _U32(0x0F0F0F0F)
+    return ((v * _U32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _inject_scrub_kernel(
+    lo_ref, hi_ref, par_ref, mlo_ref, mhi_ref, mpar_ref,
+    olo_ref, ohi_ref, opar_ref, cnt_ref, *, reencode,
+):
+    mlo = mlo_ref[...]
+    mhi = mhi_ref[...]
+    mpar = mpar_ref[...]
+    flo = lo_ref[...] ^ mlo
+    fhi = hi_ref[...] ^ mhi
+    fpar = par_ref[...] ^ mpar
+    if reencode:
+        # No-ECC baseline: parity is consistent with the faulty data, so the
+        # read-path decoder is a pass-through and faults flow into the matmul.
+        fpar = _compute_parity(flo, fhi).astype(jnp.uint8)
+    olo_ref[...] = flo
+    ohi_ref[...] = fhi
+    opar_ref[...] = fpar
+
+    # Scrub: syndrome + gather-free classification (same chains as decode_2d,
+    # minus the corrected-plane construction nobody reads here).
+    synd = _compute_parity(flo, fhi) ^ fpar.astype(_U32)
+    matched = jnp.zeros_like(flo, dtype=jnp.bool_)
+    for d in range(hsiao.N_DATA):
+        matched = matched | (synd == _U32(int(hsiao.DATA_COLS[d])))
+    for r in range(hsiao.N_PARITY):
+        matched = matched | (synd == _U32(1 << r))
+    clean = synd == _U32(0)
+    status = jnp.where(clean, jnp.int32(0), jnp.where(matched, jnp.int32(1), jnp.int32(2)))
+
+    flips = _popcount32(mlo) + _popcount32(mhi) + _popcount32(mpar.astype(_U32))
+    detected = status == 2
+    tallies = (
+        clean & (flips == 0),                 # 0: true clean
+        (status == 1) & (flips == 1),         # 1: genuinely corrected singles
+        detected,                             # 2: DED flag raised
+        (flips >= 2) & ~detected,             # 3: silent risk
+        flips == 1,                           # 4: ground-truth 1-bit words
+        flips == 2,                           # 5: ground-truth 2-bit words
+        flips >= 3,                           # 6: ground-truth multi-bit words
+    )
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, _CNT_LANES), 1)
+    vals = jnp.zeros((1, _CNT_LANES), jnp.int32)
+    for idx, t in enumerate(tallies):
+        vals = vals + jnp.where(lane == idx, jnp.sum(t.astype(jnp.int32)), 0)
+    vals = vals + jnp.where(lane == 7, jnp.sum(flips), 0)
+
+    first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0)
+
+    @pl.when(first)
+    def _():
+        cnt_ref[...] = vals
+
+    @pl.when(jnp.logical_not(first))
+    def _():
+        cnt_ref[...] = cnt_ref[...] + vals
+
+
+@functools.partial(jax.jit, static_argnames=("block", "reencode", "interpret"))
+def inject_scrub_2d(
+    lo, hi, parity, mlo, mhi, mparity, *, block=(256, 512), reencode=False,
+    interpret=False,
+):
+    """Fused inject + scrub on 2D word planes.
+
+    All planes (R, C). Returns (faulty_lo, faulty_hi, faulty_parity,
+    counters (1, _CNT_LANES) int32) with counters accumulated over the grid.
+    """
+    bm, bn = block
+    grid = (pl.cdiv(lo.shape[0], bm), pl.cdiv(lo.shape[1], bn))
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    cnt_spec = pl.BlockSpec((1, _CNT_LANES), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_inject_scrub_kernel, reencode=reencode),
+        grid=grid,
+        in_specs=[spec] * 6,
+        out_specs=[spec, spec, spec, cnt_spec],
+        out_shape=(
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint8),
+            jax.ShapeDtypeStruct((1, _CNT_LANES), jnp.int32),
+        ),
+        interpret=interpret,
+    )(lo, hi, parity, mlo, mhi, mparity)

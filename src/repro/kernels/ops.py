@@ -19,10 +19,29 @@ import numpy as np
 
 from repro.kernels import ecc_matmul as _mm
 from repro.kernels import fault_inject as _fi
+from repro.kernels import inject_scrub as _isc
 from repro.kernels import ref as _ref
 from repro.kernels import secded as _secded
 
 LANES = 512  # default 2D width for flattened planes (multiple of 128)
+
+# Pallas launch accounting (benchmarks/kernel_micro voltage_sweep). Each
+# wrapper below executes exactly one pallas_call per eager invocation; calls
+# traced inside an outer jit are counted once per trace, so only eager-path
+# comparisons (the engine voltage loop) are meaningful.
+_launches = {"n": 0}
+
+
+def reset_launch_count() -> None:
+    _launches["n"] = 0
+
+
+def launch_count() -> int:
+    return _launches["n"]
+
+
+def _count_launch(n: int = 1) -> None:
+    _launches["n"] += n
 
 
 def _round_up(x: int, m: int) -> int:
@@ -57,6 +76,7 @@ def _to_2d(*planes, lanes=LANES, block_rows=256):
 def encode(lo: jnp.ndarray, hi: jnp.ndarray, *, interpret: bool | None = None):
     """SECDED parity for word planes of any shape; returns uint8 like lo."""
     interpret = use_interpret() if interpret is None else interpret
+    _count_launch()
     (lo2, hi2), n, block = _to_2d(lo, hi)
     par = _secded.encode_2d(lo2, hi2, block=block, interpret=interpret)
     return par.reshape(-1)[:n].reshape(lo.shape)
@@ -65,6 +85,7 @@ def encode(lo: jnp.ndarray, hi: jnp.ndarray, *, interpret: bool | None = None):
 def decode(lo, hi, parity, *, interpret: bool | None = None):
     """SECDED decode for planes of any shape -> (lo', hi', status int32)."""
     interpret = use_interpret() if interpret is None else interpret
+    _count_launch()
     (lo2, hi2, par2), n, block = _to_2d(lo, hi, parity)
     olo, ohi, st = _secded.decode_2d(lo2, hi2, par2, block=block, interpret=interpret)
     unpad = lambda a: a.reshape(-1)[:n].reshape(lo.shape)
@@ -74,10 +95,34 @@ def decode(lo, hi, parity, *, interpret: bool | None = None):
 def inject(lo, hi, parity, mlo, mhi, mparity, *, interpret: bool | None = None):
     """Apply XOR flip masks to planes of any shape."""
     interpret = use_interpret() if interpret is None else interpret
+    _count_launch()
     (a, b, c, d, e, f), n, block = _to_2d(lo, hi, parity, mlo, mhi, mparity)
     olo, ohi, opar = _fi.inject_2d(a, b, c, d, e, f, block=block, interpret=interpret)
     unpad = lambda x: x.reshape(-1)[:n].reshape(lo.shape)
     return unpad(olo), unpad(ohi), unpad(opar)
+
+
+def inject_scrub(
+    lo, hi, parity, mlo, mhi, mparity, *, reencode: bool = False,
+    interpret: bool | None = None,
+):
+    """Fused inject + scrub: one pass over the planes instead of two (three
+    with the no-ECC re-encode).
+
+    Returns (faulty_lo, faulty_hi, faulty_parity, counters) where counters is
+    an (N_COUNTERS,) int32 device vector ordered like telemetry.COUNTER_FIELDS.
+    Zero-padding added by the 2D layout decodes clean with zero flips, so the
+    pad count is subtracted from the clean counter before returning.
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    _count_launch()
+    (a, b, c, d, e, f), n, block = _to_2d(lo, hi, parity, mlo, mhi, mparity)
+    olo, ohi, opar, cnt = _isc.inject_scrub_2d(
+        a, b, c, d, e, f, block=block, reencode=reencode, interpret=interpret
+    )
+    counters = cnt.reshape(-1)[: _isc.N_COUNTERS].at[0].add(n - a.size)
+    unpad = lambda x: x.reshape(-1)[:n].reshape(lo.shape)
+    return unpad(olo), unpad(ohi), unpad(opar), counters
 
 
 # ---------------------------------------------------------------------------
@@ -158,8 +203,9 @@ def ecc_matmul(
         mp, np_ = _round_up(m, bm), _round_up(n, bn)
         xp = jnp.pad(xp, ((0, mp - m), (0, 0)))
         pad_n = ((0, 0), (0, np_ - n))
+        _count_launch()
         out = _mm.ecc_matmul_2d(
-            jnp.pad(xp, ((0, 0), (0, 0))),
+            xp,
             jnp.pad(w.lo, pad_n), jnp.pad(w.hi, pad_n), jnp.pad(w.parity, pad_n),
             block=(bm, bk8 * 8, bn), interpret=interpret,
         )[:m, :n]

@@ -22,6 +22,29 @@ def inject_ref(lo, hi, parity, mlo, mhi, mparity):
     return lo ^ mlo, hi ^ mhi, parity ^ mparity
 
 
+def inject_scrub_ref(lo, hi, parity, mlo, mhi, mparity, reencode=False):
+    """Oracle for the fused kernel: separate inject -> (encode) -> decode.
+
+    Returns (faulty_lo, faulty_hi, faulty_parity, counters) with counters in
+    telemetry.COUNTER_FIELDS order, built through FaultStats.from_decode so
+    the two paths share one classification truth.
+    """
+    from repro.core.faultsim import FlipMasks
+    from repro.core.telemetry import FaultStats
+
+    flo, fhi, fpar = inject_ref(lo, hi, parity, mlo, mhi, mparity)
+    if reencode:
+        fpar = ecc.encode(flo, fhi)
+    _, _, status = ecc.decode(flo, fhi, fpar)
+    flips = FlipMasks(
+        np.asarray(mlo).reshape(-1),
+        np.asarray(mhi).reshape(-1),
+        np.asarray(mparity).reshape(-1),
+    ).flip_counts()
+    counters = FaultStats.from_decode(np.asarray(status), flips).counters()
+    return flo, fhi, fpar, counters
+
+
 def pack_ecc_weights_np(w_int8: np.ndarray):
     """int8 (K, N), K % 8 == 0 -> (lo, hi) uint32 (K/8, N) + parity uint8.
 

@@ -28,6 +28,7 @@ import numpy as np
 from repro.core import UndervoltController, voltage as vmod
 from repro.core.faultsim import FaultField
 from repro.core.memory import EccMemoryDomain
+from repro.core.planestore import PlaneStore, leaf_seed
 from repro.core.telemetry import FaultStats
 from repro.kernels import ops as kops
 from repro.models import lm
@@ -44,6 +45,12 @@ class ReliabilityConfig:
     fuse: bool = True  # inline mode: fused Pallas read path vs naive
     seed: int = 0
     controller_step_v: float = 0.01
+    # inline mode: one fused inject+scrub launch over the whole-model plane
+    # arena (True) vs the historical per-leaf loop (False, reference path)
+    batched: bool = True
+    # "host": NumPy FaultField oracle (bit-identical to per-leaf path);
+    # "device": counter-based jax.random masks, never materialised on host
+    mask_source: str = "host"
 
 
 def _pack_stacked(leaf) -> kops.EccWeight:
@@ -127,6 +134,26 @@ class ServingEngine:
             )
             self._clean_inline = self.params
             self._fields: dict[str, FaultField] = {}
+            # Batched plane arena: flatten once, record which flat slots hold
+            # EccWeight planes, and key each by its tree path (the per-leaf
+            # fault-field seeds depend on it).
+            flat, self._inline_treedef = jax.tree_util.tree_flatten_with_path(
+                self._clean_inline,
+                is_leaf=lambda x: isinstance(x, kops.EccWeight),
+            )
+            self._inline_template = [leaf for _, leaf in flat]
+            self._ecc_slots = [
+                (i, jax.tree_util.keystr(path))
+                for i, (path, leaf) in enumerate(flat)
+                if isinstance(leaf, kops.EccWeight)
+            ]
+            self._store = PlaneStore(
+                [self._inline_template[i] for i, _ in self._ecc_slots],
+                [key for _, key in self._ecc_slots],
+                self.platform,
+                seed=rel.seed,
+                mask_source=rel.mask_source,
+            )
             self.voltage = rel.voltage or self.platform.v_nom
             self.set_voltage(self.voltage)
 
@@ -135,6 +162,10 @@ class ServingEngine:
         )
         self._prefill = jax.jit(
             lambda p, t, c: lm.prefill(p, t, cfg, c)
+        )
+        self._decode_loop = jax.jit(
+            lambda p, t, c, s0, n: lm.greedy_decode_loop(p, t, cfg, c, s0, n),
+            static_argnums=(4,),
         )
 
     # -- voltage control ------------------------------------------------------
@@ -146,10 +177,25 @@ class ServingEngine:
             self.domain.set_voltage(v)
             self.params, stats = self.domain.read_pytree("w", self._clean_params)
             self.stats.merge(stats)
+        elif self.rel.batched:
+            self._apply_inline_faults_batched(v)
         else:
             self._apply_inline_faults(v)
 
+    def _apply_inline_faults_batched(self, v: float):
+        """Whole-model voltage step: one fused inject+scrub kernel launch over
+        the plane arena; only the (8,) counter vector crosses to host."""
+        leaves, stats = self._store.set_voltage(v, ecc=self.rel.ecc)
+        flat = list(self._inline_template)
+        for (i, _), leaf in zip(self._ecc_slots, leaves):
+            flat[i] = leaf
+        self.params = jax.tree_util.tree_unflatten(self._inline_treedef, flat)
+        self.stats.merge(stats)
+        self._last_scrub = stats
+
     def _apply_inline_faults(self, v: float):
+        """Per-leaf reference path (one inject + one scrub launch per leaf,
+        masks generated on host). Kept for parity tests and benchmarks."""
         flat, treedef = jax.tree_util.tree_flatten_with_path(
             self._clean_inline, is_leaf=lambda x: isinstance(x, kops.EccWeight)
         )
@@ -162,18 +208,16 @@ class ServingEngine:
             key = jax.tree_util.keystr(path)
             field = self._fields.get(key)
             if field is None:
-                import zlib
-
-                fseed = (self.rel.seed * 0x9E3779B1 + zlib.crc32(key.encode())) & 0x7FFFFFFF
-                field = FaultField(self.platform, leaf.lo.size, seed=fseed)
+                field = FaultField(
+                    self.platform, leaf.lo.size, seed=leaf_seed(self.rel.seed, key)
+                )
                 self._fields[key] = field
             masks = field.masks(v)
             mlo = jnp.asarray(masks.lo.reshape(leaf.lo.shape))
             mhi = jnp.asarray(masks.hi.reshape(leaf.hi.shape))
             mpar = jnp.asarray(masks.parity.reshape(leaf.parity.shape))
-            faulty = dataclasses.replace(
-                leaf, lo=leaf.lo ^ mlo, hi=leaf.hi ^ mhi, parity=leaf.parity ^ mpar
-            )
+            flo, fhi, fpar = kops.inject(leaf.lo, leaf.hi, leaf.parity, mlo, mhi, mpar)
+            faulty = dataclasses.replace(leaf, lo=flo, hi=fhi, parity=fpar)
             if not self.rel.ecc:
                 # No-ECC baseline: zero the parity contribution by decoding off
                 # — we emulate by treating planes as raw (decode would mis-fire),
@@ -188,18 +232,29 @@ class ServingEngine:
         self._last_scrub = agg
 
     # -- serving --------------------------------------------------------------
-    def generate(self, prompts: np.ndarray, n_tokens: int):
-        """Greedy-decode a batch. prompts: (B, S0) int32. Returns (B, n)."""
+    def generate(self, prompts: np.ndarray, n_tokens: int, *, use_scan: bool = True):
+        """Greedy-decode a batch. prompts: (B, S0) int32. Returns (B, n).
+
+        use_scan=True rolls the decode loop into one lax.scan program (one
+        dispatch for the whole rollout; compiled once per n_tokens value);
+        use_scan=False is the historical per-token Python loop, kept as the
+        reference the scan path is tested against.
+        """
         b, s0 = prompts.shape
         cache = lm.init_cache(self.cfg, b, self.max_len)
         logits, cache = self._prefill(self.params, jnp.asarray(prompts), cache)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        outs = [tok]
-        for i in range(n_tokens - 1):
-            logits, cache = self._decode(self.params, tok, cache, s0 + i)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-            outs.append(tok)
-        return np.concatenate([np.asarray(o) for o in outs], axis=1)
+        if not use_scan:
+            outs = [tok]
+            for i in range(n_tokens - 1):
+                logits, cache = self._decode(self.params, tok, cache, s0 + i)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+                outs.append(tok)
+            return np.concatenate([np.asarray(o) for o in outs], axis=1)
+        toks, _ = self._decode_loop(
+            self.params, tok, cache, jnp.int32(s0), n_tokens - 1
+        )
+        return np.concatenate([np.asarray(tok), np.asarray(toks)], axis=1)
 
     # -- runtime undervolting loop ---------------------------------------------
     def autotune_voltage(self, max_rounds: int = 60):

@@ -1,0 +1,85 @@
+"""Import hypothesis, or fall back to a tiny deterministic shim.
+
+The test container does not always ship hypothesis; property tests then run a
+fixed-seed sampled loop (25 examples) instead of failing collection. Only the
+strategy surface the suite actually uses is implemented: ``integers``,
+``sampled_from``, ``floats``, and ``tuples``.
+"""
+
+from __future__ import annotations
+
+
+import numpy as np
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def sample(self, rng):
+            return int(rng.integers(self.lo, self.hi, endpoint=True, dtype=np.uint64))
+
+    class _SampledFrom:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def sample(self, rng):
+            return self.elements[int(rng.integers(0, len(self.elements)))]
+
+    class _Floats:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def sample(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _Tuples:
+        def __init__(self, strats):
+            self.strats = strats
+
+        def sample(self, rng):
+            return tuple(s.sample(rng) for s in self.strats)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def tuples(*strats):
+            return _Tuples(strats)
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(*arg_strats, **kw_strats):
+        def deco(f):
+            # No functools.wraps: pytest must see a zero-arg signature, not
+            # the wrapped function's parameters (it would demand fixtures).
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(25):
+                    args = [s.sample(rng) for s in arg_strats]
+                    kwargs = {k: s.sample(rng) for k, s in kw_strats.items()}
+                    f(*args, **kwargs)
+
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+
+        return deco
+
+    st = _Strategies()
+
+__all__ = ["given", "settings", "st"]

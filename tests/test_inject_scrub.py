@@ -1,0 +1,142 @@
+"""Fused inject+scrub kernel vs the separate-pass oracle; device PRNG field."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.faultsim import DeviceFaultField, FaultField, _popcount32
+from repro.core.telemetry import COUNTER_FIELDS, FaultStats
+from repro.core.voltage import PLATFORMS
+from repro.kernels import ops, ref
+
+
+def _sparse_masks(rng, shape, density_rounds=4):
+    mlo = rng.integers(0, 2**32, shape, dtype=np.uint32)
+    mhi = rng.integers(0, 2**32, shape, dtype=np.uint32)
+    mpar = rng.integers(0, 256, shape).astype(np.uint8)
+    for _ in range(density_rounds):
+        mlo &= rng.integers(0, 2**32, shape, dtype=np.uint32)
+        mhi &= rng.integers(0, 2**32, shape, dtype=np.uint32)
+        mpar &= rng.integers(0, 256, shape).astype(np.uint8)
+    return mlo, mhi, mpar
+
+
+@pytest.mark.parametrize("shape", [(64,), (1000,), (256, 512), (7, 13)])
+@pytest.mark.parametrize("reencode", [False, True])
+def test_fused_matches_separate_inject_decode(shape, reencode, rng):
+    lo = jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    hi = jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    par = ops.encode(lo, hi)
+    mlo, mhi, mpar = _sparse_masks(rng, shape)
+    # craft known fault classes in the first words: double-bit (DED),
+    # single data bit (corrected), single parity bit (corrected, data fine)
+    flat = lambda m: m.reshape(-1)
+    flat(mlo)[0], flat(mhi)[0], flat(mpar)[0] = 0b11, 0, 0
+    flat(mlo)[1], flat(mhi)[1], flat(mpar)[1] = 0b1, 0, 0
+    flat(mlo)[2], flat(mhi)[2], flat(mpar)[2] = 0, 0, 0b100
+    mlo, mhi, mpar = jnp.asarray(mlo), jnp.asarray(mhi), jnp.asarray(mpar)
+
+    flo, fhi, fpar, cnt = ops.inject_scrub(lo, hi, par, mlo, mhi, mpar, reencode=reencode)
+    rlo, rhi, rpar, rcnt = ref.inject_scrub_ref(lo, hi, par, mlo, mhi, mpar, reencode=reencode)
+    assert np.array_equal(np.asarray(flo), np.asarray(rlo))
+    assert np.array_equal(np.asarray(fhi), np.asarray(rhi))
+    assert np.array_equal(np.asarray(fpar), np.asarray(rpar))
+    assert np.array_equal(np.asarray(cnt), rcnt)
+    # the separate kernels agree too (inject then decode status histogram)
+    ilo, ihi, ipar = ops.inject(lo, hi, par, mlo, mhi, mpar)
+    assert np.array_equal(np.asarray(flo), np.asarray(ilo))
+    if not reencode:
+        assert np.array_equal(np.asarray(fpar), np.asarray(ipar))
+        _, _, status = ops.decode(ilo, ihi, ipar)
+        stats = FaultStats.from_counters(np.asarray(cnt), words=int(np.prod(shape)))
+        assert stats.detected == int((np.asarray(status) == 2).sum())
+        assert stats.corrected <= int((np.asarray(status) == 1).sum())
+    if reencode:
+        # no-ECC baseline: parity consistent with faulty data => no DED ever
+        assert np.array_equal(np.asarray(fpar), np.asarray(ops.encode(flo, fhi)))
+        assert FaultStats.from_counters(np.asarray(cnt), words=1).detected == 0
+
+
+def test_counters_roundtrip_faultstats(rng):
+    shape = (4096,)
+    lo = jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    hi = jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+    par = ops.encode(lo, hi)
+    mlo, mhi, mpar = (jnp.asarray(m) for m in _sparse_masks(rng, shape, 5))
+    *_, cnt = ops.inject_scrub(lo, hi, par, mlo, mhi, mpar)
+    stats = FaultStats.from_counters(np.asarray(cnt), words=shape[0])
+    assert stats.words == shape[0]
+    assert np.array_equal(stats.counters(), np.asarray(cnt))
+    assert len(COUNTER_FIELDS) == np.asarray(cnt).size
+    # totals are conserved: every word is in exactly one ECC-outcome class
+    assert stats.clean + stats.corrected + stats.detected + stats.silent == stats.words
+
+
+@pytest.mark.parametrize("voltage", [0.56, 0.55, 0.54])
+def test_device_faultfield_statistics_vs_oracle(voltage):
+    plat = PLATFORMS["vc707"]
+    n = 1 << 18
+    host = FaultField(plat, n, seed=11)
+    dev = DeviceFaultField(plat, n, seed=11)
+    hm = host.masks(voltage)
+    dlo, dhi, dpar = (np.asarray(x) for x in dev.masks(voltage))
+    dflips = (
+        _popcount32(dlo) + _popcount32(dhi) + _popcount32(dpar.astype(np.uint32))
+    )
+    h_total, d_total = hm.total_flips(), int(dflips.sum())
+    assert h_total > 100  # meaningful sample at these voltages
+    # same model, different PRNG stream: totals within sampling noise
+    # (lognormal row clustering inflates variance ~e^{sigma^2} over Poisson)
+    assert 0.6 < d_total / h_total < 1.6, (voltage, h_total, d_total)
+    # faulty-word class mix also matches
+    h_counts, d_counts = hm.flip_counts(), dflips
+    h_frac = (h_counts >= 2).sum() / max((h_counts >= 1).sum(), 1)
+    d_frac = (d_counts >= 2).sum() / max((d_counts >= 1).sum(), 1)
+    assert abs(h_frac - d_frac) < 0.1, (voltage, h_frac, d_frac)
+
+
+def test_faultfield_public_api_and_device_bridge():
+    """sweep_histogram stays on the host field; device_field bridges across."""
+    plat = PLATFORMS["vc707"]
+    host = FaultField(plat, 4096, seed=2)
+    hist = host.sweep_histogram([0.8, 0.54])
+    assert hist[0]["faulty_bits"] == 0  # inside the guardband
+    assert hist[1]["faulty_bits"] > 0
+    dev = host.device_field()
+    assert isinstance(dev, DeviceFaultField)
+    assert (dev.n_words, dev.seed) == (host.n_words, host.seed)
+
+
+def test_device_faultfield_multichunk():
+    """Chunked generation (bounded transients): deterministic, FIP across
+    chunk boundaries, later chunks populated. Like the host field, the mask
+    pattern is a function of (seed, chunk_words) — chunking is part of the
+    stream, so chunk_words must stay fixed for a given store."""
+    plat = PLATFORMS["vc707"]
+    n = 3000
+    f = DeviceFaultField(plat, n, seed=9, chunk_words=1024)  # 3 chunks
+    a = tuple(np.asarray(x) for x in f.masks(0.54))
+    b = tuple(np.asarray(x) for x in f.masks(0.54))
+    hi_v = tuple(np.asarray(x) for x in f.masks(0.56))
+    for x, y, z in zip(a, b, hi_v):
+        assert x.shape == (n,)
+        assert np.array_equal(x, y)  # repeated calls identical
+        assert not np.any(z & ~x)  # FIP holds under chunking
+    assert a[0][2048:].any() or a[1][2048:].any()  # last chunk populated
+
+
+def test_device_faultfield_fip():
+    """Fault Inclusion Property: lower rail => superset fault pattern."""
+    plat = PLATFORMS["vc707"]
+    dev = DeviceFaultField(plat, 1 << 16, seed=5)
+    prev = None
+    for v in (0.58, 0.56, 0.55, 0.54):
+        cur = tuple(np.asarray(x) for x in dev.masks(v))
+        if prev is not None:
+            for p, c in zip(prev, cur):
+                assert not np.any(p & ~c), v
+        prev = cur
+    # inside the guardband: zero faults
+    for m in (np.asarray(x) for x in dev.masks(0.8)):
+        assert not m.any()

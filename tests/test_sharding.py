@@ -12,13 +12,13 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as shd
+from repro.launch.mesh import compat_abstract_mesh, compat_make_mesh
 
 
 @pytest.fixture(scope="module")
 def mesh():
     # single-device mesh: rule logic only depends on axis names/sizes
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 def test_spec_rules_basic(mesh):
@@ -33,7 +33,7 @@ def test_spec_rules_basic(mesh):
 
 def test_spec_divisibility_fallback():
     # AbstractMesh: rule logic only needs axis names/sizes, no devices
-    m = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+    m = compat_abstract_mesh((1, 2), ("data", "model"))
     # 3 not divisible by model=2 -> replicate, next axis picks model up
     assert shd.spec_for(("experts", "ffn"), (3, 8), m, False) == P(None, "model")
 
@@ -48,13 +48,13 @@ def test_dryrun_8dev_subprocess(tmp_path):
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_smoke_config
         from repro.distributed import sharding as shd
+        from repro.launch.mesh import compat_make_mesh
         from repro.models import lm
         from repro.optim import adamw
         from repro.train import train_step as ts
 
         cfg = get_smoke_config("qwen3-0.6b")
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat_make_mesh((2, 4), ("data", "model"))
         tcfg = ts.TrainConfig(optimizer=adamw.AdamWConfig(), remat="full")
         fn = ts.make_train_step(cfg, tcfg)
         pstruct = lm.param_struct(cfg)
@@ -71,6 +71,8 @@ def test_dryrun_8dev_subprocess(tmp_path):
                 fn, in_shardings=(pshard, opt_shard, bshard)
             ).lower(pstruct, opt_struct, batch).compile()
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # older jax: one entry per program
+            ca = ca[0]
         print(json.dumps({"flops": float(ca.get("flops", 0)), "ok": True}))
         """
     )
