@@ -1,0 +1,81 @@
+"""CI benchmark-regression gate for the fused inject+scrub kernel.
+
+Compares the fresh ``benchmarks/out/kernel_micro.json`` against the
+checked-in ``benchmarks/baseline/kernel_micro.json`` and exits non-zero when
+the fused kernel slowed down by more than the threshold (default 20%).
+
+Raw wall-clocks are useless across runners (CI machines differ 3-5x), so the
+gated metric is ``fused_over_pair``: the fused inject+scrub time divided by
+the separate inject->decode pair measured in the same process. The pair is
+the workload the fused kernel replaced, touches the same planes through the
+same Pallas machinery, and so cancels machine speed, interpret-mode overhead
+and BLAS/thread noise — what's left is the fused kernel's relative cost,
+which is what a code change can regress.
+
+Usage: python -m benchmarks.check_regression [--threshold 0.20]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+BASELINE = os.path.join(HERE, "baseline", "kernel_micro.json")
+CURRENT = os.path.join(HERE, "out", "kernel_micro.json")
+
+
+def _gated_rows(rows: list[dict]) -> dict:
+    return {
+        r["words"]: r["fused_over_pair"]
+        for r in rows
+        if r.get("kernel") == "inject_scrub"
+    }
+
+
+def check(threshold: float = 0.20) -> int:
+    with open(BASELINE) as f:
+        base = _gated_rows(json.load(f))
+    with open(CURRENT) as f:
+        cur = _gated_rows(json.load(f))
+    if not base:
+        print("FAIL: baseline has no inject_scrub rows", file=sys.stderr)
+        return 2
+    missing = sorted(set(base) - set(cur))
+    if missing:
+        print(f"FAIL: current run lacks inject_scrub rows for {missing}", file=sys.stderr)
+        return 2
+    # Per-size ratios are reported for debugging; the gate is the geometric
+    # mean across sizes — residual timer noise per size is uncorrelated, so
+    # the pooled metric is ~sqrt(n) tighter than any single row.
+    logs = 0.0
+    for words, ref in sorted(base.items()):
+        now = cur[words]
+        logs += math.log(now / ref)
+        print(
+            f"inject_scrub {words}w: fused_over_pair {now:.3f} "
+            f"(baseline {ref:.3f}, {now / ref - 1.0:+.1%})"
+        )
+    rel = math.exp(logs / len(base)) - 1.0
+    print(f"inject_scrub pooled: {rel:+.1%} vs baseline (gate at +{threshold:.0%})")
+    if rel > threshold:
+        print(
+            f"FAIL: fused inject+scrub slowed down > {threshold:.0%} vs baseline",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=0.20)
+    args = ap.parse_args()
+    sys.exit(check(args.threshold))
+
+
+if __name__ == "__main__":
+    main()

@@ -59,6 +59,32 @@ def main():
         f"accelerator power {eng.power_w():.2f} W (nominal {ServingEngine(cfg, params, rel=ReliabilityConfig(voltage=1.0)).power_w():.2f} W)"
     )
 
+    # Multi-rail: embedding / attention / MLP each walk their own rail down
+    # to their own first-DED point (DESIGN.md §10). The single rail above had
+    # to stop at the weakest domain's trip voltage; the per-domain schedule
+    # recovers the rest of the headroom.
+    multi = ServingEngine(
+        cfg, params,
+        rel=ReliabilityConfig(
+            platform="vc707", ecc=True, voltage=1.0, mode="inline",
+            multi_rail=True, controller_start_v=0.62,
+        ),
+        max_len=64,
+    )
+    volts, rail_hist = multi.autotune_voltage()
+    report = multi.power_report()
+    rails = ", ".join(f"{d}={v:.2f}V" for d, v in sorted(volts.items()))
+    print(f"\nmulti-rail locks: {rails}")
+    print(
+        f"BRAM power {report['bram_w'] * 1e3:.0f} mW "
+        f"({100 * report['saving_vs_nominal']:.1f}% saving vs nominal; "
+        f"single-rail at {v_safe:.2f} V saved "
+        f"{100 * eng.power_report()['saving_vs_nominal']:.1f}%)"
+    )
+    for d, st in multi.rail_stats.by_domain.items():
+        print(f"  {d:>10}: corrected={st.corrected} detected={st.detected} "
+              f"silent={st.silent} over {st.words} scrubbed words")
+
 
 if __name__ == "__main__":
     main()

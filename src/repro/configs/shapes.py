@@ -41,6 +41,34 @@ SHAPES = {
 LONG_CONTEXT_ARCHS = {"rwkv6-3b", "mixtral-8x22b", "jamba-1.5-large-398b"}
 
 
+# ---------------------------------------------------------------------------
+# Memory domains (multi-rail undervolting, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+# The BRAM arena is partitioned into named voltage domains; each domain gets
+# its own rail, fault-field slice, and ECC counter row. Order is the counter
+# row order everywhere (kernel, telemetry, controller). `MEMORY_DOMAINS` is
+# the registry; `domain_of` classifies a flattened-pytree leaf key into one.
+# Substrings are matched in order, so e.g. "['blocks']['p0']['attn']['wq']"
+# lands in "attention" before the "mlp" patterns are consulted.
+MEMORY_DOMAINS: tuple[str, ...] = ("embedding", "attention", "mlp", "kv")
+
+_DOMAIN_PATTERNS: tuple[tuple[str, tuple[str, ...]], ...] = (
+    ("kv", ("kv", "cache")),
+    ("embedding", ("embed", "unembed", "vocab")),
+    ("attention", ("attn", "attention", "w_r", "w_k", "w_v", "w_g", "w_o")),
+    ("mlp", ("mlp", "ffn", "moe", "expert", "in_proj", "out_proj")),
+)
+
+
+def domain_of(key: str, default: str = "mlp") -> str:
+    """Map a pytree leaf key (jax.tree_util.keystr) to its memory domain."""
+    low = key.lower()
+    for name, pats in _DOMAIN_PATTERNS:
+        if any(p in low for p in pats):
+            return name
+    return default
+
+
 def supported_shapes(arch: str) -> list[str]:
     names = ["train_4k", "prefill_32k", "decode_32k"]
     if arch in LONG_CONTEXT_ARCHS:

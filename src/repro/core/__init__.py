@@ -11,14 +11,15 @@ Built-in-ECC-under-undervolting for ML memory systems:
 """
 
 from repro.core import controller, ecc, faultsim, hsiao, memory, quantize, telemetry, voltage
-from repro.core.controller import UndervoltController
+from repro.core.controller import MultiRailController, UndervoltController
 from repro.core.faultsim import FaultField, FlipMasks
 from repro.core.memory import EccMemoryDomain
-from repro.core.telemetry import FaultStats
+from repro.core.telemetry import DomainFaultStats, FaultStats
 from repro.core.voltage import PLATFORMS, PlatformProfile
 
 __all__ = [
     "controller", "ecc", "faultsim", "hsiao", "memory", "quantize",
-    "telemetry", "voltage", "UndervoltController", "FaultField", "FlipMasks",
-    "EccMemoryDomain", "FaultStats", "PLATFORMS", "PlatformProfile",
+    "telemetry", "voltage", "MultiRailController", "UndervoltController",
+    "FaultField", "FlipMasks", "EccMemoryDomain", "DomainFaultStats",
+    "FaultStats", "PLATFORMS", "PlatformProfile",
 ]

@@ -35,12 +35,18 @@ class UndervoltController:
         step_v: float = 0.01,
         backoff_steps: int = 1,
         paranoid: bool = False,
+        start_v: float | None = None,
     ):
         self.platform = platform
         self.step_v = step_v
         self.backoff_steps = backoff_steps
         self.paranoid = paranoid
-        self.voltage = platform.v_nom
+        # Warm start: the guardband is fault-free by definition (paper §III),
+        # so a search may legally begin anywhere in [v_min, v_nom].
+        self.voltage = (
+            platform.v_nom if start_v is None
+            else min(platform.v_nom, max(float(start_v), platform.v_min))
+        )
         self.locked = False
         self.history: list[ControllerRecord] = []
 
@@ -71,3 +77,65 @@ class UndervoltController:
             )
         )
         return self.voltage
+
+
+class MultiRailController:
+    """Per-domain closed-loop undervolting: one DED canary per memory domain.
+
+    Each named domain owns an UndervoltController against its own
+    PlatformProfile (per-block fault variation, arXiv:2005.04737 /
+    arXiv:2110.05855) and walks its rail down independently: a DED event in
+    the attention arena backs off and locks only the attention rail while the
+    MLP rail keeps descending. The search converges when every rail is
+    locked; the resulting schedule dominates the single-rail lock (which must
+    stop at the *first* DED anywhere) in total power.
+    """
+
+    def __init__(
+        self,
+        platform: PlatformProfile,
+        domains,
+        step_v: float = 0.01,
+        backoff_steps: int = 1,
+        paranoid: bool = False,
+        start_v: float | None = None,
+        profiles: dict | None = None,
+    ):
+        profiles = profiles or {}
+        self.domains = tuple(domains)
+        assert self.domains, "MultiRailController needs at least one domain"
+        self.rails = {
+            d: UndervoltController(
+                profiles.get(d, platform),
+                step_v=step_v,
+                backoff_steps=backoff_steps,
+                paranoid=paranoid,
+                start_v=start_v,
+            )
+            for d in self.domains
+        }
+
+    @property
+    def locked(self) -> bool:
+        return all(c.locked for c in self.rails.values())
+
+    @property
+    def voltages(self) -> dict:
+        return {d: c.voltage for d, c in self.rails.items()}
+
+    @property
+    def history(self) -> dict:
+        return {d: c.history for d, c in self.rails.items()}
+
+    def update(self, stats) -> dict:
+        """Feed one scrub interval's per-domain telemetry.
+
+        ``stats``: DomainFaultStats or {domain: FaultStats}; domains without
+        telemetry this interval hold (no blind descent). Returns the next
+        {domain: voltage} schedule.
+        """
+        by_domain = getattr(stats, "by_domain", stats)
+        for d, ctrl in self.rails.items():
+            if d in by_domain:
+                ctrl.update(by_domain[d])
+        return self.voltages

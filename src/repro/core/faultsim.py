@@ -224,15 +224,31 @@ class DeviceFaultField:
 
     def masks(self, v: float):
         """(lo, hi, parity) device flip masks at rail voltage ``v``."""
+        import jax.numpy as jnp
+
+        return self.masks_for_rates(jnp.float32(self.platform.fault_rate(v)))
+
+    def masks_for_rates(self, rates):
+        """Masks for a scalar rate or an (n_words,) per-word rate vector.
+
+        Per-word rates are how multi-rail domains share one arena stream:
+        the random bits depend only on (seed, chunk), the rail voltage of a
+        word's domain enters through its threshold alone, so FIP holds per
+        word and a uniform rate vector is bit-identical to the scalar path.
+        """
         import jax
         import jax.numpy as jnp
 
-        rate = jnp.float32(self.platform.fault_rate(v))
+        rates = jnp.asarray(rates, jnp.float32)
+        per_word = rates.ndim == 1
+        if per_word:
+            assert rates.shape == (self.n_words,), rates.shape
         sigma = jnp.float32(self.platform.row_sigma)
         fn = _device_chunk_masks_jit()
         los, his, pars = [], [], []
         for ci, start in enumerate(range(0, self.n_words, self.chunk_words)):
             m = min(self.chunk_words, self.n_words - start)
+            rate = rates[start : start + m] if per_word else rates
             lo, hi, par = fn(jax.random.fold_in(self._key, ci), m, rate, sigma)
             los.append(lo)
             his.append(hi)

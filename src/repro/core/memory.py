@@ -112,7 +112,7 @@ class EccMemoryDomain:
             e, masks, ecc_enabled=self.ecc_enabled, collect_stats=collect_stats
         )
         if collect_stats:
-            self.stats.merge(stats)
+            self.stats.accumulate(stats)
         return arr, stats
 
     def read_pytree(self, prefix: str, tree_like, voltage: float | None = None):
@@ -122,7 +122,7 @@ class EccMemoryDomain:
         for path, _ in flat:
             arr, stats = self.read(prefix + jax.tree_util.keystr(path), voltage)
             out.append(arr)
-            agg.merge(stats)
+            agg.accumulate(stats)
         return jax.tree_util.tree_unflatten(treedef, out), agg
 
 

@@ -140,7 +140,7 @@ class EccMLP:
                 par = kops.encode(lo, hi)
             faulty = dataclasses.replace(l.enc, lo=lo, hi=hi, parity=par)
             status = np.asarray(kops.scrub(faulty))
-            agg.merge(FaultStats.from_decode(status, masks.flip_counts()))
+            agg.accumulate(FaultStats.from_decode(status, masks.flip_counts()))
             l.faulty = faulty
         self.stats = agg
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.faultsim import DeviceFaultField, FaultField
-from repro.core.telemetry import FaultStats
+from repro.core.telemetry import DomainFaultStats, FaultStats
 from repro.core.voltage import PlatformProfile
 from repro.kernels import ops as kops
 
@@ -44,10 +44,19 @@ class Slot:
     offset: int
     size: int
     shape: tuple
+    domain: str = "all"
 
 
 class PlaneStore:
-    """Flat arena over a sequence of EccWeight leaves (clean planes, device)."""
+    """Flat arena over a sequence of EccWeight leaves (clean planes, device).
+
+    With a ``domain_key`` classifier the arena is partitioned into named
+    memory domains (DESIGN.md §10): every slot belongs to one domain, and
+    ``set_rails`` drives a separate rail voltage per domain through one fused
+    inject+scrub launch with per-domain counter rows. ``profiles`` optionally
+    gives each domain its own PlatformProfile (MoRS-style per-instance fault
+    behaviour); rails without a dedicated profile use ``platform``.
+    """
 
     def __init__(
         self,
@@ -56,17 +65,23 @@ class PlaneStore:
         platform: PlatformProfile,
         seed: int = 0,
         mask_source: str = "host",
+        domain_key=None,
+        profiles=None,
     ):
         assert mask_source in ("host", "device"), mask_source
         assert len(leaves) == len(set(keys)), "leaf keys must be unique"
         self.platform = platform
         self.seed = int(seed)
         self.mask_source = mask_source
+        self._profiles = dict(profiles or {})
+        classify = domain_key if domain_key is not None else (lambda _k: "all")
         slots, off = [], 0
         los, his, pars = [], [], []
         for key, leaf in zip(keys, leaves):
             size = int(leaf.lo.size)
-            slots.append(Slot(key, off, size, tuple(leaf.lo.shape)))
+            slots.append(
+                Slot(key, off, size, tuple(leaf.lo.shape), str(classify(key)))
+            )
             los.append(leaf.lo.reshape(-1))
             his.append(leaf.hi.reshape(-1))
             pars.append(leaf.parity.reshape(-1))
@@ -88,19 +103,44 @@ class PlaneStore:
             self.lo = jnp.zeros((0,), jnp.uint32)
             self.hi = jnp.zeros((0,), jnp.uint32)
             self.parity = jnp.zeros((0,), jnp.uint8)
+        # Domain order: first appearance in arena order (stable across runs
+        # for a fixed leaf ordering); this is the counter row order.
+        self.domains = tuple(dict.fromkeys(s.domain for s in self.slots))
+        self._dom_index = {d: i for i, d in enumerate(self.domains)}
+        dom_ids = np.zeros(self.n_words, np.int32)
+        for s in self.slots:
+            dom_ids[s.offset : s.offset + s.size] = self._dom_index[s.domain]
+        self._dom_ids_np = dom_ids
+        self._dom_ids = jnp.asarray(dom_ids) if self.n_words else jnp.zeros((0,), jnp.int32)
         self._host_fields = {
-            s.key: FaultField(platform, s.size, seed=leaf_seed(self.seed, s.key))
+            s.key: FaultField(
+                self.domain_profile(s.domain), s.size,
+                seed=leaf_seed(self.seed, s.key),
+            )
             for s in self.slots
         }
         self._device_field = DeviceFaultField(platform, self.n_words, seed=self.seed)
 
+    # -- domains -------------------------------------------------------------
+    def domain_profile(self, domain: str) -> PlatformProfile:
+        return self._profiles.get(domain, self.platform)
+
+    def words_by_domain(self) -> dict:
+        """Word count per domain (power weighting + telemetry denominators)."""
+        counts = dict.fromkeys(self.domains, 0)
+        for s in self.slots:
+            counts[s.domain] += s.size
+        return counts
+
     # -- masks ---------------------------------------------------------------
-    def host_masks(self, v: float):
+    def host_masks(self, v):
         """Concatenated per-leaf oracle masks (bit-identical to the per-leaf
-        path: same fields, same seeds, same order)."""
+        path: same fields, same seeds, same order). ``v`` is a scalar rail
+        voltage or a {domain: voltage} mapping."""
+        volts = v if isinstance(v, dict) else {d: v for d in self.domains}
         mlos, mhis, mpars = [], [], []
         for s in self.slots:
-            mk = self._host_fields[s.key].masks(v)
+            mk = self._host_fields[s.key].masks(volts[s.domain])
             mlos.append(mk.lo)
             mhis.append(mk.hi)
             mpars.append(mk.parity)
@@ -109,8 +149,24 @@ class PlaneStore:
         )
         return cat(mlos, jnp.uint32), cat(mhis, jnp.uint32), cat(mpars, jnp.uint8)
 
-    def masks(self, v: float):
+    def _rail_rates(self, volts: dict) -> np.ndarray:
+        """Per-word fault rate vector for a {domain: voltage} schedule."""
+        rates = np.zeros(self.n_words, np.float32)
+        for d, i in self._dom_index.items():
+            rates[self._dom_ids_np == i] = self.domain_profile(d).fault_rate(
+                float(volts[d])
+            )
+        return rates
+
+    def masks(self, v):
         if self.mask_source == "device":
+            # Per-domain profiles make the rate a function of the word's
+            # domain even under a scalar rail, so route through the rate
+            # vector (the host path gets this for free from its per-leaf
+            # fields); profile-less stores keep the scalar fast path.
+            if isinstance(v, dict) or self._profiles:
+                volts = v if isinstance(v, dict) else {d: v for d in self.domains}
+                return self._device_field.masks_for_rates(self._rail_rates(volts))
             return self._device_field.masks(v)
         return self.host_masks(v)
 
@@ -129,7 +185,32 @@ class PlaneStore:
             self.lo, self.hi, self.parity, mlo, mhi, mpar, reencode=not ecc
         )
         stats = FaultStats.from_counters(np.asarray(counters), words=self.n_words)
-        leaves = [
+        return self._slice_leaves(flo, fhi, fpar), stats
+
+    def set_rails(self, volts: dict, ecc: bool = True):
+        """One fused inject+scrub launch with a separate rail per domain.
+
+        ``volts`` maps every domain name to its rail voltage. Returns
+        (faulty_leaves, DomainFaultStats) — one counter row per domain
+        crosses to host. A uniform schedule is bit-identical to
+        ``set_voltage`` (same fields/streams, same kernel math; tested).
+        """
+        missing = set(self.domains) - set(volts)
+        assert not missing, f"rails missing for domains: {sorted(missing)}"
+        if self.n_words == 0:
+            return list(self._leaves), DomainFaultStats()
+        mlo, mhi, mpar = self.masks(dict(volts))
+        flo, fhi, fpar, counters = kops.inject_scrub_domains(
+            self.lo, self.hi, self.parity, mlo, mhi, mpar,
+            self._dom_ids, len(self.domains), reencode=not ecc,
+        )
+        stats = FaultStats.from_counter_matrix(
+            np.asarray(counters), self.domains, self.words_by_domain()
+        )
+        return self._slice_leaves(flo, fhi, fpar), stats
+
+    def _slice_leaves(self, flo, fhi, fpar):
+        return [
             dataclasses.replace(
                 leaf,
                 lo=flo[s.offset : s.offset + s.size].reshape(s.shape),
@@ -138,4 +219,3 @@ class PlaneStore:
             )
             for s, leaf in zip(self.slots, self._leaves)
         ]
-        return leaves, stats

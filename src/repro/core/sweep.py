@@ -1,0 +1,217 @@
+"""Vmapped undervolting sweeps: (platform x voltage) and (schedule x domain)
+fault-rate curves in one compiled call (DESIGN.md §10).
+
+The historical benchmark loop (benchmarks/fig1_fault_rate.py) walked every
+(platform, voltage) pair in Python: one mask generation + one decode dispatch
+per point, ~25 points per platform. Because the device fault field is a pure
+function of (key, rate, sigma), the whole grid is a `jax.vmap` over the
+(rate, sigma) vectors instead: the random bits and the per-row weakness are
+voltage-independent (FIP), so XLA hoists them out of the batched dimension
+and the sweep reads the per-cell threshold comparison V times from registers
+rather than regenerating the field V times from HBM.
+
+Bit-compatibility: points are evaluated on exactly the `DeviceFaultField`
+stream — same key schedule (seed ^ 0xECC, fold_in per chunk), same threshold
+arithmetic — so a vmapped sweep point equals the per-voltage loop's masks
+bit-for-bit (tested in tests/test_multirail.py).
+
+Classification runs on a zero memory, like the paper's hardware test design:
+the flip masks *are* the faulty codeword, the stored parity flips are the
+parity-plane mask, and `ecc.decode` yields the per-word SECDED outcome.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core import ecc
+from repro.core.faultsim import _device_chunk_masks
+from repro.core.telemetry import DomainFaultStats, FaultStats
+from repro.core.voltage import PlatformProfile
+
+# Dispatch accounting (compiled-call count, the sweep's analogue of
+# kernels.ops.launch_count): one per chunk per public call, independent of
+# how many (platform, voltage) points ride in the batch.
+_dispatches = {"n": 0}
+
+
+def reset_dispatch_count() -> None:
+    _dispatches["n"] = 0
+
+
+def dispatch_count() -> int:
+    return _dispatches["n"]
+
+
+def _classify_tallies(mlo, mhi, mpar):
+    """Per-word boolean tally planes (telemetry.COUNTER_FIELDS lanes 0..6)
+    plus flip counts, for one chunk's masks applied to a zero memory."""
+    import jax.numpy as jnp
+
+    from repro.kernels.inject_scrub import _popcount32
+
+    _, _, status = ecc.decode(mlo, mhi, mpar)
+    flips = _popcount32(mlo) + _popcount32(mhi) + _popcount32(mpar.astype(jnp.uint32))
+    detected = status == ecc.STATUS_DETECTED
+    tallies = [
+        (status == ecc.STATUS_CLEAN) & (flips == 0),
+        (status == ecc.STATUS_CORRECTED) & (flips == 1),
+        detected,
+        (flips >= 2) & ~detected,
+        flips == 1,
+        flips == 2,
+        flips >= 3,
+    ]
+    return tallies, flips
+
+
+def _point_counters(key, rate, sigma, m):
+    import jax.numpy as jnp
+
+    tallies, flips = _classify_tallies(*_device_chunk_masks(key, m, rate, sigma))
+    cnt = [jnp.sum(t.astype(jnp.int32)) for t in tallies]
+    cnt.append(jnp.sum(flips))
+    return jnp.stack(cnt)
+
+
+@functools.lru_cache(maxsize=None)
+def _grid_chunk_fn():
+    """jit(vmap) over the (rate, sigma) point vectors; key and chunk size are
+    shared across the batch (one fault field, many rails)."""
+    import jax
+
+    return jax.jit(
+        jax.vmap(_point_counters, in_axes=(None, 0, 0, None)),
+        static_argnums=(3,),
+    )
+
+
+def _domain_point_counters(key, rates_w, sigma, m, dom_ids, n_domains):
+    """(n_domains, 8) counters for one chunk under a per-word rate vector."""
+    import jax.numpy as jnp
+
+    tallies, flips = _classify_tallies(*_device_chunk_masks(key, m, rates_w, sigma))
+    rows = []
+    for d in range(n_domains):
+        sel = dom_ids == d
+        cnt = [jnp.sum((t & sel).astype(jnp.int32)) for t in tallies]
+        cnt.append(jnp.sum(jnp.where(sel, flips, 0)))
+        rows.append(jnp.stack(cnt))
+    return jnp.stack(rows)
+
+
+@functools.lru_cache(maxsize=None)
+def _schedule_chunk_fn():
+    import jax
+
+    return jax.jit(
+        jax.vmap(_domain_point_counters, in_axes=(None, 0, None, None, None, None)),
+        static_argnums=(3, 5),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One (platform, voltage) grid point's aggregated fault statistics."""
+
+    platform: str
+    voltage: float
+    stats: FaultStats
+
+
+def sweep_platform_grid(
+    grid, n_words: int, seed: int = 0, chunk_words: int = 1 << 18
+) -> list[SweepPoint]:
+    """Evaluate a flat (PlatformProfile, voltage) grid in one vmapped call.
+
+    ``grid``: iterable of (profile, voltage) pairs — e.g. all three paper
+    platforms x their critical-region voltage steps. Returns one SweepPoint
+    per pair, in order. All points share the fault-field stream keyed by
+    ``seed`` (the DeviceFaultField stream for the same geometry).
+    """
+    import jax
+
+    grid = list(grid)
+    if not grid:
+        return []
+    rates = np.array(
+        [p.fault_rate(float(v)) for p, v in grid], np.float32
+    )
+    sigmas = np.array([p.row_sigma for p, _ in grid], np.float32)
+    fn = _grid_chunk_fn()
+    key = jax.random.PRNGKey(seed ^ 0xECC)
+    total = np.zeros((len(grid), 8), np.int64)
+    for ci, start in enumerate(range(0, n_words, chunk_words)):
+        m = min(chunk_words, n_words - start)
+        _dispatches["n"] += 1
+        total += np.asarray(fn(jax.random.fold_in(key, ci), rates, sigmas, m))
+    return [
+        SweepPoint(p.name, float(v), FaultStats.from_counters(total[i], n_words))
+        for i, (p, v) in enumerate(grid)
+    ]
+
+
+def sweep_rail_schedules(
+    schedules,
+    domains,
+    dom_ids: np.ndarray,
+    profiles,
+    seed: int = 0,
+    chunk_words: int = 1 << 18,
+) -> list[DomainFaultStats]:
+    """Evaluate N per-domain rail schedules in one vmapped call.
+
+    ``schedules``: iterable of {domain: voltage} mappings; ``domains`` the
+    counter row order; ``dom_ids`` the (n_words,) arena domain index (e.g.
+    ``PlaneStore._dom_ids_np``); ``profiles`` maps domain -> PlatformProfile
+    (a single profile is broadcast). Returns one DomainFaultStats per
+    schedule. Row sigma must be shared (one weakness field per arena).
+    """
+    import jax
+
+    schedules = [dict(s) for s in schedules]
+    domains = tuple(domains)
+    if not schedules:
+        return []
+    if isinstance(profiles, PlatformProfile):
+        profiles = {d: profiles for d in domains}
+    sigmas = {profiles[d].row_sigma for d in domains}
+    assert len(sigmas) == 1, "arena shares one row-weakness field"
+    sigma = np.float32(sigmas.pop())
+    dom_ids = np.asarray(dom_ids, np.int32)
+    n_words = dom_ids.shape[0]
+    words_by_domain = {
+        d: int((dom_ids == i).sum()) for i, d in enumerate(domains)
+    }
+    # (S, n_words) per-word rates: schedule s gives word w its domain's rate
+    dom_rates = np.array(
+        [
+            [profiles[d].fault_rate(float(s[d])) for d in domains]
+            for s in schedules
+        ],
+        np.float32,
+    )  # (S, D)
+    rates_w = dom_rates[:, dom_ids]  # (S, n_words)
+    fn = _schedule_chunk_fn()
+    key = jax.random.PRNGKey(seed ^ 0xECC)
+    total = np.zeros((len(schedules), len(domains), 8), np.int64)
+    for ci, start in enumerate(range(0, n_words, chunk_words)):
+        m = min(chunk_words, n_words - start)
+        _dispatches["n"] += 1
+        total += np.asarray(
+            fn(
+                jax.random.fold_in(key, ci),
+                rates_w[:, start : start + m],
+                sigma,
+                m,
+                dom_ids[start : start + m],
+                len(domains),
+            )
+        )
+    return [
+        FaultStats.from_counter_matrix(total[s], domains, words_by_domain)
+        for s in range(len(schedules))
+    ]

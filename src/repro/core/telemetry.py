@@ -32,10 +32,23 @@ class FaultStats:
     words_multi: int = 0
     faulty_bits: int = 0
 
-    def merge(self, other: "FaultStats") -> "FaultStats":
+    def accumulate(self, other: "FaultStats") -> None:
+        """Add ``other``'s counters into ``self``, in place.
+
+        Deliberately returns None: the old ``merge`` name looked like a pure
+        combinator but mutated the receiver, so call sites could silently
+        alias the accumulator. Use ``FaultStats.summed`` for a pure merge.
+        """
         for f in dataclasses.fields(self):
             setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
-        return self
+
+    @classmethod
+    def summed(cls, stats) -> "FaultStats":
+        """Pure merge: a fresh FaultStats totalling an iterable of stats."""
+        out = cls()
+        for s in stats:
+            out.accumulate(s)
+        return out
 
     @property
     def faulty_words(self) -> int:
@@ -64,6 +77,21 @@ class FaultStats:
         return np.array([getattr(self, f) for f in COUNTER_FIELDS], np.int64)
 
     @classmethod
+    def from_counter_matrix(
+        cls, counters, names, words_by_domain
+    ) -> "DomainFaultStats":
+        """Build per-domain stats from the kernel's (n_domains, 8+) counter
+        block (row order == ``names`` == the store's domain order)."""
+        c = np.asarray(counters)
+        assert c.shape[0] == len(names) and c.shape[1] >= len(COUNTER_FIELDS), c.shape
+        return DomainFaultStats(
+            {
+                d: cls.from_counters(c[i], words=words_by_domain[d])
+                for i, d in enumerate(names)
+            }
+        )
+
+    @classmethod
     def from_decode(cls, status: np.ndarray, flip_counts: np.ndarray) -> "FaultStats":
         """Build stats from per-word ECC status codes + ground-truth flip counts."""
         status = np.asarray(status).reshape(-1)
@@ -84,3 +112,38 @@ class FaultStats:
             words_multi=int((flips >= 3).sum()),
             faulty_bits=int(flips.sum()),
         )
+
+
+@dataclasses.dataclass
+class DomainFaultStats:
+    """Per-memory-domain fault statistics (multi-rail telemetry).
+
+    Thin ordered mapping domain name -> FaultStats; iteration order is the
+    store's domain order (== the kernel's counter row order).
+    """
+
+    by_domain: dict[str, FaultStats] = dataclasses.field(default_factory=dict)
+
+    def __getitem__(self, domain: str) -> FaultStats:
+        return self.by_domain[domain]
+
+    def __contains__(self, domain: str) -> bool:
+        return domain in self.by_domain
+
+    @property
+    def domains(self) -> tuple[str, ...]:
+        return tuple(self.by_domain)
+
+    def get(self, domain: str) -> FaultStats:
+        return self.by_domain.get(domain, FaultStats())
+
+    def total(self) -> FaultStats:
+        """Aggregate over domains (a fresh FaultStats; nothing is aliased)."""
+        return FaultStats.summed(self.by_domain.values())
+
+    def accumulate(self, other: "DomainFaultStats") -> None:
+        for d, st in other.by_domain.items():
+            self.by_domain.setdefault(d, FaultStats()).accumulate(st)
+
+    def coverage(self) -> dict:
+        return {d: st.coverage() for d, st in self.by_domain.items()}

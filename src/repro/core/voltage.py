@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import zlib
 
 MBIT = 1024 * 1024.0
 
@@ -138,3 +139,64 @@ def power_saving(v_from: float, v_to: float, ecc: bool = False) -> float:
     """Fractional BRAM power saving when undervolting v_from -> v_to."""
     p0, p1 = bram_power(v_from, ecc=False), bram_power(v_to, ecc=ecc)
     return 1.0 - p1 / p0
+
+
+# ---------------------------------------------------------------------------
+# Multi-rail extension (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+def derive_domain_profiles(
+    base: PlatformProfile, domains, spread: float = 0.5, seed: int = 0
+) -> dict:
+    """Per-domain PlatformProfiles modelling block-to-block fault variation.
+
+    The MLP follow-up (arXiv:2005.04737) and MoRS (arXiv:2110.05855) show
+    different memory blocks / SRAM instances fault at measurably different
+    rates under the same rail — the paper itself measures 4.1x between two
+    KC705 samples. We scale each domain's fault-rate curve by a lognormal
+    instance factor (E[f] = 1, deterministic in (seed, domain name)) while
+    keeping the guardband and crash rail of the base silicon: the variation
+    is in *where* faults appear below V_min, not in the operating envelope.
+    """
+    out = {}
+    for d in domains:
+        h = zlib.crc32(f"{seed}:{d}".encode()) / 0xFFFFFFFF  # [0, 1)
+        # inverse-normal via erfinv on the centered uniform draw
+        z = math.sqrt(2.0) * _erfinv(2.0 * h - 1.0)
+        f = math.exp(spread * z - 0.5 * spread * spread)
+        out[d] = dataclasses.replace(
+            base,
+            name=f"{base.name}/{d}",
+            rate_crash=base.rate_crash * f,
+        )
+    return out
+
+
+def _erfinv(x: float) -> float:
+    """Scalar inverse error function (Winitzki approximation, |err|<2e-3)."""
+    a = 0.147
+    ln1mx2 = math.log(max(1.0 - x * x, 1e-30))
+    t = 2.0 / (math.pi * a) + ln1mx2 / 2.0
+    return math.copysign(math.sqrt(math.sqrt(t * t - ln1mx2 / a) - t), x)
+
+
+def multi_rail_bram_power(volts: dict, words_by_domain: dict, ecc: bool = True) -> float:
+    """Total BRAM power (W) with each domain's rail at its own voltage.
+
+    The paper's P(V) curve is for the whole tested memory; a domain holding a
+    fraction of the arena's words draws that fraction of the curve at *its*
+    rail. Domains absent from ``words_by_domain`` draw nothing.
+    """
+    total = max(sum(words_by_domain.values()), 1)
+    return sum(
+        (words_by_domain[d] / total) * bram_power(float(v), ecc=ecc)
+        for d, v in volts.items()
+        if d in words_by_domain
+    )
+
+
+def multi_rail_power_saving(
+    volts: dict, words_by_domain: dict, ecc: bool = True, v_nom: float = 1.0
+) -> float:
+    """Fractional BRAM saving of a per-domain schedule vs the nominal rail."""
+    p0 = bram_power(v_nom, ecc=False)
+    return 1.0 - multi_rail_bram_power(volts, words_by_domain, ecc=ecc) / p0

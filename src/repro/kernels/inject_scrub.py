@@ -54,23 +54,20 @@ def _popcount32(v):
     return ((v * _U32(0x01010101)) >> 24).astype(jnp.int32)
 
 
-def _inject_scrub_kernel(
-    lo_ref, hi_ref, par_ref, mlo_ref, mhi_ref, mpar_ref,
-    olo_ref, ohi_ref, opar_ref, cnt_ref, *, reencode,
-):
-    mlo = mlo_ref[...]
-    mhi = mhi_ref[...]
-    mpar = mpar_ref[...]
-    flo = lo_ref[...] ^ mlo
-    fhi = hi_ref[...] ^ mhi
-    fpar = par_ref[...] ^ mpar
+def _inject_classify(lo, hi, par, mlo, mhi, mpar, reencode):
+    """Shared tile body: XOR-inject, (re)encode, classify every word.
+
+    Returns (flo, fhi, fpar, tallies, flips) where tallies are the seven
+    boolean planes of the counter layout (lanes 0..6) and flips the per-word
+    ground-truth flip count (lane 7 sums it).
+    """
+    flo = lo ^ mlo
+    fhi = hi ^ mhi
+    fpar = par ^ mpar
     if reencode:
         # No-ECC baseline: parity is consistent with the faulty data, so the
         # read-path decoder is a pass-through and faults flow into the matmul.
         fpar = _compute_parity(flo, fhi).astype(jnp.uint8)
-    olo_ref[...] = flo
-    ohi_ref[...] = fhi
-    opar_ref[...] = fpar
 
     # Scrub: syndrome + gather-free classification (same chains as decode_2d,
     # minus the corrected-plane construction nobody reads here).
@@ -94,12 +91,21 @@ def _inject_scrub_kernel(
         flips == 2,                           # 5: ground-truth 2-bit words
         flips >= 3,                           # 6: ground-truth multi-bit words
     )
+    return flo, fhi, fpar, tallies, flips
+
+
+def _counter_row(tallies, flips, sel=None):
+    """(1, _CNT_LANES) int32 counter row, optionally masked by ``sel``."""
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, _CNT_LANES), 1)
     vals = jnp.zeros((1, _CNT_LANES), jnp.int32)
+    gate = (lambda t: t & sel) if sel is not None else (lambda t: t)
     for idx, t in enumerate(tallies):
-        vals = vals + jnp.where(lane == idx, jnp.sum(t.astype(jnp.int32)), 0)
-    vals = vals + jnp.where(lane == 7, jnp.sum(flips), 0)
+        vals = vals + jnp.where(lane == idx, jnp.sum(gate(t).astype(jnp.int32)), 0)
+    gflips = jnp.where(sel, flips, 0) if sel is not None else flips
+    return vals + jnp.where(lane == 7, jnp.sum(gflips), 0)
 
+
+def _accumulate_counters(cnt_ref, vals):
     first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0)
 
     @pl.when(first)
@@ -109,6 +115,45 @@ def _inject_scrub_kernel(
     @pl.when(jnp.logical_not(first))
     def _():
         cnt_ref[...] = cnt_ref[...] + vals
+
+
+def _inject_scrub_kernel(
+    lo_ref, hi_ref, par_ref, mlo_ref, mhi_ref, mpar_ref,
+    olo_ref, ohi_ref, opar_ref, cnt_ref, *, reencode,
+):
+    flo, fhi, fpar, tallies, flips = _inject_classify(
+        lo_ref[...], hi_ref[...], par_ref[...],
+        mlo_ref[...], mhi_ref[...], mpar_ref[...], reencode,
+    )
+    olo_ref[...] = flo
+    ohi_ref[...] = fhi
+    opar_ref[...] = fpar
+    _accumulate_counters(cnt_ref, _counter_row(tallies, flips))
+
+
+def _inject_scrub_domains_kernel(
+    lo_ref, hi_ref, par_ref, mlo_ref, mhi_ref, mpar_ref, dom_ref,
+    olo_ref, ohi_ref, opar_ref, cnt_ref, *, reencode, n_rows,
+):
+    """Multi-rail variant: one counter row per memory domain.
+
+    ``dom_ref`` holds the per-word domain index (int32); row ``n_rows - 1``
+    is the zero-pad spill row the wrapper drops. Domains are few (<= 8), so
+    the per-domain masked reductions stay register-resident like the global
+    ones.
+    """
+    flo, fhi, fpar, tallies, flips = _inject_classify(
+        lo_ref[...], hi_ref[...], par_ref[...],
+        mlo_ref[...], mhi_ref[...], mpar_ref[...], reencode,
+    )
+    olo_ref[...] = flo
+    ohi_ref[...] = fhi
+    opar_ref[...] = fpar
+    dom = dom_ref[...]
+    vals = jnp.concatenate(
+        [_counter_row(tallies, flips, sel=dom == d) for d in range(n_rows)], axis=0
+    )
+    _accumulate_counters(cnt_ref, vals)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "reencode", "interpret"))
@@ -138,3 +183,38 @@ def inject_scrub_2d(
         ),
         interpret=interpret,
     )(lo, hi, parity, mlo, mhi, mparity)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_domains", "block", "reencode", "interpret")
+)
+def inject_scrub_domains_2d(
+    lo, hi, parity, mlo, mhi, mparity, dom, *, n_domains,
+    block=(256, 512), reencode=False, interpret=False,
+):
+    """Fused inject + scrub with per-domain counter rows.
+
+    ``dom`` is an int32 plane of domain indices in [0, n_domains]; index
+    ``n_domains`` is the pad/spill row. Returns (faulty_lo, faulty_hi,
+    faulty_parity, counters (n_domains + 1, _CNT_LANES) int32).
+    """
+    n_rows = n_domains + 1
+    bm, bn = block
+    grid = (pl.cdiv(lo.shape[0], bm), pl.cdiv(lo.shape[1], bn))
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    cnt_spec = pl.BlockSpec((n_rows, _CNT_LANES), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        functools.partial(
+            _inject_scrub_domains_kernel, reencode=reencode, n_rows=n_rows
+        ),
+        grid=grid,
+        in_specs=[spec] * 7,
+        out_specs=[spec, spec, spec, cnt_spec],
+        out_shape=(
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint8),
+            jax.ShapeDtypeStruct((n_rows, _CNT_LANES), jnp.int32),
+        ),
+        interpret=interpret,
+    )(lo, hi, parity, mlo, mhi, mparity, dom)

@@ -125,6 +125,38 @@ def inject_scrub(
     return unpad(olo), unpad(ohi), unpad(opar), counters
 
 
+def inject_scrub_domains(
+    lo, hi, parity, mlo, mhi, mparity, domain_ids, n_domains: int, *,
+    reencode: bool = False, interpret: bool | None = None,
+):
+    """Fused inject + scrub with one counter row per memory domain.
+
+    ``domain_ids``: int32 array shaped like ``lo`` mapping every word to its
+    domain index in [0, n_domains). Layout pad words are routed to a spill
+    row inside the kernel, so no pad correction is needed. Returns
+    (faulty_lo, faulty_hi, faulty_parity, counters (n_domains, N_COUNTERS)).
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    _count_launch()
+    (a, b, c, d, e, f), n, block = _to_2d(lo, hi, parity, mlo, mhi, mparity)
+    # Pad the domain plane with the spill index (not 0: pad words must not
+    # count as domain 0's clean words).
+    flat_dom = domain_ids.reshape(-1).astype(jnp.int32)
+    pad = a.size - n
+    if pad:
+        flat_dom = jnp.concatenate(
+            [flat_dom, jnp.full((pad,), n_domains, jnp.int32)]
+        )
+    dom2 = flat_dom.reshape(a.shape)
+    olo, ohi, opar, cnt = _isc.inject_scrub_domains_2d(
+        a, b, c, d, e, f, dom2, n_domains=n_domains, block=block,
+        reencode=reencode, interpret=interpret,
+    )
+    counters = cnt[:n_domains, : _isc.N_COUNTERS]
+    unpad = lambda x: x.reshape(-1)[:n].reshape(lo.shape)
+    return unpad(olo), unpad(ohi), unpad(opar), counters
+
+
 # ---------------------------------------------------------------------------
 # ECC-protected weights + fused matmul
 # ---------------------------------------------------------------------------

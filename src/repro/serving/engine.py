@@ -25,11 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import UndervoltController, voltage as vmod
+from repro.configs import shapes
+from repro.core import MultiRailController, UndervoltController, voltage as vmod
 from repro.core.faultsim import FaultField
 from repro.core.memory import EccMemoryDomain
 from repro.core.planestore import PlaneStore, leaf_seed
-from repro.core.telemetry import FaultStats
+from repro.core.telemetry import DomainFaultStats, FaultStats
 from repro.kernels import ops as kops
 from repro.models import lm
 from repro.models.base import ModelConfig
@@ -51,6 +52,41 @@ class ReliabilityConfig:
     # "host": NumPy FaultField oracle (bit-identical to per-leaf path);
     # "device": counter-based jax.random masks, never materialised on host
     mask_source: str = "host"
+    # Multi-rail (DESIGN.md §10): partition the plane arena into memory
+    # domains (configs/shapes.domain_of) and give each its own closed-loop
+    # rail. Implies the batched inline path.
+    multi_rail: bool = False
+    # also treat SILENT (ground-truth-only) events as canary trips
+    paranoid: bool = False
+    # include the embedding table in the protected arena (None -> multi_rail:
+    # single-rail engines keep the historical attn/mlp-only protected set)
+    protect_embed: bool | None = None
+    # >0: per-domain fault-curve variation (lognormal sigma) modelling
+    # block-to-block differences (arXiv:2005.04737 / MoRS); 0: shared curve
+    rail_spread: float = 0.0
+    # warm-start voltage for the canary search (None -> v_nom); the
+    # guardband [v_min, v_nom] is fault-free by definition, so starting at
+    # its edge saves ~40 no-op rounds without changing the lock point
+    controller_start_v: float | None = None
+
+    @property
+    def embed_protected(self) -> bool:
+        return self.multi_rail if self.protect_embed is None else self.protect_embed
+
+
+def _decode_gather_table(ew: kops.EccWeight) -> jnp.ndarray:
+    """SECDED-read an EccWeight back to a dequantized float (K, N) table.
+
+    Gather-read tables (the embedding) cannot go through the fused
+    decode-matmul kernel; their ECC read happens when the rail moves, exactly
+    like domain mode's refresh — at nominal voltage this is the identity on
+    the quantized values.
+    """
+    from repro.kernels import ref as kref
+
+    lo, hi, _ = kops.decode(ew.lo, ew.hi, ew.parity)
+    w_i8 = kref.unpack_ecc_weights(lo, hi)
+    return w_i8.astype(jnp.float32) * ew.scale
 
 
 def _pack_stacked(leaf) -> kops.EccWeight:
@@ -71,18 +107,23 @@ def _pack_stacked(leaf) -> kops.EccWeight:
     )
 
 
-def protect_params_inline(params, cfg: ModelConfig, seed: int = 0):
+def protect_params_inline(
+    params, cfg: ModelConfig, seed: int = 0, include_embed: bool = False
+):
     """Replace weight matrices (K%8==0) with SECDED int8 EccWeight planes.
 
     Handles both plain (K, N) and layer-stacked (G, K, N) leaves. Returns
     (new_params, plane_sizes) where plane_sizes maps path -> word count
-    (for voltage-dependent fault injection).
+    (for voltage-dependent fault injection). ``include_embed`` extends the
+    protected set to the embedding table (multi-rail engines protect it as
+    its own voltage domain).
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out, fields = [], {}
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)
-        if not hasattr(leaf, "ndim") or not ("attn" in key or "mlp" in key):
+        wanted = "attn" in key or "mlp" in key or (include_embed and "embed" in key)
+        if not hasattr(leaf, "ndim") or not wanted:
             out.append(leaf)
             continue
         if leaf.ndim == 2 and leaf.shape[0] % 8 == 0 and min(leaf.shape) >= 64:
@@ -110,10 +151,17 @@ class ServingEngine:
         self.max_len = max_len
         self.platform = vmod.PLATFORMS[rel.platform] if rel else None
         self.controller = (
-            UndervoltController(self.platform, step_v=rel.controller_step_v)
-            if rel
-            else None
+            UndervoltController(
+                self.platform,
+                step_v=rel.controller_step_v,
+                paranoid=rel.paranoid,
+                start_v=rel.controller_start_v,
+            )
+            if rel and not rel.multi_rail
+            else None  # multi-rail controller is built once the arena exists
         )
+        self.rails = None  # {domain: voltage} when multi_rail
+        self.rail_stats = DomainFaultStats()  # cumulative per-domain telemetry
         self.stats = FaultStats()
         self._clean_params = params
         if rel is None:
@@ -128,9 +176,12 @@ class ServingEngine:
             self.params = params  # refreshed by set_voltage
             self.set_voltage(self.domain.voltage)
         else:  # inline
+            assert not rel.multi_rail or rel.batched, (
+                "multi_rail drives the batched plane arena"
+            )
             self.domain = None
             self.params, self._plane_sizes = protect_params_inline(
-                params, cfg, seed=rel.seed
+                params, cfg, seed=rel.seed, include_embed=rel.embed_protected
             )
             self._clean_inline = self.params
             self._fields: dict[str, FaultField] = {}
@@ -147,15 +198,39 @@ class ServingEngine:
                 for i, (path, leaf) in enumerate(flat)
                 if isinstance(leaf, kops.EccWeight)
             ]
+            rail_profiles = (
+                vmod.derive_domain_profiles(
+                    self.platform, shapes.MEMORY_DOMAINS,
+                    spread=rel.rail_spread, seed=rel.seed,
+                )
+                if rel.multi_rail and rel.rail_spread > 0
+                else None
+            )
             self._store = PlaneStore(
                 [self._inline_template[i] for i, _ in self._ecc_slots],
                 [key for _, key in self._ecc_slots],
                 self.platform,
                 seed=rel.seed,
                 mask_source=rel.mask_source,
+                domain_key=shapes.domain_of if rel.multi_rail else None,
+                profiles=rail_profiles,
             )
             self.voltage = rel.voltage or self.platform.v_nom
-            self.set_voltage(self.voltage)
+            if rel.multi_rail:
+                self.controller = MultiRailController(
+                    self.platform,
+                    self._store.domains,
+                    step_v=rel.controller_step_v,
+                    paranoid=rel.paranoid,
+                    start_v=rel.controller_start_v,
+                    profiles={
+                        d: self._store.domain_profile(d)
+                        for d in self._store.domains
+                    },
+                )
+                self.set_rails({d: self.voltage for d in self._store.domains})
+            else:
+                self.set_voltage(self.voltage)
 
         self._decode = jax.jit(
             lambda p, t, c, pos: lm.decode_step(p, t, cfg, c, pos)
@@ -173,24 +248,44 @@ class ServingEngine:
         self.voltage = float(v)
         if self.rel is None:
             return
-        if self.rel.mode == "domain":
+        if self.rel.multi_rail:
+            self.set_rails({d: float(v) for d in self._store.domains})
+        elif self.rel.mode == "domain":
             self.domain.set_voltage(v)
             self.params, stats = self.domain.read_pytree("w", self._clean_params)
-            self.stats.merge(stats)
+            self.stats.accumulate(stats)
         elif self.rel.batched:
             self._apply_inline_faults_batched(v)
         else:
             self._apply_inline_faults(v)
 
+    def set_rails(self, volts: dict):
+        """Per-domain voltage step: one fused launch, one counter row per
+        domain crossing to host (multi-rail engines only)."""
+        assert self.rel is not None and self.rel.multi_rail
+        self.rails = {d: float(v) for d, v in volts.items()}
+        self.voltage = max(self.rails.values())  # most conservative rail
+        leaves, dstats = self._store.set_rails(self.rails, ecc=self.rel.ecc)
+        self.params = self._reassemble_params(leaves)
+        self.rail_stats.accumulate(dstats)
+        self.stats.accumulate(dstats.total())
+        self._last_scrub = dstats
+
+    def _reassemble_params(self, leaves):
+        """Put faulty arena slices back into the param tree; embedding-like
+        tables (read by gather, not matmul) are materialised through the ECC
+        decode at refresh time — the fused read path only covers matmuls."""
+        flat = list(self._inline_template)
+        for (i, key), leaf in zip(self._ecc_slots, leaves):
+            flat[i] = _decode_gather_table(leaf) if "embed" in key else leaf
+        return jax.tree_util.tree_unflatten(self._inline_treedef, flat)
+
     def _apply_inline_faults_batched(self, v: float):
         """Whole-model voltage step: one fused inject+scrub kernel launch over
         the plane arena; only the (8,) counter vector crosses to host."""
         leaves, stats = self._store.set_voltage(v, ecc=self.rel.ecc)
-        flat = list(self._inline_template)
-        for (i, _), leaf in zip(self._ecc_slots, leaves):
-            flat[i] = leaf
-        self.params = jax.tree_util.tree_unflatten(self._inline_treedef, flat)
-        self.stats.merge(stats)
+        self.params = self._reassemble_params(leaves)
+        self.stats.accumulate(stats)
         self._last_scrub = stats
 
     def _apply_inline_faults(self, v: float):
@@ -225,10 +320,10 @@ class ServingEngine:
                 # raw faulty bits flow straight into the matmul.
                 faulty = dataclasses.replace(faulty, parity=kops.encode(faulty.lo, faulty.hi))
             status = np.asarray(kops.scrub(faulty))
-            agg.merge(FaultStats.from_decode(status, masks.flip_counts()))
-            out.append(faulty)
+            agg.accumulate(FaultStats.from_decode(status, masks.flip_counts()))
+            out.append(_decode_gather_table(faulty) if "embed" in key else faulty)
         self.params = jax.tree_util.tree_unflatten(treedef, out)
-        self.stats.merge(agg)
+        self.stats.accumulate(agg)
         self._last_scrub = agg
 
     # -- serving --------------------------------------------------------------
@@ -258,8 +353,15 @@ class ServingEngine:
 
     # -- runtime undervolting loop ---------------------------------------------
     def autotune_voltage(self, max_rounds: int = 60):
-        """Paper §III/IV: lower the rail until the ECC's DED flag trips."""
+        """Paper §III/IV: lower the rail(s) until the ECC's DED flag trips.
+
+        Single-rail: returns (locked voltage, history). Multi-rail: every
+        domain walks its own rail to its own first-DED point independently;
+        returns ({domain: voltage}, {domain: history}).
+        """
         assert self.rel is not None and self.controller is not None
+        if self.rel.multi_rail:
+            return self._autotune_rails(max_rounds)
         for _ in range(max_rounds):
             round_stats = (
                 self._last_scrub if self.rel.mode == "inline" else self._domain_scrub()
@@ -272,13 +374,55 @@ class ServingEngine:
             self.set_voltage(v)
         return self.controller.voltage, self.controller.history
 
+    def _autotune_rails(self, max_rounds: int):
+        # Align the arena with the controller's starting schedule so the
+        # first scrub interval reflects the voltages being judged.
+        self.set_rails(self.controller.voltages)
+        for _ in range(max_rounds):
+            volts = self.controller.update(self._last_scrub)
+            # apply the new schedule (the backed-off one on the final round)
+            self.set_rails(volts)
+            if self.controller.locked:
+                break
+        return self.controller.voltages, self.controller.history
+
     def _domain_scrub(self) -> FaultStats:
         agg = FaultStats()
         for name in self.domain.names():
             _, st = self.domain.read(name)
-            agg.merge(st)
+            agg.accumulate(st)
         return agg
 
     def power_w(self) -> float:
-        """Modeled accelerator power at the current rail voltage."""
-        return vmod.accelerator_power(self.voltage, ecc=bool(self.rel and self.rel.ecc))
+        """Modeled accelerator power at the current rail voltage(s)."""
+        ecc = bool(self.rel and self.rel.ecc)
+        if self.rails is not None:
+            return vmod.P_REST_W + vmod.multi_rail_bram_power(
+                self.rails, self._store.words_by_domain(), ecc=ecc
+            )
+        return vmod.accelerator_power(self.voltage, ecc=ecc)
+
+    def power_report(self) -> dict:
+        """Per-rail power breakdown + fractional BRAM saving vs nominal."""
+        ecc = bool(self.rel and self.rel.ecc)
+        if self.rails is not None:
+            words = self._store.words_by_domain()
+            total = max(sum(words.values()), 1)
+            return {
+                "rails": dict(self.rails),
+                "bram_w": vmod.multi_rail_bram_power(self.rails, words, ecc=ecc),
+                "bram_w_by_domain": {
+                    d: (words[d] / total) * vmod.bram_power(v, ecc=ecc)
+                    for d, v in self.rails.items()
+                },
+                "total_w": self.power_w(),
+                "saving_vs_nominal": vmod.multi_rail_power_saving(
+                    self.rails, words, ecc=ecc
+                ),
+            }
+        return {
+            "rails": {"all": self.voltage},
+            "bram_w": vmod.bram_power(self.voltage, ecc=ecc),
+            "total_w": self.power_w(),
+            "saving_vs_nominal": vmod.power_saving(1.0, self.voltage, ecc=ecc),
+        }

@@ -38,6 +38,29 @@ class FaultInjected(RuntimeError):
     """Simulated node failure (tests / chaos drills)."""
 
 
+@dataclasses.dataclass(frozen=True)
+class RailPolicy:
+    """Closed-loop multi-rail undervolting of the training weight memory.
+
+    Every ``scrub_every`` steps the trainer packs the current weights into
+    the SECDED plane arena (partitioned into memory domains), scrubs it at
+    the controller's per-domain rail schedule, and feeds the per-domain
+    telemetry back to the MultiRailController — the paper's runtime DED
+    canary, driven from inside the training loop. The scrub is a *read*
+    path: faults never enter the optimizer state, so loss trajectories are
+    bitwise-identical with the policy on or off (tested).
+    """
+
+    platform: str = "vc707"
+    scrub_every: int = 10
+    step_v: float = 0.01
+    # gradients amplify silent corruption, so training defaults to paranoid
+    paranoid: bool = True
+    start_v: float | None = None
+    mask_source: str = "host"
+    seed: int = 0
+
+
 @dataclasses.dataclass
 class StragglerEvent:
     step: int
@@ -81,6 +104,7 @@ class Trainer:
         seed: int = 0,
         fault_hook: Callable[[int], None] | None = None,
         straggler_hook: Callable[[StragglerEvent], None] | None = None,
+        rails: RailPolicy | None = None,
     ):
         self.cfg = cfg
         self.tcfg = tcfg
@@ -96,10 +120,62 @@ class Trainer:
         self.recoveries = 0
         self.history: list[dict] = []
 
+        self.rails = rails
+        self.rail_controller = None  # built on the first scrub (needs domains)
         self.params = lm.init_params(cfg, jax.random.PRNGKey(seed))
         self.opt_state = adamw.init(self.params, tcfg.optimizer)
         self.step = 0
         self._step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+
+    # -- multi-rail weight-memory scrub ---------------------------------------
+    def _rail_scrub(self):
+        """Pack current weights into the domain arena, scrub at the
+        controller's schedule, feed per-domain telemetry back (paper §III.A
+        run inside the training loop). Read-only w.r.t. training state."""
+        from repro.configs import shapes
+        from repro.core import MultiRailController, voltage as vmod
+        from repro.core.planestore import PlaneStore
+        from repro.kernels import ops as kops
+        from repro.serving.engine import protect_params_inline
+
+        pol = self.rails
+        protected, _ = protect_params_inline(
+            self.params, self.cfg, seed=pol.seed, include_embed=True
+        )
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            protected, is_leaf=lambda x: isinstance(x, kops.EccWeight)
+        )
+        leaves, keys = [], []
+        for path, leaf in flat:
+            if isinstance(leaf, kops.EccWeight):
+                leaves.append(leaf)
+                keys.append(jax.tree_util.keystr(path))
+        if not leaves:
+            return
+        platform = vmod.PLATFORMS[pol.platform]
+        store = PlaneStore(
+            leaves, keys, platform, seed=pol.seed,
+            mask_source=pol.mask_source, domain_key=shapes.domain_of,
+        )
+        if self.rail_controller is None:
+            self.rail_controller = MultiRailController(
+                platform, store.domains, step_v=pol.step_v,
+                paranoid=pol.paranoid, start_v=pol.start_v,
+            )
+        _, dstats = store.set_rails(self.rail_controller.voltages)
+        self.rail_controller.update(dstats)
+        self.history.append(
+            {
+                "step": self.step,
+                "event": "rails",
+                "voltages": dict(self.rail_controller.voltages),
+                "locked": self.rail_controller.locked,
+                "bram_w": vmod.multi_rail_bram_power(
+                    self.rail_controller.voltages, store.words_by_domain()
+                ),
+                "detected": {d: dstats[d].detected for d in store.domains},
+            }
+        )
 
     # -- checkpointing -------------------------------------------------------
     def _state(self):
@@ -162,6 +238,8 @@ class Trainer:
                 self.straggler_hook(self.straggler.events[-1])
             self.step += 1
             self.history.append({"step": self.step, "loss": loss, "seconds": dt})
+            if self.rails is not None and self.step % self.rails.scrub_every == 0:
+                self._rail_scrub()
             if self.step % self.ckpt_every == 0:
                 self.save()
         return self.history
