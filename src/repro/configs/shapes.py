@@ -69,6 +69,25 @@ def domain_of(key: str, default: str = "mlp") -> str:
     return default
 
 
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    """Whether the paged SECDED KV cache (core/kvpages.py) covers this arch.
+
+    Paging fixed-size token pages assumes every mixer is full-context
+    attention with a position-indexed cache: SSM/RWKV state is not paged
+    (it is O(1) per lane, not per token), SWA ring buffers and quantized
+    caches keep their own layouts, and codebook decoders interleave tokens.
+    """
+    all_attn = all(
+        cfg.layer_kind(j)["mixer"] == "attn" for j in range(cfg.period)
+    )
+    return (
+        all_attn
+        and not cfg.sliding_window
+        and not cfg.kv_quant
+        and not cfg.n_codebooks
+    )
+
+
 def supported_shapes(arch: str) -> list[str]:
     names = ["train_4k", "prefill_32k", "decode_32k"]
     if arch in LONG_CONTEXT_ARCHS:

@@ -104,16 +104,31 @@ class MultiRailController:
         profiles = profiles or {}
         self.domains = tuple(domains)
         assert self.domains, "MultiRailController needs at least one domain"
+        self._platform = platform
+        self._defaults = dict(
+            step_v=step_v,
+            backoff_steps=backoff_steps,
+            paranoid=paranoid,
+            start_v=start_v,
+        )
         self.rails = {
-            d: UndervoltController(
-                profiles.get(d, platform),
-                step_v=step_v,
-                backoff_steps=backoff_steps,
-                paranoid=paranoid,
-                start_v=start_v,
-            )
+            d: UndervoltController(profiles.get(d, platform), **self._defaults)
             for d in self.domains
         }
+
+    def add_rail(self, domain: str, profile: PlatformProfile | None = None):
+        """Attach a late-bound rail (e.g. `kv` once the paged cache exists).
+
+        Idempotent; the new rail inherits the controller's step/backoff/
+        paranoia defaults and starts its own DED-canary walk. Returns the
+        rail's UndervoltController.
+        """
+        if domain not in self.rails:
+            self.domains = self.domains + (domain,)
+            self.rails[domain] = UndervoltController(
+                profile or self._platform, **self._defaults
+            )
+        return self.rails[domain]
 
     @property
     def locked(self) -> bool:

@@ -1,0 +1,330 @@
+"""Paged, SECDED-protected KV-cache arena (DESIGN.md §11).
+
+The weight arena (core/planestore.py) made the *static* model state live in
+undervolted ECC memory; this module does the same for the *dynamic* state —
+the KV cache — so the paper's power saving applies to serving, where the
+cache dominates on-chip memory traffic. The `kv` voltage domain introduced
+with the multi-rail work (configs/shapes.MEMORY_DOMAINS) is backed here with
+real storage for the first time.
+
+Layout
+  * The arena is a flat word store of ``n_pages`` fixed-size pages (plus one
+    scratch page masked writes land on). A page holds ``page_tokens`` tokens;
+    one token's payload is every attention layer's K and V row for that
+    position, bitcast f32 -> uint32 and packed two words per SECDED(72,64)
+    codeword: lo/hi uint32 planes + a uint8 parity plane, exactly the word
+    geometry of the weight path.
+  * `PageAllocator` hands out pages with single-owner bookkeeping; the
+    continuous-batching scheduler (serving/scheduler.py) allocates one page
+    per ``page_tokens`` positions per request and frees them on retire or
+    preemption.
+  * Writes encode (kernels/ops.encode); reads gather page rows and travel
+    through the scrub-on-read kernel (kernels/paged_gather.py) which
+    corrects single-bit faults, writes the corrected planes back, and emits
+    per-page (clean, corrected, detected) counters.
+  * `tick()` injects one interval's undervolting faults at the current `kv`
+    rail voltage. Unlike the weight store — which keeps clean planes and
+    re-derives the faulty view per voltage — the cache is mutable, so faults
+    are XORed *into* the stored planes and persist until a scrub corrects
+    them or a write overwrites the cell; each interval draws a fresh mask
+    (key folded with the interval counter), modelling fault accumulation on
+    a live memory rather than a voltage re-materialisation.
+
+At nominal voltage no mask is ever non-zero and encode->decode is the
+identity on the bitcast payload, so the paged read path is bit-identical to
+a dense cache (tested in tests/test_kvpaged.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.faultsim import _device_chunk_masks_jit
+from repro.core.telemetry import FaultStats
+from repro.core.voltage import PlatformProfile
+from repro.kernels import ops as kops
+from repro.kernels import paged_gather
+from repro.kernels.secded import _compute_parity
+
+PAGE_TOKENS = 8  # default page size (tokens); 2^k keeps slot math cheap
+
+
+@dataclasses.dataclass(frozen=True)
+class KVGeometry:
+    """Word-level geometry of one model's paged KV cache."""
+
+    attn_positions: tuple[int, ...]  # period positions with an attn mixer
+    n_groups: int
+    n_kv_heads: int
+    head_dim: int
+    page_tokens: int = PAGE_TOKENS
+
+    @classmethod
+    def from_config(cls, cfg, page_tokens: int = PAGE_TOKENS) -> "KVGeometry":
+        attn = tuple(
+            j for j in range(cfg.period) if cfg.layer_kind(j)["mixer"] == "attn"
+        )
+        assert attn, f"{cfg.name}: no attention layers to page"
+        return cls(attn, cfg.n_groups, cfg.n_kv_heads, cfg.hd, int(page_tokens))
+
+    @property
+    def token_f32(self) -> int:
+        """f32 values per token: K and V rows of every attention layer."""
+        return 2 * len(self.attn_positions) * self.n_groups * self.n_kv_heads * self.head_dim
+
+    @property
+    def token_words(self) -> int:
+        """64-bit SECDED codewords per token (two f32 per codeword)."""
+        return self.token_f32 // 2
+
+    @property
+    def words_per_page(self) -> int:
+        return self.page_tokens * self.token_words
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.page_tokens)
+
+
+class PageAllocator:
+    """Free-list page allocator with single-owner bookkeeping.
+
+    Owners are opaque hashables (request ids). The double-alloc / foreign-free
+    asserts are the invariants the hypothesis tests drive.
+
+    Freed pages land on a *dirty* list, not the free list: they still hold
+    the previous owner's words and re-enter circulation via ``recycle()``.
+    Note that sitting on the *free* list is no guarantee of cleanliness
+    either — ``KVPageArena.tick`` injects faults into every arena word,
+    allocated or not — so the serving loop zero-wipes *newly allocated*
+    pages (in one batched scatter, and only once the arena has ever
+    faulted) before any commit touches them: stale words and latent DED
+    events from a page's past are never attributed to its next owner.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = int(n_pages)
+        self._free = list(range(self.n_pages - 1, -1, -1))  # pop() -> page 0 first
+        self._dirty: list[int] = []
+        self._owner: dict[int, object] = {}
+
+    @property
+    def free_pages(self) -> int:
+        """Pages allocatable without preemption (clean + recyclable)."""
+        return len(self._free) + len(self._dirty)
+
+    @property
+    def dirty_pages(self) -> int:
+        return len(self._dirty)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - self.free_pages
+
+    def owner_of(self, page: int):
+        return self._owner.get(page)
+
+    def alloc(self, owner) -> int | None:
+        """One *clean* page for ``owner``; None if the clean list is empty
+        (the caller recycles the dirty list or preempts)."""
+        if not self._free:
+            return None
+        page = self._free.pop()
+        assert page not in self._owner, f"page {page} double-allocated"
+        self._owner[page] = owner
+        return page
+
+    def free(self, pages, owner) -> None:
+        for page in pages:
+            assert self._owner.get(page) == owner, (
+                f"page {page} freed by {owner!r} but owned by {self._owner.get(page)!r}"
+            )
+            del self._owner[page]
+            self._dirty.append(page)
+
+    def recycle(self) -> list:
+        """Move the dirty list to the free list; returns the batch (the
+        serving loop's allocation-time wipe handles the zeroing)."""
+        batch, self._dirty = self._dirty, []
+        self._free.extend(batch)
+        return batch
+
+
+# ---------------------------------------------------------------------------
+# jit'd arena primitives (module-level so tracing is shared across arenas)
+# ---------------------------------------------------------------------------
+def _payload_to_planes(payload):
+    """(N, token_f32) f32 -> lo/hi (N, token_words) uint32 + parity uint8.
+
+    Parity comes from the same `_compute_parity` Hsiao chains the Pallas
+    encode kernel runs, called as plain jnp inside the already-jit'd commit:
+    the per-token write path is XLA-fused with the extract/scatter around it
+    instead of paying a kernel launch per decode step. Bit-identical to
+    `kernels/ops.encode` (it is the same function).
+    """
+    u = jax.lax.bitcast_convert_type(payload.astype(jnp.float32), jnp.uint32)
+    lo, hi = u[:, 0::2], u[:, 1::2]
+    return lo, hi, _compute_parity(lo, hi).astype(jnp.uint8)
+
+
+def _planes_to_payload(lo, hi):
+    """Inverse of `_payload_to_planes` (parity is not part of the payload)."""
+    u = jnp.stack([lo, hi], axis=-1).reshape(lo.shape[0], -1)
+    return jax.lax.bitcast_convert_type(u, jnp.float32)
+
+
+@jax.jit
+def _scatter_rows(plane, idx, rows):
+    return plane.at[idx].set(rows)
+
+
+@jax.jit
+def _xor_into(plane, mask):
+    return plane ^ mask
+
+
+def _row_index(page_ids, words_per_page):
+    """(P,) page ids -> (P, words_per_page) flat word indices."""
+    return page_ids[:, None] * words_per_page + jnp.arange(
+        words_per_page, dtype=jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("token_words", "words_per_page"))
+def _commit_tokens(lo, hi, par, payload, page_ids, slots, *, token_words, words_per_page):
+    """Encode token payload rows and scatter them into the arena planes."""
+    rlo, rhi, rpar = _payload_to_planes(payload)
+    base = page_ids * words_per_page + slots * token_words
+    idx = base[:, None] + jnp.arange(token_words, dtype=jnp.int32)[None, :]
+    return lo.at[idx].set(rlo), hi.at[idx].set(rhi), par.at[idx].set(rpar)
+
+
+@functools.partial(jax.jit, static_argnames=("words_per_page", "interpret"))
+def _scrub_rows(lo, hi, par, page_ids, *, words_per_page, interpret):
+    """Gather page rows, scrub-on-read, write corrected planes back."""
+    idx = _row_index(page_ids, words_per_page)
+    olo, ohi, opar, cnt = paged_gather.gather_scrub_pages(
+        lo[idx], hi[idx], par[idx], interpret=interpret
+    )
+    return lo.at[idx].set(olo), hi.at[idx].set(ohi), par.at[idx].set(opar), olo, ohi, cnt
+
+
+class KVPageArena:
+    """The paged KV store: flat SECDED planes + rail state + fault model.
+
+    ``n_pages`` real pages plus one scratch row (index ``n_pages``) that
+    masked/inactive writes are steered to; the scratch row is never read.
+    """
+
+    def __init__(
+        self,
+        geom: KVGeometry,
+        profile: PlatformProfile,
+        n_pages: int,
+        seed: int = 0,
+        ecc: bool = True,
+    ):
+        self.geom = geom
+        self.profile = profile
+        self.n_pages = int(n_pages)
+        self.ecc = bool(ecc)
+        self.seed = int(seed)
+        w = geom.words_per_page
+        self.n_words = self.n_pages * w  # real (non-scratch) words
+        total = (self.n_pages + 1) * w
+        self._total_words = total
+        self.lo = jnp.zeros((total,), jnp.uint32)
+        self.hi = jnp.zeros((total,), jnp.uint32)
+        # all-zero data has all-zero Hsiao parity: the empty arena is clean
+        self.parity = jnp.zeros((total,), jnp.uint8)
+        self.voltage = float(profile.v_nom)
+        self._key = jax.random.PRNGKey(self.seed ^ 0xCACE)
+        self._interval = 0
+        self.faulted = False  # True once any tick() injected a mask
+        self.stats = FaultStats()  # cumulative scrub-on-read telemetry
+
+    @property
+    def scratch_page(self) -> int:
+        return self.n_pages
+
+    # -- rail ---------------------------------------------------------------
+    def set_voltage(self, v: float) -> None:
+        self.voltage = float(v)
+
+    def tick(self) -> None:
+        """Inject one interval's faults at the current rail voltage.
+
+        Fresh draw per interval (key folded with the interval counter): a
+        live memory keeps accumulating faults while undervolted, it does not
+        re-materialise them per voltage like the read-only weight arena.
+        Inside the guardband the rate is exactly 0 and this is a no-op.
+        """
+        self._interval += 1
+        rate = self.profile.fault_rate(self.voltage)
+        if rate <= 0.0:
+            return
+        key = jax.random.fold_in(self._key, self._interval)
+        self.faulted = True
+        mlo, mhi, mpar = _device_chunk_masks_jit()(
+            key, self._total_words, jnp.float32(rate), jnp.float32(self.profile.row_sigma)
+        )
+        self.lo = _xor_into(self.lo, mlo)
+        self.hi = _xor_into(self.hi, mhi)
+        self.parity = _xor_into(self.parity, mpar)
+        if not self.ecc:
+            # No-ECC baseline: parity tracks the faulty data, the read-path
+            # decoder becomes a pass-through and faults flow into attention.
+            self.parity = kops.encode(self.lo, self.hi)
+
+    # -- data path ----------------------------------------------------------
+    def zero_pages(self, page_ids) -> None:
+        """Clear freshly allocated pages (all-zero data + parity is a valid
+        clean codeword). Without this, a page re-allocated to a new request
+        would expose the previous owner's stale — possibly faulty — words to
+        the new owner's scrub, polluting its DED accounting and the canary."""
+        ids = jnp.asarray(page_ids, jnp.int32).reshape(-1)
+        if ids.size == 0:
+            return
+        idx = _row_index(ids, self.geom.words_per_page)
+        z32 = jnp.zeros(idx.shape, jnp.uint32)
+        self.lo = _scatter_rows(self.lo, idx, z32)
+        self.hi = _scatter_rows(self.hi, idx, z32)
+        self.parity = _scatter_rows(self.parity, idx, jnp.zeros(idx.shape, jnp.uint8))
+
+    def commit_tokens(self, payload, page_ids, slots) -> None:
+        """Write one token per row: payload (N, token_f32) f32, page_ids and
+        slots (N,) int32 (slot = position within the page). Rows steered to
+        the scratch page are don't-cares (inactive lanes)."""
+        self.lo, self.hi, self.parity = _commit_tokens(
+            self.lo,
+            self.hi,
+            self.parity,
+            payload,
+            jnp.asarray(page_ids, jnp.int32),
+            jnp.asarray(slots, jnp.int32),
+            token_words=self.geom.token_words,
+            words_per_page=self.geom.words_per_page,
+        )
+
+    def scrub_pages(self, page_ids):
+        """Scrub-on-read of ``page_ids`` (any shape, flattened): returns
+        (payload (P, page_tokens, token_f32) f32, counters (P, 8) np.int32)
+        and commits the corrected planes (scrub write-back)."""
+        ids = jnp.asarray(page_ids, jnp.int32).reshape(-1)
+        self.lo, self.hi, self.parity, olo, ohi, cnt = _scrub_rows(
+            self.lo,
+            self.hi,
+            self.parity,
+            ids,
+            words_per_page=self.geom.words_per_page,
+            interpret=kops.use_interpret(),
+        )
+        payload = _planes_to_payload(
+            olo.reshape(-1, self.geom.token_words),
+            ohi.reshape(-1, self.geom.token_words),
+        ).reshape(ids.shape[0], self.geom.page_tokens, self.geom.token_f32)
+        return payload, np.asarray(cnt)

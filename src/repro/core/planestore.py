@@ -74,6 +74,7 @@ class PlaneStore:
         self.seed = int(seed)
         self.mask_source = mask_source
         self._profiles = dict(profiles or {})
+        self._external_words: dict[str, int] = {}
         classify = domain_key if domain_key is not None else (lambda _k: "all")
         slots, off = [], 0
         los, his, pars = [], [], []
@@ -125,11 +126,25 @@ class PlaneStore:
     def domain_profile(self, domain: str) -> PlatformProfile:
         return self._profiles.get(domain, self.platform)
 
+    def register_domain_words(self, domain: str, words: int) -> None:
+        """Account storage that lives *outside* the weight arena — e.g. the
+        paged KV cache (core/kvpages.py) — under a named domain.
+
+        External domains join ``words_by_domain`` (power weighting, telemetry
+        denominators) but not the arena's counter rows: their planes are not
+        part of this store's fused inject+scrub launch, they carry their own
+        fault machinery and report telemetry separately.
+        """
+        self._external_words[str(domain)] = int(words)
+
     def words_by_domain(self) -> dict:
-        """Word count per domain (power weighting + telemetry denominators)."""
+        """Word count per domain (power weighting + telemetry denominators),
+        arena slots plus any registered external domains."""
         counts = dict.fromkeys(self.domains, 0)
         for s in self.slots:
             counts[s.domain] += s.size
+        for d, w in self._external_words.items():
+            counts[d] = counts.get(d, 0) + w
         return counts
 
     # -- masks ---------------------------------------------------------------

@@ -215,3 +215,63 @@ def sweep_rail_schedules(
         FaultStats.from_counter_matrix(total[s], domains, words_by_domain)
         for s in range(len(schedules))
     ]
+
+
+# ---------------------------------------------------------------------------
+# CLI (nightly CI lane): the paper's platform x voltage grid as JSON
+# ---------------------------------------------------------------------------
+def paper_grid():
+    """All three paper platforms x their critical-region voltage steps."""
+    from repro.core import voltage
+
+    pairs = []
+    for prof in voltage.PLATFORMS.values():
+        vs = np.round(np.arange(prof.v_crash, prof.v_min + 1e-9, 0.01), 3)
+        pairs.extend((prof, float(v)) for v in vs)
+    return pairs
+
+
+def main(argv=None) -> None:
+    """``python -m repro.core.sweep [--out FILE] [--words N] [--seed S]``
+
+    Runs the full vmapped platform x voltage sweep on the paper's tested-
+    memory geometry and writes one JSON row per grid point — the trajectory
+    artifact the nightly CI lane uploads so fault-curve drift is visible
+    across commits.
+    """
+    import argparse
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("--out", default=None, help="JSON output path (default stdout)")
+    ap.add_argument("--words", type=int, default=512 * 1024)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    points = sweep_platform_grid(paper_grid(), args.words, seed=args.seed)
+    rows = [
+        {
+            "platform": p.platform,
+            "voltage": p.voltage,
+            "words": p.stats.words,
+            "faulty_words": p.stats.faulty_words,
+            "faulty_bits": p.stats.faulty_bits,
+            "corrected": p.stats.corrected,
+            "detected": p.stats.detected,
+            "silent": p.stats.silent,
+            "coverage": p.stats.coverage(),
+            "dispatches": dispatch_count(),
+        }
+        for p in points
+    ]
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {len(rows)} sweep points -> {args.out}")
+    else:
+        json.dump(rows, sys.stdout, indent=1)
+
+
+if __name__ == "__main__":
+    main()

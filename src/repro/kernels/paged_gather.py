@@ -1,0 +1,160 @@
+"""Pallas kernel: paged KV-cache gather with scrub-on-read (DESIGN.md §11).
+
+The paged serving path stores the *dynamic* model state — the KV cache — in
+SECDED-encoded pages carved out of the `kv` voltage domain (core/kvpages.py).
+Every read of a page must travel through the ECC decoder so undervolting
+faults in the cache are corrected before they reach attention, and so the
+per-page DED counters exist to feed the `kv` rail's canary controller.
+
+This kernel is the read path: given the already-gathered (n_pages, W) word
+planes of the pages one batch of requests needs, it
+
+  * recomputes the SECDED syndrome per 72-bit codeword (same gather-free
+    Hsiao chains as `kernels/secded.py`),
+  * corrects single-bit faults in registers and writes the *corrected*
+    planes out (the scrub write-back the arena commits, so a corrected fault
+    does not accumulate into a double fault at the next rail step), and
+  * reduces one (clean, corrected, detected) counter row **per page** — the
+    per-page telemetry that is attributed to the request that owns the page
+    and aggregated into the `kv` domain's DomainFaultStats row.
+
+Counter row layout matches telemetry.COUNTER_FIELDS lanes 0..2 (clean,
+corrected, detected); the ground-truth lanes stay zero because the read path
+— like real hardware — only observes syndromes, not injected masks.
+
+Grid: ``page_block`` pages per grid row (per-page counters come from a
+within-block row reduction, so the grid stays small — this is what keeps
+interpret-mode scrubs usable in CI), `W` column-blocked with accumulation
+over column steps; counter rows for a page are written by its row blocks
+only, so there are no cross-page races.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hsiao
+from repro.kernels.secded import _compute_parity
+
+_U32 = jnp.uint32
+
+_CNT_LANES = 128  # lane-aligned counter row (lanes 0..2 used)
+
+
+def _gather_scrub_kernel(lo_ref, hi_ref, par_ref, olo_ref, ohi_ref, opar_ref, cnt_ref):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    stored = par_ref[...].astype(_U32)
+    synd = _compute_parity(lo, hi) ^ stored
+
+    flip_lo = jnp.zeros_like(lo)
+    flip_hi = jnp.zeros_like(hi)
+    matched = jnp.zeros_like(lo, dtype=jnp.bool_)
+    for d in range(hsiao.N_DATA):
+        col = _U32(int(hsiao.DATA_COLS[d]))
+        m = synd == col
+        matched = matched | m
+        if d < 32:
+            flip_lo = jnp.where(m, flip_lo | _U32(1 << d), flip_lo)
+        else:
+            flip_hi = jnp.where(m, flip_hi | _U32(1 << (d - 32)), flip_hi)
+    for r in range(hsiao.N_PARITY):
+        matched = matched | (synd == _U32(1 << r))  # parity-bit error: data fine
+
+    clean = synd == _U32(0)
+    corrected = matched & ~clean
+    detected = ~clean & ~matched
+    olo = lo ^ flip_lo
+    ohi = hi ^ flip_hi
+    olo_ref[...] = olo
+    ohi_ref[...] = ohi
+    # Scrub write-back parity: recompute over the corrected data so a
+    # corrected parity-bit fault is cleared too; *detected* words keep their
+    # stored parity so the DED flag stays latched on re-reads (the data is
+    # wrong and must keep flagging, exactly like the hardware).
+    opar_ref[...] = jnp.where(
+        detected, par_ref[...], _compute_parity(olo, ohi).astype(jnp.uint8)
+    )
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (lo.shape[0], _CNT_LANES), 1)
+    rowsum = lambda t: jnp.sum(t.astype(jnp.int32), axis=1, keepdims=True)
+    vals = (
+        jnp.where(lane == 0, rowsum(clean), 0)
+        + jnp.where(lane == 1, rowsum(corrected), 0)
+        + jnp.where(lane == 2, rowsum(detected), 0)
+    )
+    first = pl.program_id(1) == 0
+
+    @pl.when(first)
+    def _():
+        cnt_ref[...] = vals
+
+    @pl.when(jnp.logical_not(first))
+    def _():
+        cnt_ref[...] = cnt_ref[...] + vals
+
+
+@functools.partial(
+    jax.jit, static_argnames=("page_block", "block_cols", "interpret")
+)
+def gather_scrub_2d(lo, hi, parity, *, page_block=16, block_cols=4096, interpret=False):
+    """Scrub a stack of gathered pages.
+
+    lo/hi: (P, W) uint32, parity: (P, W) uint8; P a multiple of
+    ``page_block``, W a multiple of 128. Returns (corrected_lo, corrected_hi,
+    parity, counters (P, 128) int32) where counters[i, 0:3] =
+    (clean, corrected, detected) for page i.
+    """
+    p_rows, w = lo.shape
+    bp = min(page_block, p_rows)
+    bn = min(block_cols, w)
+    grid = (pl.cdiv(p_rows, bp), pl.cdiv(w, bn))
+    spec = pl.BlockSpec((bp, bn), lambda i, j: (i, j))
+    cnt_spec = pl.BlockSpec((bp, _CNT_LANES), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        _gather_scrub_kernel,
+        grid=grid,
+        in_specs=[spec] * 3,
+        out_specs=[spec, spec, spec, cnt_spec],
+        out_shape=(
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
+            jax.ShapeDtypeStruct(lo.shape, jnp.uint8),
+            jax.ShapeDtypeStruct((p_rows, _CNT_LANES), jnp.int32),
+        ),
+        interpret=interpret,
+    )(lo, hi, parity)
+
+
+def gather_scrub_pages(lo, hi, parity, *, interpret: bool | None = None):
+    """Shape-tolerant wrapper: pads P/W to block multiples, trims the result.
+
+    lo/hi: (P, W) uint32 planes of P gathered pages (any P, W >= 1); parity
+    (P, W) uint8. Returns (lo', hi', parity', counters (P, 8) int32) with
+    counters[:, 0:3] = per-page (clean, corrected, detected); pad words and
+    pad pages decode clean and are trimmed/subtracted.
+    """
+    from repro.kernels import ops as kops
+
+    interpret = kops.use_interpret() if interpret is None else interpret
+    kops._count_launch()
+    p_rows, w = lo.shape
+    pad_w = (-w) % 128
+    bp = min(16, max(p_rows, 1))
+    pad_p = (-p_rows) % bp
+    if pad_w or pad_p:
+        zp = lambda a, dt: jnp.pad(a, ((0, pad_p), (0, pad_w))).astype(dt)
+        lo, hi, parity = zp(lo, jnp.uint32), zp(hi, jnp.uint32), zp(parity, jnp.uint8)
+    olo, ohi, opar, cnt = gather_scrub_2d(
+        lo, hi, parity, page_block=bp, interpret=interpret
+    )
+    cnt = cnt[:p_rows, :8]
+    if pad_p or pad_w:
+        olo, ohi, opar = olo[:p_rows, :w], ohi[:p_rows, :w], opar[:p_rows, :w]
+    if pad_w:
+        cnt = cnt - pad_w * jnp.eye(1, 8, 0, dtype=jnp.int32)
+    return olo, ohi, opar, cnt

@@ -216,8 +216,10 @@ def banded_attention(q, k, v, *, window, q_chunk=1024, unroll=1):
 def decode_attention(q, k_cache, v_cache, cur_len, *, window=0):
     """One-token attention against a KV cache.
 
-    q: (B, 1, H, Dh); caches: (B, S_max, Hkv, Dh); cur_len: () int32 — number
-    of valid cache entries (including the token being decoded).
+    q: (B, 1, H, Dh); caches: (B, S_max, Hkv, Dh); cur_len: () or (B,) int32 —
+    number of valid cache entries (including the token being decoded); a (B,)
+    vector gives every lane its own depth (continuous batching mixes requests
+    at different positions in one batch).
     Softmax reductions over the cache S axis work transparently when S is
     sequence-sharded (flash-decoding lowers to tiny all-reduces).
     """
@@ -229,6 +231,9 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0):
         dh
     ).astype(jnp.float32)
     kpos = jnp.arange(smax)[None, None, None, None, :]
+    cur_len = jnp.asarray(cur_len)
+    if cur_len.ndim:
+        cur_len = cur_len.reshape(b, 1, 1, 1, 1)
     valid = kpos < cur_len
     if window:
         valid = valid & (kpos >= cur_len - window)

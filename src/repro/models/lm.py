@@ -308,7 +308,12 @@ def _attn_block(x, p, cfg, *, mode, cache, pos, img=None, cross=False):
 
     q, k, v = layers.qkv_proj(h, p["attn"], cfg)
     if mode == "decode":
-        positions = jnp.full((b, 1), pos)
+        # pos is a scalar (whole batch at one position, the historical path)
+        # or a (B,) vector (continuous batching: every lane decodes its own
+        # position). The scalar path is kept byte-for-byte so existing
+        # fixed-batch rollouts stay bit-identical.
+        pos_v = jnp.asarray(pos)
+        positions = jnp.full((b, 1), pos) if pos_v.ndim == 0 else pos_v[:, None]
     else:
         positions = jnp.arange(s)[None, :]
     q = layers.apply_rope(q, positions, cfg.rope_theta)
@@ -319,20 +324,27 @@ def _attn_block(x, p, cfg, *, mode, cache, pos, img=None, cross=False):
     if mode == "decode":
         smax = cache["k"].shape[1]
         # SWA caches are ring buffers of size `window`: slot = pos % smax.
-        slot = pos % smax if w else jnp.minimum(pos, smax - 1)
+        slot = pos_v % smax if w else jnp.minimum(pos_v, smax - 1)
+        if pos_v.ndim:
+            # per-lane slot: vmap the row update over the batch axis
+            upd = jax.vmap(
+                lambda c, x, s_: jax.lax.dynamic_update_slice_in_dim(c, x, s_, 0)
+            )
+        else:
+            upd = lambda c, x, s_: jax.lax.dynamic_update_slice_in_dim(c, x, s_, 1)
         if cfg.kv_quant:
             kq, vq, sc = _quant_kv(k, v)
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, 1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, 1)
-            csc = jax.lax.dynamic_update_slice_in_dim(cache["kv_scale"], sc, slot, 1)
+            ck = upd(cache["k"], kq, slot)
+            cv = upd(cache["v"], vq, slot)
+            csc = upd(cache["kv_scale"], sc, slot)
             new_cache = {"k": ck, "v": cv, "kv_scale": csc}
             kd, vd = _dequant_kv(ck, cv, csc, cfg.compute_dtype)
         else:
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+            ck = upd(cache["k"], k.astype(cache["k"].dtype), slot)
+            cv = upd(cache["v"], v.astype(cache["v"].dtype), slot)
             new_cache = {"k": ck, "v": cv}
             kd, vd = ck, cv
-        cur = jnp.minimum(pos + 1, smax) if w else pos + 1
+        cur = jnp.minimum(pos_v + 1, smax) if w else pos_v + 1
         out = layers.decode_attention(q, kd, vd, cur)
     else:
         if mode == "prefill":
@@ -606,7 +618,8 @@ def greedy_decode_loop(params, tok0, cfg: ModelConfig, cache, start_pos, n_steps
 
 def decode_step(params, tokens, cfg: ModelConfig, cache, pos, *, img=None):
     """One decode step. tokens: (B, 1) or (B, K, 1). pos: scalar int32 —
-    0-based position of the token being processed."""
+    0-based position of the token being processed — or a (B,) int32 vector
+    giving every batch lane its own position (continuous batching)."""
     hidden, new_cache, _ = forward(
         params, tokens, cfg, img=img, cache=cache, pos=pos, mode="decode"
     )

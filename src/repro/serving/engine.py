@@ -28,12 +28,15 @@ import numpy as np
 from repro.configs import shapes
 from repro.core import MultiRailController, UndervoltController, voltage as vmod
 from repro.core.faultsim import FaultField
+from repro.core.kvpages import PAGE_TOKENS, KVGeometry, KVPageArena
 from repro.core.memory import EccMemoryDomain
 from repro.core.planestore import PlaneStore, leaf_seed
 from repro.core.telemetry import DomainFaultStats, FaultStats
 from repro.kernels import ops as kops
 from repro.models import lm
 from repro.models.base import ModelConfig
+from repro.serving import scheduler as sched
+from repro.serving import steps as serve_steps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -261,9 +264,16 @@ class ServingEngine:
 
     def set_rails(self, volts: dict):
         """Per-domain voltage step: one fused launch, one counter row per
-        domain crossing to host (multi-rail engines only)."""
+        domain crossing to host (multi-rail engines only). Rails not named
+        in ``volts`` (the late-bound `kv` cache rail, whose storage lives
+        outside the weight arena) keep their current voltage — dropping
+        them would silently skew the power accounting, which weights every
+        domain in ``words_by_domain`` including the registered cache words."""
         assert self.rel is not None and self.rel.multi_rail
-        self.rails = {d: float(v) for d, v in volts.items()}
+        new = {d: float(v) for d, v in volts.items()}
+        if self.rails:
+            new = {**self.rails, **new}
+        self.rails = new
         self.voltage = max(self.rails.values())  # most conservative rail
         leaves, dstats = self._store.set_rails(self.rails, ecc=self.rel.ecc)
         self.params = self._reassemble_params(leaves)
@@ -351,6 +361,100 @@ class ServingEngine:
         )
         return np.concatenate([np.asarray(tok), np.asarray(toks)], axis=1)
 
+    # -- continuous batching over the paged SECDED KV cache --------------------
+    def serve(
+        self,
+        requests,
+        *,
+        n_lanes: int = 4,
+        page_tokens: int = PAGE_TOKENS,
+        n_pages: int | None = None,
+        scrub_interval: int = 1,
+        max_block: int = 16,
+        kv_voltage: float | None = None,
+        walk_kv: bool = False,
+    ) -> sched.ServeReport:
+        """Serve a stream of variable-length requests (DESIGN.md §11).
+
+        ``requests``: iterable of (prompt (s0,) int32, max_new_tokens) pairs
+        or scheduler.Request objects. The KV cache lives in SECDED pages on
+        the `kv` voltage domain; every read scrubs. At nominal voltage the
+        output tokens are bit-identical to `generate` on the same batch
+        composition (tested).
+
+        ``walk_kv`` (multi-rail engines): attach a `kv` rail to the
+        MultiRailController and let the per-interval scrub DED counters walk
+        the cache voltage independently of the weight rails.
+        """
+        assert shapes.supports_paged_kv(self.cfg), (
+            f"{self.cfg.name}: paged KV unsupported (see shapes.supports_paged_kv)"
+        )
+        profile = self.platform or vmod.PLATFORMS["vc707"]
+        if self.rel is not None and self.rel.multi_rail:
+            profile = self._store.domain_profile("kv")
+        geom = KVGeometry.from_config(self.cfg, page_tokens)
+        if n_pages is None:
+            n_pages = n_lanes * geom.pages_for(self.max_len)
+        arena = KVPageArena(
+            geom,
+            profile,
+            n_pages,
+            seed=self.rel.seed if self.rel else 0,
+            ecc=self.rel.ecc if self.rel else True,
+        )
+        if kv_voltage is None:
+            if self.rails is not None and "kv" in self.rails:
+                kv_voltage = self.rails["kv"]
+            elif self.rel is not None:
+                kv_voltage = self.voltage
+            else:
+                kv_voltage = profile.v_nom
+        arena.set_voltage(float(kv_voltage))
+
+        kv_controller = None
+        if walk_kv:
+            assert self.rel is not None and self.rel.multi_rail, (
+                "walk_kv needs a multi-rail engine"
+            )
+            kv_controller = self.controller.add_rail("kv", profile)
+            # The controller is the source of truth for the walked rail: the
+            # arena must inject interval-1 faults at the voltage the canary
+            # believes it is judging, or the first-DED decision is made on
+            # telemetry from a different operating point. (An explicit
+            # kv_voltage only pins the rail when it is not being walked.)
+            arena.set_voltage(kv_controller.voltage)
+        helpers = self._paged_helpers(geom)
+        report = sched.serve_stream(
+            self.params,
+            self.cfg,
+            helpers,
+            arena,
+            requests,
+            n_lanes=n_lanes,
+            max_len=self.max_len,
+            scrub_interval=scrub_interval,
+            max_block=max_block,
+            kv_controller=kv_controller,
+        )
+        # Fold the cache telemetry + storage into the engine's books: the kv
+        # domain now has real words (power weighting) and real counters.
+        self.stats.accumulate(report.kv_stats)
+        self.rail_stats.accumulate(DomainFaultStats({"kv": report.kv_stats}))
+        if self.rel is not None and self.rel.mode == "inline":
+            self._store.register_domain_words("kv", arena.n_words)
+        if self.rails is not None:
+            self.rails["kv"] = arena.voltage
+        self.kv_arena = arena
+        return report
+
+    def _paged_helpers(self, geom: KVGeometry) -> dict:
+        cache = getattr(self, "_paged_helper_cache", None)
+        if cache is None:
+            cache = self._paged_helper_cache = {}
+        if geom not in cache:
+            cache[geom] = serve_steps.make_paged_helpers(self.cfg, geom)
+        return cache[geom]
+
     # -- runtime undervolting loop ---------------------------------------------
     def autotune_voltage(self, max_rounds: int = 60):
         """Paper §III/IV: lower the rail(s) until the ECC's DED flag trips.
@@ -378,11 +482,15 @@ class ServingEngine:
         # Align the arena with the controller's starting schedule so the
         # first scrub interval reflects the voltages being judged.
         self.set_rails(self.controller.voltages)
+        # Only the weight-arena rails are judged here: a late-attached `kv`
+        # rail gets its telemetry from the serving stream (serve(walk_kv=True)),
+        # not from the weight scrub, and must not stall this loop.
+        arena_rails = self._store.domains
         for _ in range(max_rounds):
             volts = self.controller.update(self._last_scrub)
             # apply the new schedule (the backed-off one on the final round)
             self.set_rails(volts)
-            if self.controller.locked:
+            if all(self.controller.rails[d].locked for d in arena_rails):
                 break
         return self.controller.voltages, self.controller.history
 

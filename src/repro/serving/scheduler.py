@@ -1,0 +1,413 @@
+"""Continuous-batching scheduler over the paged SECDED KV cache.
+
+The fixed-batch engine (`ServingEngine.generate`) serves one rectangular
+batch: every request the same prompt length, every request decoded for the
+same number of tokens, lanes idle once their request is done. This module
+serves a *stream* of variable-length requests instead (DESIGN.md §11):
+
+  * a fixed number of batch *lanes* decode in lock-step, each lane at its own
+    sequence position (models/lm.py per-lane `pos` vectors);
+  * requests are admitted FCFS into free lanes when the page arena has room
+    for their prompt (plus one decode page);
+  * each lane's KV is committed token-by-token into SECDED pages
+    (core/kvpages.py); pages are allocated on demand as a request crosses a
+    page boundary;
+  * under page pressure the *youngest* running request is preempted
+    (recompute-style: pages freed, request re-queued at the front; on
+    re-admission its prompt plus already-generated tokens are re-prefilled),
+    so the oldest requests always make progress;
+  * every ``scrub_interval`` steps the arena injects the current `kv`-rail
+    interval faults, all live pages are scrubbed-on-read (corrected planes
+    written back, per-page counters attributed to the owning request), and
+    lane caches are refreshed from the corrected payload. The interval's
+    aggregate counters optionally drive the `kv` rail of a
+    MultiRailController — the cache voltage walks independently of the
+    weight rails.
+
+Scheduling is pure host logic; all device work goes through the jit'd
+helpers from serving/steps.py and the arena methods, with fixed shapes so
+nothing retraces across steps (prefill/commit trace once per distinct
+prompt length).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.core.kvpages import KVGeometry, KVPageArena, PageAllocator
+from repro.core.telemetry import FaultStats
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request: a prompt and a greedy-decode budget."""
+
+    rid: int
+    prompt: np.ndarray  # (s0,) int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class RequestState:
+    req: Request
+    status: str = "waiting"  # waiting | running | finished
+    lane: int = -1
+    admit_seq: int = -1  # admission order; preemption evicts the youngest
+    pages: list = dataclasses.field(default_factory=list)
+    tokens: list = dataclasses.field(default_factory=list)  # generated so far
+    stats: FaultStats = dataclasses.field(default_factory=FaultStats)
+    preemptions: int = 0
+
+    @property
+    def rid(self) -> int:
+        return self.req.rid
+
+    @property
+    def stored(self) -> int:
+        """Tokens whose KV lives in pages: prompt + fed decode tokens.
+
+        The freshest generated token is produced *before* its KV is written
+        (it is stored when fed to the next decode step), hence the -1.
+        """
+        return len(self.req.prompt) + max(len(self.tokens) - 1, 0)
+
+    @property
+    def resume_seq(self) -> np.ndarray:
+        """Token sequence a (re-)admission prefills: prompt + all generated
+        tokens except the last (whose KV the next decode step will write)."""
+        gen = np.asarray(self.tokens[:-1], np.int32)
+        return np.concatenate([self.req.prompt.astype(np.int32), gen])
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.req.max_new_tokens
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Outcome of one `serve_stream` run."""
+
+    outputs: dict  # rid -> (max_new_tokens,) np.int32 generated tokens
+    request_stats: dict  # rid -> FaultStats (scrub-on-read telemetry)
+    kv_stats: FaultStats  # aggregate cache telemetry
+    steps: int  # batched decode steps executed
+    preemptions: int
+    kv_voltages: list  # kv rail trajectory (one entry per scrub interval)
+    arena: KVPageArena
+    pages_free_at_end: int  # == arena.n_pages unless the allocator leaked
+
+
+class ContinuousBatchingScheduler:
+    """Host-side lane + page bookkeeping (admit / grow / preempt / retire)."""
+
+    def __init__(
+        self,
+        requests,
+        n_lanes: int,
+        alloc: PageAllocator,
+        geom: KVGeometry,
+        arena: KVPageArena | None = None,
+    ):
+        self.waiting = deque(RequestState(r) for r in requests)
+        self.lanes: list = [None] * n_lanes
+        self.alloc = alloc
+        self.geom = geom
+        self.arena = arena  # needed to wipe recycled pages before reuse
+        self.finished: dict = {}
+        self.preemptions = 0
+        self._admit_counter = 0
+        self.fresh_pages: list = []  # allocated since last wipe drain
+
+    def _alloc(self, owner):
+        """Page for ``owner``; recycles the dirty list when the clean free
+        list runs dry. Every allocation is recorded in ``fresh_pages`` — the
+        serve loop zero-wipes the batch before anything commits to it (once
+        the arena has faulted, even 'clean'-list pages hold stale words:
+        tick() injects into the whole arena, allocated or not)."""
+        page = self.alloc.alloc(owner)
+        if page is None and self.alloc.dirty_pages:
+            self.alloc.recycle()
+            page = self.alloc.alloc(owner)
+        if page is not None:
+            self.fresh_pages.append(page)
+        return page
+
+    def drain_fresh_pages(self) -> None:
+        """Wipe pages allocated since the last drain (no-op pre-fault: an
+        arena that never ticked below the guardband is zero/valid-data only,
+        and scrub of a previous owner's *valid* words is clean by identity)."""
+        if self.fresh_pages and self.arena is not None and self.arena.faulted:
+            self.arena.zero_pages(np.asarray(self.fresh_pages, np.int32))
+        self.fresh_pages.clear()
+
+    @property
+    def running(self) -> list:
+        return [st for st in self.lanes if st is not None]
+
+    @property
+    def unfinished(self) -> bool:
+        return bool(self.waiting) or any(self.lanes)
+
+    def _free_lane(self):
+        for i, st in enumerate(self.lanes):
+            if st is None:
+                return i
+        return None
+
+    def admit(self):
+        """Admit waiting requests FCFS while lanes + pages allow; yields the
+        admitted (lane, state, resume_seq) triples (pages pre-allocated to
+        cover the prefilled sequence plus the first decode token)."""
+        while self.waiting:
+            lane = self._free_lane()
+            if lane is None:
+                break
+            st = self.waiting[0]
+            seq = st.resume_seq
+            need = self.geom.pages_for(len(seq) + 1)
+            if need > self.alloc.free_pages:
+                break
+            self.waiting.popleft()
+            st.pages = [self._alloc(st.rid) for _ in range(need)]
+            st.status, st.lane = "running", lane
+            st.admit_seq = self._admit_counter
+            self._admit_counter += 1
+            self.lanes[lane] = st
+            yield lane, st, seq
+
+    def ensure_pages(self, st: RequestState, until: int | None = None) -> bool:
+        """Guarantee pages exist for positions up to ``until`` (default: the
+        position the next decode step writes); preempts younger requests
+        under pressure. False if ``st`` itself had to be preempted (i.e. it
+        is the youngest and the arena is full)."""
+        until = st.stored if until is None else until
+        while until // self.geom.page_tokens >= len(st.pages):
+            page = self._alloc(st.rid)
+            if page is not None:
+                st.pages.append(page)
+                continue
+            victim = max(self.running, key=lambda s: s.admit_seq)
+            self.preempt(victim)
+            if victim is st:
+                return False
+        return True
+
+    def preempt(self, st: RequestState) -> None:
+        """Recompute-style preemption: drop pages, re-queue at the front."""
+        self.alloc.free(st.pages, st.rid)
+        self.lanes[st.lane] = None
+        st.pages, st.lane, st.admit_seq = [], -1, -1
+        st.status = "waiting"
+        st.preemptions += 1
+        self.preemptions += 1
+        self.waiting.appendleft(st)
+
+    def retire(self, st: RequestState) -> None:
+        self.alloc.free(st.pages, st.rid)
+        self.lanes[st.lane] = None
+        st.pages, st.lane = [], -1
+        st.status = "finished"
+        self.finished[st.rid] = st
+
+
+def serve_stream(
+    params,
+    cfg,
+    helpers: dict,
+    arena: KVPageArena,
+    requests,
+    *,
+    n_lanes: int,
+    max_len: int,
+    scrub_interval: int = 1,
+    max_block: int = 16,
+    kv_controller=None,
+    init_cache_fn=None,
+) -> ServeReport:
+    """Drive a request stream to completion over the paged cache.
+
+    ``helpers`` comes from serving/steps.make_paged_helpers; ``kv_controller``
+    is an optional UndervoltController fed the per-interval scrub telemetry —
+    its output voltage is applied to the arena (the `kv` rail walk).
+
+    Decode runs in *blocks* of up to ``max_block`` steps lowered to one
+    scanned dispatch (multi-step scheduling): the block size is the largest
+    power of two that no active lane's remaining budget — and no pending
+    scrub deadline — cuts short, so blocks never decode wasted tokens and
+    the scrub cadence stays exact. ``max_block=1`` recovers the one-dispatch-
+    per-token loop (what the preemption tests pin down).
+    """
+    import jax.numpy as jnp
+
+    from repro.models import lm
+
+    geom = arena.geom
+    requests = [
+        r if isinstance(r, Request) else Request(i, np.asarray(r[0], np.int32), int(r[1]))
+        for i, r in enumerate(requests)
+    ]
+    for r in requests:
+        total = len(r.prompt) + r.max_new_tokens
+        assert total <= max_len, (r.rid, total, max_len)
+        assert geom.pages_for(total) <= arena.n_pages, (
+            f"request {r.rid} needs {geom.pages_for(total)} pages, "
+            f"arena has {arena.n_pages}"
+        )
+        assert r.max_new_tokens >= 1 and len(r.prompt) >= 1
+
+    init_cache_fn = init_cache_fn or (lambda b: lm.init_cache(cfg, b, max_len))
+    sched = ContinuousBatchingScheduler(
+        requests, n_lanes, PageAllocator(arena.n_pages), geom, arena=arena
+    )
+    cache = init_cache_fn(n_lanes)
+    cur_tok = np.zeros(n_lanes, np.int32)
+    pos_v = np.zeros(n_lanes, np.int32)
+    steps = 0
+    since_scrub = 0
+    kv_voltages: list = []
+
+    while sched.unfinished:
+        # -- admission: batch same-length prefills, commit the prompts' KV --
+        groups: dict = {}
+        for lane, st, seq in sched.admit():
+            groups.setdefault(len(seq), []).append((lane, st, seq))
+        sched.drain_fresh_pages()  # wipe before the prompt commits below
+        for s0, grp in groups.items():
+            cachem = init_cache_fn(len(grp))
+            seqs = np.stack([seq for _, _, seq in grp])
+            tokm, cachem = helpers["prefill"](params, jnp.asarray(seqs), cachem)
+            payload = helpers["extract_range"](cachem, s0=s0)
+            tok_idx = np.arange(s0)
+            page_ids = np.stack(
+                [
+                    [st.pages[t // geom.page_tokens] for t in tok_idx]
+                    for _, st, _ in grp
+                ]
+            )
+            arena.commit_tokens(
+                payload.reshape(len(grp) * s0, -1),
+                page_ids.reshape(-1),
+                np.tile(tok_idx % geom.page_tokens, len(grp)),
+            )
+            tok_host = np.asarray(tokm).reshape(-1)
+            for row, (lane, st, _) in enumerate(grp):
+                cache = helpers["load_lane"](cache, cachem, row, lane)
+                if not st.tokens:  # fresh admission: keep the prefill's token
+                    st.tokens = [int(tok_host[row])]
+                if st.done:  # budget met by the prefill token alone
+                    sched.retire(st)
+                    continue
+                cur_tok[lane] = st.tokens[-1]
+                pos_v[lane] = s0
+
+        # -- block size: no lane's budget, and no scrub deadline, overrun ---
+        running = sched.running
+        if not running:
+            if not sched.unfinished:
+                break
+            assert sched.waiting, "deadlock: no lanes active and queue empty"
+            continue  # freed pages let admission proceed next iteration
+        k = min(st.req.max_new_tokens - len(st.tokens) for st in running)
+        k = max(1, min(k, max_block))
+        if scrub_interval:
+            k = max(1, min(k, scrub_interval - since_scrub))
+        k = 1 << (k.bit_length() - 1)  # power-of-two bucket: few scan shapes
+
+        # -- page growth for the whole block; preempt on pressure -----------
+        for st in list(running):
+            if st.status == "running":  # an earlier growth may have evicted it
+                sched.ensure_pages(st, until=st.stored + k - 1)
+        active = [i for i, st in enumerate(sched.lanes) if st is not None]
+        if not active:
+            continue
+        sched.drain_fresh_pages()  # wipe growth pages before the block commits
+
+        # -- k decode steps + per-token page commits in one dispatch --------
+        page_ids = np.full((k, n_lanes), arena.scratch_page, np.int32)
+        slots = np.zeros((k, n_lanes), np.int32)
+        for i in active:
+            st = sched.lanes[i]
+            for j in range(k):
+                t = pos_v[i] + j
+                page_ids[j, i] = st.pages[t // geom.page_tokens]
+                slots[j, i] = t % geom.page_tokens
+        toks, cache, arena.lo, arena.hi, arena.parity = helpers["multistep"](
+            params,
+            jnp.asarray(cur_tok[:, None]),
+            cache,
+            arena.lo,
+            arena.hi,
+            arena.parity,
+            jnp.asarray(pos_v),
+            jnp.asarray(page_ids),
+            jnp.asarray(slots),
+        )
+        toks_host = np.asarray(toks)
+        steps += k
+        since_scrub += k
+        for i in active:
+            st = sched.lanes[i]
+            st.tokens.extend(int(t) for t in toks_host[:, i])
+            cur_tok[i] = st.tokens[-1]
+            pos_v[i] += k
+            if st.done:
+                sched.retire(st)
+
+        # -- scrub interval: inject at the kv rail, scrub-on-read, refresh --
+        if scrub_interval and since_scrub >= scrub_interval:
+            since_scrub = 0
+        else:
+            continue
+        if sched.running:
+            arena.tick()
+            # Table width tracks the *live* page maximum (power-of-two
+            # bucketed so the jit shape set stays logarithmic), not worst-
+            # case stream capacity: the scrub pass scales with pages that
+            # actually hold tokens, and scratch filler rows are pure waste.
+            live_max = max(len(st.pages) for st in sched.running)
+            p_cols = 1 << max(live_max - 1, 0).bit_length()
+            table = np.full((n_lanes, p_cols), arena.scratch_page, np.int32)
+            n_tok = np.zeros(n_lanes, np.int32)
+            for i, st in enumerate(sched.lanes):
+                if st is None:
+                    continue
+                table[i, : len(st.pages)] = st.pages
+                n_tok[i] = st.stored  # already counts the token committed above
+            payload, cnt = arena.scrub_pages(table.reshape(-1))
+            cache = helpers["refresh"](
+                cache,
+                payload.reshape(n_lanes, -1, geom.token_f32),
+                jnp.asarray(n_tok),
+            )
+            cnt = cnt.reshape(n_lanes, p_cols, 8)
+            interval = FaultStats()
+            for i, st in enumerate(sched.lanes):
+                if st is None:
+                    continue
+                rows = cnt[i, : len(st.pages)]
+                rs = FaultStats.from_counters(
+                    rows.sum(axis=0), words=rows.shape[0] * geom.words_per_page
+                )
+                st.stats.accumulate(rs)
+                interval.accumulate(rs)
+            arena.stats.accumulate(interval)
+            if kv_controller is not None and not kv_controller.locked:
+                arena.set_voltage(kv_controller.update(interval))
+            kv_voltages.append(arena.voltage)
+
+    outputs = {
+        rid: np.asarray(st.tokens, np.int32) for rid, st in sched.finished.items()
+    }
+    return ServeReport(
+        outputs=outputs,
+        request_stats={rid: st.stats for rid, st in sched.finished.items()},
+        kv_stats=arena.stats,
+        steps=steps,
+        preemptions=sched.preemptions,
+        kv_voltages=kv_voltages,
+        arena=arena,
+        pages_free_at_end=sched.alloc.free_pages,
+    )

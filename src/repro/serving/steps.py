@@ -1,16 +1,27 @@
-"""Serving step functions: prefill and single-token decode (greedy).
+"""Serving step functions: prefill, single-token decode (greedy), and the
+paged-cache lane helpers for continuous batching.
 
 `serve_step` is what decode_32k / long_500k dry-run cells lower: one new token
 against a seq_len-deep KV cache (or SSM state), returning the sampled token
 and the updated cache. Cache buffers are donated so the compiled step updates
 in place.
+
+`make_paged_helpers` builds the jit'd glue between the dense per-lane decode
+cache and the SECDED page arena (core/kvpages.py): extract one token's K/V
+payload per lane, load a prefilled batch-of-1 cache into a lane, and refresh
+lane caches from scrubbed page payloads. The payload layout (per token: for
+each attention period position, K then V, each (groups, kv_heads, head_dim)
+C-order) is defined *only* here — extract and refresh are exact inverses.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.kvpages import KVGeometry
 from repro.models import lm
 from repro.models.base import ModelConfig
 
@@ -22,6 +33,128 @@ def make_prefill_step(cfg: ModelConfig):
         return next_tok, cache
 
     return prefill_step
+
+
+def _extract_tokens(cache, idx, *, geom: KVGeometry):
+    """Per-lane token payload: cache tree + (L,) positions -> (L, token_f32)."""
+    parts = []
+    for j in geom.attn_positions:
+        for name in ("k", "v"):
+            c = cache[f"p{j}"][name]  # (g, L, S, H, D)
+            sel = jnp.take_along_axis(
+                c, idx.reshape(1, -1, 1, 1, 1).astype(jnp.int32), axis=2
+            )  # (g, L, 1, H, D)
+            parts.append(jnp.moveaxis(sel[:, :, 0], 0, 1).reshape(idx.shape[0], -1))
+    return jnp.concatenate(parts, axis=1).astype(jnp.float32)
+
+
+def _extract_range(cachem, *, s0: int, geom: KVGeometry):
+    """Prompt payload: batch-of-m cache -> (m, s0, token_f32), tokens 0..s0-1."""
+    parts = []
+    for j in geom.attn_positions:
+        for name in ("k", "v"):
+            c = cachem[f"p{j}"][name]  # (g, m, S, H, D)
+            m = c.shape[1]
+            sel = jnp.moveaxis(c[:, :, :s0], 0, 2)  # (m, s0, g, H, D)
+            parts.append(sel.reshape(m, s0, -1))
+    return jnp.concatenate(parts, axis=2).astype(jnp.float32)
+
+
+def _refresh_cache(cache, payload, n_tok, *, geom: KVGeometry):
+    """Scatter scrubbed page payloads back into the lane caches.
+
+    payload: (L, T, token_f32) decoded tokens in position order (T >= the
+    cache depth S is sliced; T < S leaves the tail untouched); n_tok: (L,)
+    valid-token counts — positions >= n_tok keep their cache bits.
+    """
+    length, t_total, _ = payload.shape
+    out = {k: dict(v) for k, v in cache.items()}
+    off = 0
+    for j in geom.attn_positions:
+        for name in ("k", "v"):
+            c = cache[f"p{j}"][name]  # (g, L, S, H, D)
+            g, _, s, h, d = c.shape
+            t = min(t_total, s)
+            sz = g * h * d
+            part = payload[:, :t, off : off + sz].reshape(length, t, g, h, d)
+            part = jnp.moveaxis(part, 2, 0).astype(c.dtype)  # (g, L, t, H, D)
+            valid = (jnp.arange(t)[None, :] < n_tok[:, None])[None, :, :, None, None]
+            out[f"p{j}"][name] = c.at[:, :, :t].set(
+                jnp.where(valid, part, c[:, :, :t])
+            )
+            off += sz
+    return out
+
+
+def _load_lane(cache, cachem, src_row, lane):
+    """Copy row ``src_row`` of a prefilled batch-of-m cache into ``lane``."""
+    return jax.tree_util.tree_map(
+        lambda c, cm: jax.lax.dynamic_update_slice_in_dim(
+            c,
+            jax.lax.dynamic_slice_in_dim(cm.astype(c.dtype), src_row, 1, 1),
+            lane,
+            1,
+        ),
+        cache,
+        cachem,
+    )
+
+
+def _multistep(params, tok, cache, lo, hi, par, pos0, page_ids, slots, *, cfg, geom):
+    """Decode ``k`` tokens per lane in one dispatch (multi-step scheduling).
+
+    The continuous-batching loop pays Python dispatch per token where the
+    fixed-batch loop pays one `lax.scan`; this rolls a *block* of k decode
+    steps — decode, extract the written token's KV, commit it to the page
+    arena — into one scanned program. page_ids/slots: (k, L) per-step page
+    targets (precomputed on host; inactive lanes point at the scratch page).
+
+    Returns (tokens (k, L), cache, lo, hi, par).
+    """
+    from repro.core.kvpages import _commit_tokens
+
+    def body(carry, xs):
+        tok, cache, lo, hi, par, pos = carry
+        pids, slts = xs
+        logits, cache = lm.decode_step(params, tok, cfg, cache, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        payload = _extract_tokens(cache, pos, geom=geom)
+        lo, hi, par = _commit_tokens(
+            lo, hi, par, payload, pids, slts,
+            token_words=geom.token_words,
+            words_per_page=geom.words_per_page,
+        )
+        return (nxt, cache, lo, hi, par, pos + 1), nxt[:, 0]
+
+    (tok, cache, lo, hi, par, _), toks = jax.lax.scan(
+        body, (tok, cache, lo, hi, par, pos0), (page_ids, slots)
+    )
+    return toks, cache, lo, hi, par
+
+
+def make_paged_helpers(cfg: ModelConfig, geom: KVGeometry):
+    """jit'd continuous-batching helpers sharing one payload layout.
+
+    Returns a dict of:
+      prefill(params, tokens (m,s), cachem)       -> (next_tok (m,), cachem)
+      multistep(params, tok, cache, lo, hi, par,
+                pos (L,), page_ids (k,L), slots)  -> (toks (k,L), cache, planes)
+      extract_range(cachem, s)                    -> (m, s, token_f32) payload
+      load_lane(cache, cachem, src_row, lane)     -> cache
+      refresh(cache, payload (L,T,F), n_tok (L,)) -> cache
+
+    Single-step decode is multistep with k=1 (one (1, L) page row); the
+    per-token extract lives inside the multistep scan body.
+    """
+    return {
+        "prefill": jax.jit(make_prefill_step(cfg)),
+        "multistep": jax.jit(functools.partial(_multistep, cfg=cfg, geom=geom)),
+        "extract_range": jax.jit(
+            functools.partial(_extract_range, geom=geom), static_argnames=("s0",)
+        ),
+        "load_lane": jax.jit(_load_lane),
+        "refresh": jax.jit(functools.partial(_refresh_cache, geom=geom)),
+    }
 
 
 def make_serve_step(cfg: ModelConfig):

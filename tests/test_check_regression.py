@@ -1,0 +1,97 @@
+"""The benchmark regression gate: thresholds, serve floor, and --retries."""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import check_regression as cr  # noqa: E402
+
+
+def _kernel_rows(ratios):
+    return [
+        {"kernel": "inject_scrub", "words": w, "fused_over_pair": r}
+        for w, r in ratios.items()
+    ]
+
+
+def _serve_rows(ratio):
+    return [{"kernel": "serve_throughput", "cont_over_fixed": ratio}]
+
+
+@pytest.fixture
+def gate(tmp_path, monkeypatch):
+    """Point the gate at throwaway baseline/current files; returns writers."""
+    paths = {
+        "BASELINE": tmp_path / "base_kernel.json",
+        "CURRENT": tmp_path / "cur_kernel.json",
+        "SERVE_BASELINE": tmp_path / "base_serve.json",
+        "SERVE_CURRENT": tmp_path / "cur_serve.json",
+    }
+    for attr, p in paths.items():
+        monkeypatch.setattr(cr, attr, str(p))
+
+    def write(attr, rows):
+        paths[attr].write_text(json.dumps(rows))
+
+    return write
+
+
+def test_gate_passes_within_threshold(gate):
+    gate("BASELINE", _kernel_rows({1: 1.0, 2: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.1, 2: 1.05}))
+    assert cr.check(threshold=0.20) == 0
+
+
+def test_gate_fails_beyond_threshold(gate):
+    gate("BASELINE", _kernel_rows({1: 1.0, 2: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.5, 2: 1.4}))
+    assert cr.check(threshold=0.20) == 1
+
+
+def test_serve_gate_requires_beating_fixed(gate):
+    """cont_over_fixed below 1.0 fails even if within the relative band:
+    continuous batching beating fixed batching is an acceptance property."""
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.0}))
+    gate("SERVE_BASELINE", _serve_rows(1.10))
+    gate("SERVE_CURRENT", _serve_rows(0.97))
+    assert cr.check(threshold=0.20) == 1
+    gate("SERVE_CURRENT", _serve_rows(1.02))
+    assert cr.check(threshold=0.20) == 0
+
+
+def test_retries_remeasure_and_recover(gate):
+    """A flaky first measurement recovers after the injected re-measure; the
+    re-measure hook runs exactly once per retry and not on success."""
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 2.0}))  # flaky sample
+
+    calls = []
+
+    def remeasure():
+        calls.append(1)
+        gate("CURRENT", _kernel_rows({1: 1.02}))  # healthy re-measurement
+
+    assert cr.check(threshold=0.20, retries=1, remeasure=remeasure) == 0
+    assert calls == [1]
+    # success path never re-measures
+    assert cr.check(threshold=0.20, retries=3, remeasure=remeasure) == 0
+    assert calls == [1]
+
+
+def test_retries_exhausted_still_fails(gate):
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 2.0}))
+    calls = []
+    assert cr.check(threshold=0.20, retries=2, remeasure=lambda: calls.append(1)) == 1
+    assert calls == [1, 1]
+
+
+def test_missing_rows_is_an_error(gate):
+    gate("BASELINE", _kernel_rows({1: 1.0, 2: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.0}))
+    assert cr.check() == 2
