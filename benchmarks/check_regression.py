@@ -20,7 +20,13 @@ ratios cancel machine speed but a badly descheduled CI runner can still
 flake a single measurement. (This used to be a YAML shell `||` retry; as a
 flag it is unit-testable and the nightly lane reuses it.)
 
+When ``$GITHUB_STEP_SUMMARY`` is set (or ``--summary PATH`` given), a
+pass/fail markdown table of the final attempt is appended there — the
+nightly lane runs this gate with ``continue-on-error``, and without the
+table an advisory failure is invisible unless someone opens the log.
+
 Usage: python -m benchmarks.check_regression [--threshold 0.20] [--retries 1]
+                                             [--summary PATH]
 """
 
 from __future__ import annotations
@@ -47,17 +53,22 @@ def _gated_rows(rows: list[dict]) -> dict:
     }
 
 
-def _check_kernel(threshold: float) -> int:
+def _check_kernel(threshold: float, results: list | None = None) -> int:
+    results = [] if results is None else results
     with open(BASELINE) as f:
         base = _gated_rows(json.load(f))
     with open(CURRENT) as f:
         cur = _gated_rows(json.load(f))
     if not base:
         print("FAIL: baseline has no inject_scrub rows", file=sys.stderr)
+        results.append(("inject_scrub fused_over_pair", "error", "baseline has no rows"))
         return 2
     missing = sorted(set(base) - set(cur))
     if missing:
         print(f"FAIL: current run lacks inject_scrub rows for {missing}", file=sys.stderr)
+        results.append(
+            ("inject_scrub fused_over_pair", "error", f"current run lacks rows {missing}")
+        )
         return 2
     # Per-size ratios are reported for debugging; the gate is the geometric
     # mean across sizes — residual timer noise per size is uncorrelated, so
@@ -72,12 +83,15 @@ def _check_kernel(threshold: float) -> int:
         )
     rel = math.exp(logs / len(base)) - 1.0
     print(f"inject_scrub pooled: {rel:+.1%} vs baseline (gate at +{threshold:.0%})")
+    detail = f"pooled {rel:+.1%} vs baseline (gate +{threshold:.0%})"
     if rel > threshold:
         print(
             f"FAIL: fused inject+scrub slowed down > {threshold:.0%} vs baseline",
             file=sys.stderr,
         )
+        results.append(("inject_scrub fused_over_pair", "fail", detail))
         return 1
+    results.append(("inject_scrub fused_over_pair", "pass", detail))
     return 0
 
 
@@ -90,29 +104,36 @@ def _serve_ratio(path: str) -> float | None:
     return None
 
 
-def _check_serve(threshold: float) -> int:
+def _check_serve(threshold: float, results: list | None = None) -> int:
+    results = [] if results is None else results
     if not os.path.exists(SERVE_BASELINE):
+        results.append(("serve_throughput cont_over_fixed", "skipped", "no baseline"))
         return 0  # throughput gate is opt-in via its baseline file
     if not os.path.exists(SERVE_CURRENT):
         print("FAIL: serve_throughput baseline exists but no current run", file=sys.stderr)
+        results.append(("serve_throughput cont_over_fixed", "error", "no current run"))
         return 2
     ref = _serve_ratio(SERVE_BASELINE)
     now = _serve_ratio(SERVE_CURRENT)
     if ref is None or now is None:
         print("FAIL: serve_throughput rows missing", file=sys.stderr)
+        results.append(("serve_throughput cont_over_fixed", "error", "rows missing"))
         return 2
     floor = max(1.0, ref * (1.0 - threshold))
     print(
         f"serve_throughput: cont_over_fixed {now:.3f} "
         f"(baseline {ref:.3f}, floor {floor:.3f})"
     )
+    detail = f"{now:.3f} (baseline {ref:.3f}, floor {floor:.3f})"
     if now < floor:
         print(
             f"FAIL: continuous batching no longer beats fixed batching by enough "
             f"(ratio {now:.3f} < floor {floor:.3f})",
             file=sys.stderr,
         )
+        results.append(("serve_throughput cont_over_fixed", "fail", detail))
         return 1
+    results.append(("serve_throughput cont_over_fixed", "pass", detail))
     return 0
 
 
@@ -133,22 +154,56 @@ def _default_remeasure() -> None:
         )
 
 
-def check(threshold: float = 0.20, retries: int = 0, remeasure=None) -> int:
+def write_step_summary(results: list, path: str) -> None:
+    """Append the per-benchmark pass/fail table as GitHub-flavoured markdown.
+
+    ``results``: (benchmark, status, detail) triples from the final gate
+    attempt. Written to ``path`` ($GITHUB_STEP_SUMMARY in Actions) so an
+    advisory (continue-on-error) failure is visible on the run page without
+    opening the log.
+    """
+    icon = {"pass": "✅ pass", "fail": "❌ FAIL", "error": "⚠️ error",
+            "skipped": "➖ skipped"}
+    lines = [
+        "### Benchmark regression gate",
+        "",
+        "| benchmark | status | detail |",
+        "| --- | --- | --- |",
+    ]
+    for name, status, detail in results:
+        lines.append(f"| {name} | {icon.get(status, status)} | {detail} |")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def check(
+    threshold: float = 0.20, retries: int = 0, remeasure=None,
+    summary_path: str | None = None,
+) -> int:
     """Run all gates; on failure, re-measure and re-check up to ``retries``
     times. ``remeasure`` is injectable for tests (defaults to re-running the
-    benchmark modules in a subprocess)."""
+    benchmark modules in a subprocess). The final attempt's per-benchmark
+    results are appended to ``summary_path`` as a markdown table when set."""
     remeasure = _default_remeasure if remeasure is None else remeasure
     retries = max(0, int(retries))  # a negative flag must not skip the gate
+    rc, results = 1, []
     for attempt in range(retries + 1):
-        rc = _check_kernel(threshold) or _check_serve(threshold)
+        results = []
+        # Run both gates even when the first fails: the summary table should
+        # show every benchmark's state, not stop at the first trip.
+        rc_kernel = _check_kernel(threshold, results)
+        rc_serve = _check_serve(threshold, results)
+        rc = rc_kernel or rc_serve
         if rc == 0:
-            return 0
+            break
         if attempt < retries:
             print(
                 f"::warning::regression gate tripped (rc={rc}), "
                 f"re-measuring (retry {attempt + 1}/{retries})"
             )
             remeasure()
+    if summary_path:
+        write_step_summary(results, summary_path)
     return rc
 
 
@@ -156,8 +211,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--threshold", type=float, default=0.20)
     ap.add_argument("--retries", type=int, default=0)
+    ap.add_argument(
+        "--summary",
+        default=os.environ.get("GITHUB_STEP_SUMMARY"),
+        help="append a pass/fail markdown table here "
+        "(default: $GITHUB_STEP_SUMMARY when set)",
+    )
     args = ap.parse_args()
-    sys.exit(check(args.threshold, retries=args.retries))
+    sys.exit(check(args.threshold, retries=args.retries, summary_path=args.summary))
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ paper's result set plus the kernel and roofline sections.
   table1  ECC area/power overhead + derived savings           (paper Table I)
   fig3    NN accelerator error vs voltage, ECC on/off         (paper Fig. 3)
   kernels Pallas kernel micro + fused-vs-naive roofline model
+  codecs  ECC scheme comparison: coverage vs overhead vs scrub throughput
   roofline dry-run roofline table (reads benchmarks/out/dryrun.json)
 """
 
@@ -17,6 +18,7 @@ import sys
 import time
 
 from benchmarks import (
+    codec_compare,
     fig1_fault_rate,
     fig2_fault_types,
     fig3_nn_accuracy,
@@ -31,6 +33,7 @@ SECTIONS = [
     ("table1", table1_overhead),
     ("fig3", fig3_nn_accuracy),
     ("kernels", kernel_micro),
+    ("codecs", codec_compare),
     ("roofline", roofline),
 ]
 

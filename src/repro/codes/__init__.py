@@ -1,0 +1,40 @@
+"""Pluggable ECC codec subsystem (DESIGN.md §12).
+
+Registered codes over 64-bit data words, weakest to strongest:
+
+  ``parity65``  1 check bit   detect-only (odd-weight faults)
+  ``secded72``  8 check bits  Hsiao SECDED — the paper's built-in BRAM ECC
+  ``ileave88``  24 check bits 4-way interleaved SECDED — corrects bursts <= 4
+  ``dected79``  15 check bits shortened extended BCH DEC-TED — corrects
+                any 2 random flips, detects any 3
+
+``get(name)`` returns the (cached) Codec instance; ``names()`` lists the
+registry. The generalized Pallas kernels (kernels/inject_scrub.py,
+kernels/paged_gather.py), the plane arenas (core/planestore.py,
+core/kvpages.py) and the rail controller's escalation ladder
+(core/controller.py) are all parameterized by these names.
+"""
+
+# Import order fixes the registry order (weakest -> strongest).
+from repro.codes import parity, secded, interleaved, dected  # noqa: F401, I001
+from repro.codes.base import (
+    DEFAULT_CODEC,
+    N_DATA,
+    STATUS_CLEAN,
+    STATUS_CORRECTED,
+    STATUS_DETECTED,
+    Codec,
+    get,
+    names,
+)
+
+__all__ = [
+    "Codec",
+    "DEFAULT_CODEC",
+    "N_DATA",
+    "STATUS_CLEAN",
+    "STATUS_CORRECTED",
+    "STATUS_DETECTED",
+    "get",
+    "names",
+]

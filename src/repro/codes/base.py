@@ -1,0 +1,275 @@
+"""Pluggable ECC codec abstraction + registry (DESIGN.md §12).
+
+Every registered code protects one 64-bit data word (the BRAM word geometry
+shared by the whole repo: lo/hi uint32 data planes) with ``n_check`` check
+bits stored in a parallel check plane. A ``Codec`` carries:
+
+  * the parity-check matrix in *systematic* form — check bit ``r`` is the
+    XOR-fold of the data word masked by (``mask_lo[r]``, ``mask_hi[r]``);
+    the check positions themselves are identity columns, so the syndrome is
+    simply ``recomputed_check XOR stored_check``;
+  * a syndrome classification into NONE / CORRECTED / DETECTED plus the
+    correction flip masks, exposed two ways: dense numpy lookup tables
+    (``lut_status`` / ``lut_flip_*``, the host oracle) and a jnp
+    ``classify_jnp`` usable inside Pallas kernel bodies.  Codecs whose
+    correctable-syndrome set is small evaluate the LUT as unrolled
+    compare/select chains (gather-free, the TPU-friendly form the SECDED
+    kernels always used); multi-bit correctors gather from the dense table.
+  * coverage guarantees (``corrects_random`` / ``detects_random`` /
+    ``corrects_burst``) that the telemetry tallies, the hypothesis property
+    tests, and the controller escalation ladder consume.
+
+The numpy and jnp paths are required to be bit-identical (property-tested in
+tests/test_codecs.py); the jnp path is required to be safe to trace inside a
+Pallas kernel body (elementwise ops + at most a small-table gather).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+N_DATA = 64
+
+# The scheme everything defaults to: the paper's built-in BRAM SECDED. The
+# single source of truth — configs/shapes.py, core/planestore.py and the
+# controller all import it.
+DEFAULT_CODEC = "secded72"
+
+STATUS_CLEAN = 0
+STATUS_CORRECTED = 1
+STATUS_DETECTED = 2
+
+
+def parity32_np(v: np.ndarray) -> np.ndarray:
+    """Bitwise XOR-fold of each uint32 lane -> {0, 1} uint32."""
+    v = v.astype(np.uint32)
+    v = v ^ (v >> np.uint32(16))
+    v = v ^ (v >> np.uint32(8))
+    v = v ^ (v >> np.uint32(4))
+    v = v ^ (v >> np.uint32(2))
+    v = v ^ (v >> np.uint32(1))
+    return v & np.uint32(1)
+
+
+def parity32_jnp(v):
+    import jax.numpy as jnp
+
+    v = v ^ (v >> 16)
+    v = v ^ (v >> 8)
+    v = v ^ (v >> 4)
+    v = v ^ (v >> 2)
+    v = v ^ (v >> 1)
+    return v & jnp.uint32(1)
+
+
+class Codec:
+    """One registered ECC scheme over 64-bit data words.
+
+    Subclasses set the class attributes below and (optionally) override
+    ``classify_jnp`` with a gather-free compare-chain form; the base class
+    provides systematic encode (shared by every linear code here), the dense
+    LUT host decode, and a dense-LUT jnp classify.
+    """
+
+    name: str
+    n_check: int
+    # guaranteed behaviour under k random / burst-of-k adjacent bit flips
+    corrects_random: int
+    detects_random: int
+    corrects_burst: int
+    # flips <= sure_correct and status == CORRECTED implies the delivered
+    # data is genuinely restored (drives the telemetry "corrected" lane)
+    sure_correct: int
+
+    # systematic H: check bit r = parity(lo & mask_lo[r]) ^ parity(hi & mask_hi[r])
+    mask_lo: np.ndarray  # (n_check,) uint32
+    mask_hi: np.ndarray  # (n_check,) uint32
+
+    # dense syndrome tables, length 2**n_check (None when the syndrome space
+    # is too large to materialise — the codec must then override classify)
+    lut_status: np.ndarray | None
+    lut_flip_lo: np.ndarray | None
+    lut_flip_hi: np.ndarray | None
+    lut_flip_check: np.ndarray | None
+
+    # ------------------------------------------------------------------ meta
+    @property
+    def n_bits(self) -> int:
+        return N_DATA + self.n_check
+
+    @property
+    def check_dtype(self):
+        """Storage dtype of the check plane (uint8 up to 8 check bits)."""
+        return np.uint8 if self.n_check <= 8 else np.uint32
+
+    @property
+    def overhead(self) -> float:
+        """Redundancy: check bits per data bit."""
+        return self.n_check / N_DATA
+
+    @property
+    def exact_tallies(self) -> bool:
+        """Whether the telemetry kernels must compare the correction against
+        the injected mask to count genuine corrections (any codec that can
+        correct more than a single random bit), instead of the cheap
+        single-flip formula that is exact for SEC-class codes."""
+        return self.corrects_random > 1 or self.corrects_burst > 1
+
+    # ---------------------------------------------------------------- encode
+    def encode_np(self, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+        """Check plane for uint32 data planes; returns ``check_dtype``."""
+        lo = np.asarray(lo, np.uint32)[..., None]
+        hi = np.asarray(hi, np.uint32)[..., None]
+        bits = parity32_np(lo & self.mask_lo) ^ parity32_np(hi & self.mask_hi)
+        weights = (np.uint32(1) << np.arange(self.n_check, dtype=np.uint32))
+        return (bits * weights).sum(-1).astype(self.check_dtype)
+
+    def encode_jnp(self, lo, hi):
+        """Check plane as a uint32 tensor (callers cast to ``check_dtype``
+        when storing). Elementwise — safe inside Pallas kernel bodies."""
+        import jax.numpy as jnp
+
+        c = jnp.zeros_like(lo)
+        for r in range(self.n_check):
+            mlo = jnp.uint32(int(self.mask_lo[r]))
+            mhi = jnp.uint32(int(self.mask_hi[r]))
+            bit = parity32_jnp((lo & mlo) ^ (hi & mhi))
+            c = c | (bit << r)
+        return c
+
+    def syndrome_jnp(self, lo, hi, check):
+        import jax.numpy as jnp
+
+        return self.encode_jnp(lo, hi) ^ check.astype(jnp.uint32)
+
+    # -------------------------------------------------------------- classify
+    def lut_input_arrays(self) -> tuple:
+        """Dense tables a Pallas kernel must receive as *explicit inputs*
+        (Pallas rejects captured array constants): (status, flip_lo,
+        flip_hi, flip_check). Empty for codecs whose classify is pure
+        compare/select chains."""
+        if self.lut_status is None:
+            return ()
+        if self.classify_jnp.__func__ is not Codec.classify_jnp:
+            return ()  # chain-classify override: tables are the host oracle only
+        return (
+            self.lut_status,
+            self.lut_flip_lo,
+            self.lut_flip_hi,
+            self.lut_flip_check,
+        )
+
+    def classify_jnp(self, synd, want_flips: bool = True, luts: tuple = ()):
+        """Syndrome plane -> (flip_lo, flip_hi, flip_check, status).
+
+        Default: dense-LUT gather (used by multi-bit correctors whose
+        correctable set is too large to unroll). ``want_flips=False`` skips
+        the flip gathers for telemetry-only callers. Inside a Pallas kernel
+        body, pass the loaded ``lut_input_arrays`` tensors as ``luts``;
+        outside, the tables are materialised as jnp constants.
+        """
+        import jax.numpy as jnp
+
+        if not luts:
+            assert self.lut_status is not None, self.name
+            luts = tuple(
+                jnp.asarray(t)
+                for t in (
+                    self.lut_status,
+                    self.lut_flip_lo,
+                    self.lut_flip_hi,
+                    self.lut_flip_check,
+                )
+            )
+        status_t, flip_lo_t, flip_hi_t, flip_check_t = luts
+        s = synd.astype(jnp.int32)
+        status = jnp.take(status_t, s)
+        if not want_flips:
+            z = jnp.zeros_like(synd)
+            return z, z, z, status
+        flip_lo = jnp.take(flip_lo_t, s)
+        flip_hi = jnp.take(flip_hi_t, s)
+        flip_check = jnp.take(flip_check_t, s)
+        return flip_lo, flip_hi, flip_check, status
+
+    def decode_jnp(self, lo, hi, check):
+        """(lo', hi', status) with correctable errors fixed — jnp path."""
+        synd = self.syndrome_jnp(lo, hi, check)
+        flip_lo, flip_hi, _, status = self.classify_jnp(synd)
+        return lo ^ flip_lo, hi ^ flip_hi, status
+
+    # ---------------------------------------------------------- numpy oracle
+    def decode_np(self, lo: np.ndarray, hi: np.ndarray, check: np.ndarray):
+        """Host oracle decode via the dense syndrome tables."""
+        assert self.lut_status is not None, self.name
+        lo = np.asarray(lo, np.uint32)
+        hi = np.asarray(hi, np.uint32)
+        synd = (
+            self.encode_np(lo, hi).astype(np.uint32) ^ np.asarray(check).astype(np.uint32)
+        ).astype(np.int64)
+        return (
+            lo ^ self.lut_flip_lo[synd],
+            hi ^ self.lut_flip_hi[synd],
+            self.lut_status[synd].astype(np.int32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# LUT construction helper shared by the concrete codecs
+# ---------------------------------------------------------------------------
+def build_luts(n_check: int, patterns) -> dict:
+    """Dense syndrome tables from (syndrome, flip_lo, flip_hi, flip_check)
+    correctable patterns. Asserts every correctable syndrome is distinct —
+    the constructive proof that the code corrects its advertised set."""
+    size = 1 << n_check
+    status = np.full(size, STATUS_DETECTED, np.int32)
+    flip_lo = np.zeros(size, np.uint32)
+    flip_hi = np.zeros(size, np.uint32)
+    flip_check = np.zeros(size, np.uint32)
+    status[0] = STATUS_CLEAN
+    for synd, flo, fhi, fch in patterns:
+        assert synd != 0, "correctable pattern aliases to the zero syndrome"
+        assert status[synd] == STATUS_DETECTED, (
+            f"syndrome collision at {synd:#x}: two correctable patterns"
+        )
+        status[synd] = STATUS_CORRECTED
+        flip_lo[synd] = flo
+        flip_hi[synd] = fhi
+        flip_check[synd] = fch
+    return {
+        "lut_status": status,
+        "lut_flip_lo": flip_lo,
+        "lut_flip_hi": flip_hi,
+        "lut_flip_check": flip_check,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_FACTORIES: dict[str, callable] = {}
+
+
+def register(name: str):
+    """Decorator: register a zero-arg codec factory under ``name``."""
+
+    def deco(factory):
+        _FACTORIES[name] = functools.lru_cache(maxsize=None)(factory)
+        return factory
+
+    return deco
+
+
+def get(name: str) -> Codec:
+    try:
+        return _FACTORIES[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown codec {name!r}; registered: {sorted(_FACTORIES)}"
+        ) from None
+
+
+def names() -> tuple[str, ...]:
+    return tuple(_FACTORIES)

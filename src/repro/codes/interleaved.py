@@ -1,0 +1,166 @@
+"""4-way bit-interleaved SECDED (88,64): burst faults become per-codeword
+singles.
+
+Four independent Hsiao(22,16) SECDED subcodes protect the 64-bit word with
+the physical bit lanes interleaved: data bit ``j`` belongs to subcode
+``j % 4`` (sub-bit ``j // 4``) and check-plane bit ``b`` to subcode
+``b % 4`` (sub-check ``b // 4``). Any burst of up to 4 *adjacent* flipped
+bits therefore lands at most one flip in each subcode and is fully
+corrected — the mitigation style evaluated for flash-based-FPGA BRAMs in
+arXiv:1507.05740, where undervolting/radiation upsets cluster in physically
+adjacent cells. Random coverage sits between SECDED and DEC-TED: two random
+flips are corrected iff they land in different subcodes (~3/4 of the time
+over the 88-bit codeword) and are *detected* otherwise, so the code is
+never worse than SECDED on doubles.
+
+The syndrome factors into four 6-bit sub-syndromes, so classification runs
+the subcode's 64-entry LUT four times as compare/select chains — the dense
+2^24 global table is never materialised (``lut_status is None``; the numpy
+oracle is the factored decode below).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.codes import base
+from repro.codes.base import N_DATA, Codec, register
+from repro.codes.secded import build_hsiao
+
+N_WAYS = 4
+SUB_DATA = 16
+SUB_CHECK = 6
+N_CHECK = N_WAYS * SUB_CHECK  # 24
+
+
+def _sub_positions(s: int) -> np.ndarray:
+    """Global data-bit indices owned by subcode ``s`` (sub-bit order)."""
+    return np.arange(SUB_DATA) * N_WAYS + s
+
+
+@functools.lru_cache(maxsize=None)
+def build_interleaved() -> dict:
+    sub = build_hsiao(SUB_DATA, SUB_CHECK)
+    mask_lo = np.zeros(N_CHECK, dtype=np.uint32)
+    mask_hi = np.zeros(N_CHECK, dtype=np.uint32)
+    for b in range(N_CHECK):
+        s, r = b % N_WAYS, b // N_WAYS
+        for d, j in enumerate(_sub_positions(s)):
+            if (int(sub["data_cols"][d]) >> r) & 1:
+                if j < 32:
+                    mask_lo[b] |= np.uint32(1 << j)
+                else:
+                    mask_hi[b] |= np.uint32(1 << (j - 32))
+    return {
+        "sub": sub,
+        "mask_lo": mask_lo,
+        "mask_hi": mask_hi,
+    }
+
+
+class InterleavedCodec(Codec):
+    name = "ileave88"
+    n_check = N_CHECK
+    corrects_random = 1
+    detects_random = 2
+    corrects_burst = N_WAYS
+    sure_correct = 2  # <=2 random flips: corrected (split) or detected (same sub)
+
+    def __init__(self):
+        code = build_interleaved()
+        self.mask_lo = code["mask_lo"]
+        self.mask_hi = code["mask_hi"]
+        self._sub_cols = code["sub"]["data_cols"]  # (16,) sub data columns
+        # 2^24 dense tables are deliberately not built:
+        self.lut_status = None
+        self.lut_flip_lo = None
+        self.lut_flip_hi = None
+        self.lut_flip_check = None
+
+    # ------------------------------------------------------------------ jnp
+    def classify_jnp(self, synd, want_flips: bool = True, luts: tuple = ()):
+        import jax.numpy as jnp
+
+        u32 = jnp.uint32
+        flip_lo = jnp.zeros_like(synd)
+        flip_hi = jnp.zeros_like(synd)
+        flip_check = jnp.zeros_like(synd)
+        any_detect = jnp.zeros_like(synd, dtype=jnp.bool_)
+        any_correct = jnp.zeros_like(synd, dtype=jnp.bool_)
+        for s in range(N_WAYS):
+            sub_synd = jnp.zeros_like(synd)
+            for r in range(SUB_CHECK):
+                sub_synd = sub_synd | (((synd >> (N_WAYS * r + s)) & u32(1)) << r)
+            matched = jnp.zeros_like(synd, dtype=jnp.bool_)
+            for d in range(SUB_DATA):
+                m = sub_synd == u32(int(self._sub_cols[d]))
+                matched = matched | m
+                if want_flips:
+                    j = d * N_WAYS + s
+                    if j < 32:
+                        flip_lo = jnp.where(m, flip_lo | u32(1 << j), flip_lo)
+                    else:
+                        flip_hi = jnp.where(m, flip_hi | u32(1 << (j - 32)), flip_hi)
+            for r in range(SUB_CHECK):
+                m = sub_synd == u32(1 << r)
+                matched = matched | m
+                if want_flips:
+                    flip_check = jnp.where(
+                        m, flip_check | u32(1 << (N_WAYS * r + s)), flip_check
+                    )
+            sub_clean = sub_synd == u32(0)
+            any_detect = any_detect | (~sub_clean & ~matched)
+            any_correct = any_correct | matched
+        status = jnp.where(
+            any_detect,
+            jnp.int32(base.STATUS_DETECTED),
+            jnp.where(
+                any_correct,
+                jnp.int32(base.STATUS_CORRECTED),
+                jnp.int32(base.STATUS_CLEAN),
+            ),
+        )
+        return flip_lo, flip_hi, flip_check, status
+
+    # ---------------------------------------------------------- numpy oracle
+    def decode_np(self, lo: np.ndarray, hi: np.ndarray, check: np.ndarray):
+        lo = np.asarray(lo, np.uint32)
+        hi = np.asarray(hi, np.uint32)
+        synd = (
+            self.encode_np(lo, hi).astype(np.uint32)
+            ^ np.asarray(check).astype(np.uint32)
+        )
+        sub_lut = build_hsiao(SUB_DATA, SUB_CHECK)["syndrome_lut"]
+        out_lo, out_hi = lo.copy(), hi.copy()
+        any_detect = np.zeros(synd.shape, bool)
+        any_correct = np.zeros(synd.shape, bool)
+        for s in range(N_WAYS):
+            sub_synd = np.zeros(synd.shape, np.int64)
+            for r in range(SUB_CHECK):
+                sub_synd |= ((synd >> np.uint32(N_WAYS * r + s)) & 1).astype(
+                    np.int64
+                ) << r
+            action = sub_lut[sub_synd]
+            any_detect |= action == -2  # secded.LUT_DETECT
+            any_correct |= action >= 0
+            databit = (action >= 0) & (action < SUB_DATA)
+            j = np.clip(action, 0, SUB_DATA - 1) * N_WAYS + s
+            out_lo ^= np.where(databit & (j < 32), np.uint32(1) << (j % 32), 0).astype(
+                np.uint32
+            )
+            out_hi ^= np.where(databit & (j >= 32), np.uint32(1) << (j % 32), 0).astype(
+                np.uint32
+            )
+        status = np.where(
+            any_detect,
+            base.STATUS_DETECTED,
+            np.where(any_correct, base.STATUS_CORRECTED, base.STATUS_CLEAN),
+        ).astype(np.int32)
+        return out_lo, out_hi, status
+
+
+@register("ileave88")
+def _ileave88() -> InterleavedCodec:
+    return InterleavedCodec()

@@ -1,0 +1,205 @@
+"""Hsiao odd-weight-column SECDED codes, behind the Codec interface.
+
+The (72,64) instance is the Xilinx 7-series BRAM built-in ECC the paper
+evaluates (UG473) and was historically constructed in ``repro.core.hsiao``;
+that module is now a thin re-export of the tables built here. The
+construction is deterministic and unchanged: every column of the
+``n_check x n_bits`` parity-check matrix is distinct and odd-weight, the
+check positions use the weight-1 identity columns, and the data positions
+take all weight-3 columns first, then greedily pick higher-weight columns
+to keep row weights balanced (minimum hardware XOR-tree depth).
+
+``build_hsiao`` generalises the same procedure to any (n_data, n_check)
+with enough odd-weight columns — the 4-way interleaved codec reuses it for
+its Hsiao(22,16) subcode.
+
+Decode classification (syndrome s = stored_check XOR recomputed_check):
+  s == 0                 -> NONE       (no error, or an aliasing >=4-bit error)
+  s == a data column     -> CORRECTED  (flip that data bit)
+  s == a check column    -> CORRECTED  (check-bit error; data untouched)
+  otherwise              -> DETECTED   (uncorrectable; includes all 2-bit
+                                        errors: XOR of two odd columns is even)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.codes import base
+from repro.codes.base import N_DATA, Codec, build_luts, register
+
+N_PARITY = 8
+N_BITS = N_DATA + N_PARITY  # 72-bit codeword
+
+# Sentinel values in the (historical) syndrome action table.
+LUT_CLEAN = -1  # syndrome 0
+LUT_DETECT = -2  # uncorrectable (even-weight or unused odd syndrome)
+# 0..63   -> flip that data bit
+# 64..71  -> parity bit (64 + r) had the error; data is fine.
+
+
+def _popcount(x: int) -> int:
+    return bin(x).count("1")
+
+
+@functools.lru_cache(maxsize=None)
+def build_hsiao(n_data: int, n_check: int) -> dict:
+    """Deterministic Hsiao construction for an (n_data + n_check, n_data)
+    SECDED code. Returns data/parity columns, encode masks over the data
+    word (lo/hi uint32 halves), the historical action LUT, and row weights.
+    """
+    # Candidate data columns: odd weight >= 3, grouped by weight ascending.
+    chosen: list[int] = []
+    row_weight = np.zeros(n_check, dtype=np.int64)
+
+    def add(c: int) -> None:
+        chosen.append(c)
+        for r in range(n_check):
+            row_weight[r] += (c >> r) & 1
+
+    for w in range(3, n_check + 1, 2):
+        cands = [c for c in range(1 << n_check) if _popcount(c) == w]
+        need = n_data - len(chosen)
+        if need == 0:
+            break
+        if len(cands) <= need:
+            for c in cands:
+                add(c)
+            continue
+        # Greedily pick the remainder keeping row weights balanced.
+        for _ in range(need):
+            best, best_key = None, None
+            for c in cands:
+                if c in chosen:
+                    continue
+                trial = row_weight.copy()
+                for r in range(n_check):
+                    trial[r] += (c >> r) & 1
+                key = (int(trial.max()), int(trial.var() * 1e6), c)
+                if best_key is None or key < best_key:
+                    best, best_key = c, key
+            add(best)
+    assert len(chosen) == n_data, (
+        f"not enough odd-weight {n_check}-bit columns for {n_data} data bits"
+    )
+
+    col_dtype = np.uint8 if n_check <= 8 else np.uint32
+    data_cols = np.array(chosen, dtype=col_dtype)
+    parity_cols = np.array([1 << r for r in range(n_check)], dtype=col_dtype)
+    assert len(set(chosen) | set(int(c) for c in parity_cols)) == n_data + n_check
+
+    # Encode masks: check bit r covers data bit d iff bit r of data_cols[d].
+    mask_lo = np.zeros(n_check, dtype=np.uint32)
+    mask_hi = np.zeros(n_check, dtype=np.uint32)
+    for d in range(n_data):
+        col = int(data_cols[d])
+        for r in range(n_check):
+            if (col >> r) & 1:
+                if d < 32:
+                    mask_lo[r] |= np.uint32(1 << d)
+                else:
+                    mask_hi[r] |= np.uint32(1 << (d - 32))
+
+    # Historical action table (syndrome -> data bit / parity bit / sentinel).
+    lut = np.full(1 << n_check, LUT_DETECT, dtype=np.int32)
+    lut[0] = LUT_CLEAN
+    for d in range(n_data):
+        lut[int(data_cols[d])] = d
+    for r in range(n_check):
+        lut[1 << r] = n_data + r
+
+    return {
+        "data_cols": data_cols,
+        "parity_cols": parity_cols,
+        "mask_lo": mask_lo,
+        "mask_hi": mask_hi,
+        "syndrome_lut": lut,
+        "row_weight": row_weight,
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def build_code() -> dict:
+    """The Hsiao(72,64) tables (historical entry point, re-exported by
+    ``repro.core.hsiao``)."""
+    return build_hsiao(N_DATA, N_PARITY)
+
+
+CODE = build_code()
+DATA_COLS: np.ndarray = CODE["data_cols"]
+MASK_LO: np.ndarray = CODE["mask_lo"]
+MASK_HI: np.ndarray = CODE["mask_hi"]
+SYNDROME_LUT: np.ndarray = CODE["syndrome_lut"]
+
+
+class SecdedCodec(Codec):
+    """Hsiao SECDED(72,64): corrects any single, detects any double."""
+
+    name = "secded72"
+    n_check = N_PARITY
+    corrects_random = 1
+    detects_random = 2
+    corrects_burst = 1
+    sure_correct = 1
+
+    def __init__(self):
+        code = build_code()
+        self.mask_lo = code["mask_lo"]
+        self.mask_hi = code["mask_hi"]
+        patterns = []
+        for d in range(N_DATA):
+            flo = np.uint32(1 << d) if d < 32 else np.uint32(0)
+            fhi = np.uint32(1 << (d - 32)) if d >= 32 else np.uint32(0)
+            patterns.append((int(code["data_cols"][d]), flo, fhi, np.uint32(0)))
+        for r in range(self.n_check):
+            patterns.append((1 << r, np.uint32(0), np.uint32(0), np.uint32(1 << r)))
+        luts = build_luts(self.n_check, patterns)
+        self.lut_status = luts["lut_status"]
+        self.lut_flip_lo = luts["lut_flip_lo"]
+        self.lut_flip_hi = luts["lut_flip_hi"]
+        self.lut_flip_check = luts["lut_flip_check"]
+
+    def classify_jnp(self, synd, want_flips: bool = True, luts: tuple = ()):
+        # Gather-free syndrome resolution: the correctable set is only 72
+        # syndromes, so the LUT is evaluated as unrolled compare/select
+        # chains — exactly the form the SECDED Pallas kernels always lowered
+        # to (bit-identical op graph, so the CI perf gate sees no change).
+        import jax.numpy as jnp
+
+        u32 = jnp.uint32
+        flip_lo = jnp.zeros_like(synd)
+        flip_hi = jnp.zeros_like(synd)
+        flip_check = jnp.zeros_like(synd)
+        matched = jnp.zeros_like(synd, dtype=jnp.bool_)
+        for d in range(N_DATA):
+            col = u32(int(DATA_COLS[d]))
+            m = synd == col
+            matched = matched | m
+            if want_flips:
+                if d < 32:
+                    flip_lo = jnp.where(m, flip_lo | u32(1 << d), flip_lo)
+                else:
+                    flip_hi = jnp.where(m, flip_hi | u32(1 << (d - 32)), flip_hi)
+        for r in range(self.n_check):
+            m = synd == u32(1 << r)
+            matched = matched | m  # check-bit error: data fine
+            if want_flips:
+                flip_check = jnp.where(m, flip_check | u32(1 << r), flip_check)
+        clean = synd == u32(0)
+        status = jnp.where(
+            clean,
+            jnp.int32(base.STATUS_CLEAN),
+            jnp.where(
+                matched,
+                jnp.int32(base.STATUS_CORRECTED),
+                jnp.int32(base.STATUS_DETECTED),
+            ),
+        )
+        return flip_lo, flip_hi, flip_check, status
+
+
+@register("secded72")
+def _secded72() -> SecdedCodec:
+    return SecdedCodec()

@@ -69,6 +69,38 @@ def domain_of(key: str, default: str = "mlp") -> str:
     return default
 
 
+# Default ECC scheme per memory domain (DESIGN.md §12). The built-in BRAM
+# SECDED everywhere, matching the paper; engines override per domain via
+# ReliabilityConfig.codecs, and the controller escalation ladder may move a
+# domain up at runtime.
+from repro.codes import DEFAULT_CODEC  # noqa: E402 (single source of truth)
+
+
+def domain_codecs(overrides=None) -> dict[str, str]:
+    """Resolve a codec choice into a full {domain: codec name} mapping.
+
+    ``overrides`` may be None (all defaults), a codec name (every domain),
+    or a {domain: name} mapping (unnamed domains keep the default). Codec
+    names are validated against the registry, domain names against
+    MEMORY_DOMAINS — a typo'd domain silently keeping its default codec is
+    exactly the misconfiguration this helper exists to prevent.
+    """
+    from repro import codes
+
+    out = {d: DEFAULT_CODEC for d in MEMORY_DOMAINS}
+    if overrides is None:
+        pass
+    elif isinstance(overrides, str):
+        out = {d: overrides for d in out}
+    else:
+        for d, name in dict(overrides).items():
+            assert d in out, f"unknown memory domain {d!r}; known: {sorted(out)}"
+            out[d] = str(name)
+    for name in out.values():
+        codes.get(name)  # fail fast on unknown codecs
+    return out
+
+
 def supports_paged_kv(cfg: ModelConfig) -> bool:
     """Whether the paged SECDED KV cache (core/kvpages.py) covers this arch.
 

@@ -11,7 +11,7 @@ Built-in-ECC-under-undervolting for ML memory systems:
 """
 
 from repro.core import controller, ecc, faultsim, hsiao, memory, quantize, telemetry, voltage
-from repro.core.controller import MultiRailController, UndervoltController
+from repro.core.controller import EscalationPolicy, MultiRailController, UndervoltController
 from repro.core.faultsim import FaultField, FlipMasks
 from repro.core.memory import EccMemoryDomain
 from repro.core.telemetry import DomainFaultStats, FaultStats
@@ -19,7 +19,8 @@ from repro.core.voltage import PLATFORMS, PlatformProfile
 
 __all__ = [
     "controller", "ecc", "faultsim", "hsiao", "memory", "quantize",
-    "telemetry", "voltage", "MultiRailController", "UndervoltController",
+    "telemetry", "voltage", "EscalationPolicy", "MultiRailController",
+    "UndervoltController",
     "FaultField", "FlipMasks", "EccMemoryDomain", "DomainFaultStats",
     "FaultStats", "PLATFORMS", "PlatformProfile",
 ]

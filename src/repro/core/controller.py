@@ -7,14 +7,45 @@ canary: keep lowering the rail while reads are clean-or-corrected; on the
 first DED event, back off one step and lock. Silent-risk events (which the
 hardware cannot see — we track them in simulation as ground truth) are also
 treated as trip events when `paranoid=True`.
+
+Escalation (DESIGN.md §12): with a codec subsystem the controller has a
+second degree of freedom. Instead of always retreating the rail on a DED
+trip, an ``EscalationPolicy`` lets a rail *step up its ECC scheme* — e.g.
+SECDED -> DEC-TED — and keep descending at the same voltage: the DED events
+that tripped the canary are exactly the double-bit class the stronger code
+corrects. The ladder is finite; once exhausted, the next trip retreats and
+locks as before. The redundancy cost of the stronger code is folded into the
+power model (voltage.multi_rail_bram_power with per-domain check bits).
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+from repro.codes import DEFAULT_CODEC
 from repro.core.telemetry import FaultStats
 from repro.core.voltage import PlatformProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class EscalationPolicy:
+    """Codec ladder for a DED-canary rail (weakest -> strongest).
+
+    ``ded_rate``: minimum DED events per scrubbed word required to escalate;
+    a trip at or below the threshold retreats the rail instead (the event is
+    rare enough that paying the stronger code's check bits is not worth it).
+    The default 0.0 escalates on any DED event while ladder steps remain.
+    """
+
+    ladder: tuple = (DEFAULT_CODEC, "dected79")
+    ded_rate: float = 0.0
+
+    def next_codec(self, current: str) -> str | None:
+        """The ladder entry above ``current`` (None at or past the top)."""
+        if current not in self.ladder:
+            return None
+        i = self.ladder.index(current)
+        return self.ladder[i + 1] if i + 1 < len(self.ladder) else None
 
 
 @dataclasses.dataclass
@@ -24,6 +55,7 @@ class ControllerRecord:
     detected: int
     silent: int
     action: str
+    codec: str = DEFAULT_CODEC
 
 
 class UndervoltController:
@@ -36,6 +68,8 @@ class UndervoltController:
         backoff_steps: int = 1,
         paranoid: bool = False,
         start_v: float | None = None,
+        escalation: EscalationPolicy | None = None,
+        codec: str | None = None,
     ):
         self.platform = platform
         self.step_v = step_v
@@ -49,12 +83,37 @@ class UndervoltController:
         )
         self.locked = False
         self.history: list[ControllerRecord] = []
+        self.escalation = escalation
+        self.codec = codec or (
+            escalation.ladder[0] if escalation else DEFAULT_CODEC
+        )
+        self._pending_codec: str | None = None
+
+    def pop_codec_change(self) -> str | None:
+        """Codec escalated since the last poll (None otherwise). The caller
+        applies it to the protected storage (PlaneStore.set_domain_codec /
+        KVPageArena.change_codec) before the next telemetry interval."""
+        change, self._pending_codec = self._pending_codec, None
+        return change
 
     def update(self, stats: FaultStats) -> float:
         """Feed one read-interval's telemetry; returns the next rail voltage."""
         trip = stats.detected > 0 or (self.paranoid and stats.silent > 0)
+        stronger = (
+            self.escalation.next_codec(self.codec) if self.escalation else None
+        )
+        ded_rate = stats.detected / max(stats.words, 1)
         if self.locked:
             action = "hold"
+        elif trip and stronger is not None and stats.detected > 0 and (
+            ded_rate > self.escalation.ded_rate
+        ):
+            # Step the *code* up instead of retreating the rail: the DED
+            # class that tripped is what the stronger code corrects. Voltage
+            # holds; the walk resumes under the new scheme next interval.
+            self.codec = stronger
+            self._pending_codec = stronger
+            action = "escalate"
         elif trip:
             self.voltage = min(
                 self.platform.v_nom,
@@ -73,7 +132,8 @@ class UndervoltController:
                 action = "lower"
         self.history.append(
             ControllerRecord(
-                self.voltage, stats.corrected, stats.detected, stats.silent, action
+                self.voltage, stats.corrected, stats.detected, stats.silent,
+                action, self.codec,
             )
         )
         return self.voltage
@@ -100,8 +160,11 @@ class MultiRailController:
         paranoid: bool = False,
         start_v: float | None = None,
         profiles: dict | None = None,
+        escalation: EscalationPolicy | None = None,
+        codecs: dict | None = None,
     ):
         profiles = profiles or {}
+        codecs = codecs or {}
         self.domains = tuple(domains)
         assert self.domains, "MultiRailController needs at least one domain"
         self._platform = platform
@@ -110,23 +173,31 @@ class MultiRailController:
             backoff_steps=backoff_steps,
             paranoid=paranoid,
             start_v=start_v,
+            escalation=escalation,
         )
         self.rails = {
-            d: UndervoltController(profiles.get(d, platform), **self._defaults)
+            d: UndervoltController(
+                profiles.get(d, platform), codec=codecs.get(d), **self._defaults
+            )
             for d in self.domains
         }
 
-    def add_rail(self, domain: str, profile: PlatformProfile | None = None):
+    def add_rail(
+        self,
+        domain: str,
+        profile: PlatformProfile | None = None,
+        codec: str | None = None,
+    ):
         """Attach a late-bound rail (e.g. `kv` once the paged cache exists).
 
         Idempotent; the new rail inherits the controller's step/backoff/
-        paranoia defaults and starts its own DED-canary walk. Returns the
-        rail's UndervoltController.
+        paranoia/escalation defaults and starts its own DED-canary walk.
+        Returns the rail's UndervoltController.
         """
         if domain not in self.rails:
             self.domains = self.domains + (domain,)
             self.rails[domain] = UndervoltController(
-                profile or self._platform, **self._defaults
+                profile or self._platform, codec=codec, **self._defaults
             )
         return self.rails[domain]
 
@@ -141,6 +212,20 @@ class MultiRailController:
     @property
     def history(self) -> dict:
         return {d: c.history for d, c in self.rails.items()}
+
+    @property
+    def codecs(self) -> dict:
+        return {d: c.codec for d, c in self.rails.items()}
+
+    def pop_codec_changes(self) -> dict:
+        """{domain: codec} escalated since the last poll. The caller applies
+        them to the protected stores before the next telemetry interval."""
+        out = {}
+        for d, c in self.rails.items():
+            change = c.pop_codec_change()
+            if change:
+                out[d] = change
+        return out
 
     def update(self, stats) -> dict:
         """Feed one scrub interval's per-domain telemetry.

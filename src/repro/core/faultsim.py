@@ -30,7 +30,13 @@ import numpy as np
 from repro.core.voltage import PlatformProfile
 
 P_MAX = 0.5  # per-bit fault probability ceiling (clip for extreme weak rows)
-N_BITPLANES = 72  # 64 data + 8 parity
+N_DATA_BITS = 64
+N_CHECK_DEFAULT = 8  # SECDED(72,64); other codecs pass their own n_check
+N_BITPLANES = N_DATA_BITS + N_CHECK_DEFAULT  # historical 72-bitplane default
+
+
+def _check_dtype(n_check: int):
+    return np.uint8 if n_check <= 8 else np.uint32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,7 +45,7 @@ class FlipMasks:
 
     lo: np.ndarray  # (n,) uint32 — flips in data bits 0..31
     hi: np.ndarray  # (n,) uint32 — flips in data bits 32..63
-    parity: np.ndarray  # (n,) uint8 — flips in the 8 parity bits
+    parity: np.ndarray  # (n,) uint8/uint32 — flips in the codec's check bits
 
     @property
     def n_words(self) -> int:
@@ -76,11 +82,16 @@ class FaultField:
         n_words: int,
         seed: int = 0,
         chunk_words: int = 1 << 18,
+        n_check: int = N_CHECK_DEFAULT,
     ):
         self.platform = platform
         self.n_words = int(n_words)
         self.seed = int(seed)
         self.chunk_words = int(chunk_words)
+        # Codeword geometry: 64 data bits + the codec's check bits. The
+        # default (8, SECDED) reproduces the historical 72-bitplane stream
+        # bit-for-bit; other widths draw their own (64 + n_check, m) field.
+        self.n_check = int(n_check)
 
     # -- internals ----------------------------------------------------------
     def _chunk_rng(self, chunk_idx: int) -> np.random.Generator:
@@ -98,18 +109,19 @@ class FaultField:
         f_row = self._chunk_row_factor(rng, m)
         # NOTE: u is drawn *after* f_row from the same counter stream; both are
         # voltage-independent, so FIP is preserved.
-        u = rng.random((N_BITPLANES, m), dtype=np.float32)
+        u = rng.random((N_DATA_BITS + self.n_check, m), dtype=np.float32)
         p_word = np.clip(rate * f_row, 0.0, P_MAX)[None, :]  # (1, m)
-        bits = u < p_word  # (72, m) bool
+        bits = u < p_word  # (64 + n_check, m) bool
+        pdt = _check_dtype(self.n_check)
         lo = np.zeros(m, np.uint32)
         hi = np.zeros(m, np.uint32)
-        par = np.zeros(m, np.uint8)
+        par = np.zeros(m, pdt)
         for b in range(32):
             lo |= bits[b].astype(np.uint32) << np.uint32(b)
         for b in range(32):
             hi |= bits[32 + b].astype(np.uint32) << np.uint32(b)
-        for b in range(8):
-            par |= bits[64 + b].astype(np.uint8) << np.uint8(b)
+        for b in range(self.n_check):
+            par |= bits[64 + b].astype(pdt) << pdt(b)
         return lo, hi, par
 
     # -- public -------------------------------------------------------------
@@ -125,12 +137,14 @@ class FaultField:
             pars.append(par)
         if not los:  # zero-sized memory
             z32 = np.zeros(0, np.uint32)
-            return FlipMasks(z32, z32, np.zeros(0, np.uint8))
+            return FlipMasks(z32, z32, np.zeros(0, _check_dtype(self.n_check)))
         return FlipMasks(np.concatenate(los), np.concatenate(his), np.concatenate(pars))
 
     def device_field(self) -> "DeviceFaultField":
         """Device-resident counterpart over the same geometry (fresh stream)."""
-        return DeviceFaultField(self.platform, self.n_words, seed=self.seed)
+        return DeviceFaultField(
+            self.platform, self.n_words, seed=self.seed, n_check=self.n_check
+        )
 
     def sweep_histogram(self, voltages) -> list[dict]:
         """Per-voltage fault statistics (paper Fig. 1 / Fig. 2b machinery)."""
@@ -154,7 +168,7 @@ class FaultField:
 # ---------------------------------------------------------------------------
 # Device-resident fault field (DESIGN.md §8/§9)
 # ---------------------------------------------------------------------------
-def _device_chunk_masks(key, m: int, rate, row_sigma):
+def _device_chunk_masks(key, m: int, rate, row_sigma, n_check: int = N_CHECK_DEFAULT):
     """jax implementation of the failure-threshold draw for one ``m``-word chunk.
 
     Same statistical model as FaultField._chunk_masks (lognormal row weakness
@@ -163,7 +177,10 @@ def _device_chunk_masks(key, m: int, rate, row_sigma):
     mask in host memory. Bernoulli draws compare raw uint32 random bits to
     ``floor(p * 2^32)`` — exact to within float32 threshold rounding. FIP
     holds by construction: the random bits depend only on (key, m), voltage
-    enters through the threshold alone.
+    enters through the threshold alone. ``n_check`` sets the codeword's
+    check-bitplane count (default 8 keeps the historical SECDED stream);
+    the per-word weakness draw is shared across widths, so scheme sweeps
+    compare codecs on the same weak cells.
     """
     import jax
     import jax.numpy as jnp
@@ -173,8 +190,8 @@ def _device_chunk_masks(key, m: int, rate, row_sigma):
     f_row = jnp.exp(row_sigma * z - 0.5 * row_sigma * row_sigma)
     p_word = jnp.clip(rate * f_row, 0.0, P_MAX)
     thresh = (p_word * 4294967296.0).astype(jnp.uint32)  # (m,)
-    bits = jax.random.bits(kbits, (N_BITPLANES, m), jnp.uint32)
-    faulty = bits < thresh[None, :]  # (72, m) bool
+    bits = jax.random.bits(kbits, (N_DATA_BITS + n_check, m), jnp.uint32)
+    faulty = bits < thresh[None, :]  # (64 + n_check, m) bool
     lo = jnp.zeros((m,), jnp.uint32)
     hi = jnp.zeros((m,), jnp.uint32)
     par = jnp.zeros((m,), jnp.uint32)
@@ -182,16 +199,16 @@ def _device_chunk_masks(key, m: int, rate, row_sigma):
         lo = lo | (faulty[b].astype(jnp.uint32) << b)
     for b in range(32):
         hi = hi | (faulty[32 + b].astype(jnp.uint32) << b)
-    for b in range(8):
+    for b in range(n_check):
         par = par | (faulty[64 + b].astype(jnp.uint32) << b)
-    return lo, hi, par.astype(jnp.uint8)
+    return lo, hi, par.astype(jnp.dtype(_check_dtype(n_check)))
 
 
 @functools.lru_cache(maxsize=None)
 def _device_chunk_masks_jit():
     import jax
 
-    return jax.jit(_device_chunk_masks, static_argnames=("m",))
+    return jax.jit(_device_chunk_masks, static_argnames=("m", "n_check"))
 
 
 class DeviceFaultField:
@@ -213,6 +230,7 @@ class DeviceFaultField:
         n_words: int,
         seed: int = 0,
         chunk_words: int = 1 << 18,
+        n_check: int = N_CHECK_DEFAULT,
     ):
         import jax
 
@@ -220,6 +238,7 @@ class DeviceFaultField:
         self.n_words = int(n_words)
         self.seed = int(seed)
         self.chunk_words = int(chunk_words)
+        self.n_check = int(n_check)
         self._key = jax.random.PRNGKey(self.seed ^ 0xECC)
 
     def masks(self, v: float):
@@ -249,13 +268,16 @@ class DeviceFaultField:
         for ci, start in enumerate(range(0, self.n_words, self.chunk_words)):
             m = min(self.chunk_words, self.n_words - start)
             rate = rates[start : start + m] if per_word else rates
-            lo, hi, par = fn(jax.random.fold_in(self._key, ci), m, rate, sigma)
+            lo, hi, par = fn(
+                jax.random.fold_in(self._key, ci), m, rate, sigma,
+                n_check=self.n_check,
+            )
             los.append(lo)
             his.append(hi)
             pars.append(par)
         if not los:  # zero-sized memory
             z32 = jnp.zeros((0,), jnp.uint32)
-            return z32, z32, jnp.zeros((0,), jnp.uint8)
+            return z32, z32, jnp.zeros((0,), jnp.dtype(_check_dtype(self.n_check)))
         if len(los) == 1:
             return los[0], his[0], pars[0]
         return jnp.concatenate(los), jnp.concatenate(his), jnp.concatenate(pars)

@@ -1,111 +1,36 @@
-"""Hsiao (72,64) SECDED code construction.
+"""Hsiao (72,64) SECDED code construction — thin re-export.
 
-Xilinx 7-series BRAMs protect 64-bit words with 8 parity bits (UG473). The code
-class is an odd-weight-column (Hsiao) SECDED code: every column of the 8x72
-parity-check matrix H is distinct and has odd weight, the 8 parity positions use
-the weight-1 identity columns, and the 64 data positions use all 56 weight-3
-columns plus 8 weight-5 columns chosen to balance row weights (minimises the
-XOR-tree depth in hardware; irrelevant for us but we keep the construction
-faithful and deterministic).
-
-Decode classification (syndrome s = stored_parity XOR recomputed_parity):
-  s == 0                 -> NONE       (no error, or an aliasing >=4-bit error)
-  s == a data column     -> CORRECTED  (flip that data bit)
-  s == a parity column   -> CORRECTED  (parity-bit error; data untouched)
-  otherwise              -> DETECTED   (uncorrectable; includes all 2-bit errors
-                                        because XOR of two odd columns is even)
-
-All constants are exported as numpy arrays so both the pure-jnp reference and
-the Pallas kernels share one source of truth.
+The construction moved behind the pluggable codec interface in
+``repro.codes.secded`` (DESIGN.md §12); this module keeps the historical
+import surface (``hsiao.DATA_COLS``, ``hsiao.SYNDROME_LUT``, ...) alive for
+the oracle decoder (`core/ecc.py`) and the SECDED Pallas kernels. The
+tables are bit-identical to the pre-codec construction (tested).
 """
 
-from __future__ import annotations
+from repro.codes.secded import (  # noqa: F401
+    CODE,
+    DATA_COLS,
+    LUT_CLEAN,
+    LUT_DETECT,
+    MASK_HI,
+    MASK_LO,
+    N_BITS,
+    N_DATA,
+    N_PARITY,
+    SYNDROME_LUT,
+    build_code,
+)
 
-import functools
-
-import numpy as np
-
-N_DATA = 64
-N_PARITY = 8
-N_BITS = N_DATA + N_PARITY  # 72-bit codeword
-
-# Sentinel values in the syndrome lookup table.
-LUT_CLEAN = -1  # syndrome 0
-LUT_DETECT = -2  # uncorrectable (even-weight or unused odd syndrome)
-# 0..63   -> flip that data bit
-# 64..71  -> parity bit (64 + r) had the error; data is fine.
-
-
-def _popcount8(x: int) -> int:
-    return bin(x & 0xFF).count("1")
-
-
-@functools.lru_cache(maxsize=None)
-def build_code() -> dict:
-    """Deterministically construct the Hsiao(72,64) code tables."""
-    w3 = [c for c in range(256) if _popcount8(c) == 3]  # 56 columns
-    w5 = [c for c in range(256) if _popcount8(c) == 5]  # 56 candidates
-
-    # Row weights from the 56 weight-3 columns are already balanced (21 each).
-    row_weight = np.zeros(N_PARITY, dtype=np.int64)
-    for c in w3:
-        for r in range(N_PARITY):
-            row_weight[r] += (c >> r) & 1
-
-    # Greedily pick 8 weight-5 columns to keep row weights balanced
-    # (each row ends up covered exactly 5 extra times -> 26 total).
-    chosen: list[int] = []
-    for _ in range(8):
-        best, best_key = None, None
-        for c in w5:
-            if c in chosen:
-                continue
-            trial = row_weight.copy()
-            for r in range(N_PARITY):
-                trial[r] += (c >> r) & 1
-            key = (int(trial.max()), int(trial.var() * 1e6), c)
-            if best_key is None or key < best_key:
-                best, best_key = c, key
-        chosen.append(best)
-        for r in range(N_PARITY):
-            row_weight[r] += (best >> r) & 1
-
-    data_cols = np.array(w3 + chosen, dtype=np.uint8)  # 64 columns
-    parity_cols = np.array([1 << r for r in range(N_PARITY)], dtype=np.uint8)
-    assert len(set(data_cols.tolist()) | set(parity_cols.tolist())) == N_BITS
-
-    # Encode masks: parity bit r covers data bit d iff bit r of data_cols[d].
-    mask_lo = np.zeros(N_PARITY, dtype=np.uint32)
-    mask_hi = np.zeros(N_PARITY, dtype=np.uint32)
-    for d in range(N_DATA):
-        col = int(data_cols[d])
-        for r in range(N_PARITY):
-            if (col >> r) & 1:
-                if d < 32:
-                    mask_lo[r] |= np.uint32(1 << d)
-                else:
-                    mask_hi[r] |= np.uint32(1 << (d - 32))
-
-    # Syndrome lookup table (256 entries).
-    lut = np.full(256, LUT_DETECT, dtype=np.int32)
-    lut[0] = LUT_CLEAN
-    for d in range(N_DATA):
-        lut[int(data_cols[d])] = d
-    for r in range(N_PARITY):
-        lut[1 << r] = N_DATA + r
-
-    return {
-        "data_cols": data_cols,
-        "parity_cols": parity_cols,
-        "mask_lo": mask_lo,
-        "mask_hi": mask_hi,
-        "syndrome_lut": lut,
-        "row_weight": row_weight,
-    }
-
-
-CODE = build_code()
-DATA_COLS: np.ndarray = CODE["data_cols"]
-MASK_LO: np.ndarray = CODE["mask_lo"]
-MASK_HI: np.ndarray = CODE["mask_hi"]
-SYNDROME_LUT: np.ndarray = CODE["syndrome_lut"]
+__all__ = [
+    "CODE",
+    "DATA_COLS",
+    "LUT_CLEAN",
+    "LUT_DETECT",
+    "MASK_HI",
+    "MASK_LO",
+    "N_BITS",
+    "N_DATA",
+    "N_PARITY",
+    "SYNDROME_LUT",
+    "build_code",
+]

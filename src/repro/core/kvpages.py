@@ -44,12 +44,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codes
 from repro.core.faultsim import _device_chunk_masks_jit
 from repro.core.telemetry import FaultStats
 from repro.core.voltage import PlatformProfile
 from repro.kernels import ops as kops
 from repro.kernels import paged_gather
-from repro.kernels.secded import _compute_parity
 
 PAGE_TOKENS = 8  # default page size (tokens); 2^k keeps slot math cheap
 
@@ -157,18 +157,19 @@ class PageAllocator:
 # ---------------------------------------------------------------------------
 # jit'd arena primitives (module-level so tracing is shared across arenas)
 # ---------------------------------------------------------------------------
-def _payload_to_planes(payload):
-    """(N, token_f32) f32 -> lo/hi (N, token_words) uint32 + parity uint8.
+def _payload_to_planes(payload, codec: str = "secded72"):
+    """(N, token_f32) f32 -> lo/hi (N, token_words) uint32 + check plane.
 
-    Parity comes from the same `_compute_parity` Hsiao chains the Pallas
-    encode kernel runs, called as plain jnp inside the already-jit'd commit:
-    the per-token write path is XLA-fused with the extract/scatter around it
-    instead of paying a kernel launch per decode step. Bit-identical to
-    `kernels/ops.encode` (it is the same function).
+    Check bits come from the codec's ``encode_jnp`` — the same fold the
+    Pallas encode kernel runs — called as plain jnp inside the already-jit'd
+    commit: the per-token write path is XLA-fused with the extract/scatter
+    around it instead of paying a kernel launch per decode step.
+    Bit-identical to `kernels/ops.encode` (it is the same function).
     """
+    c = codes.get(codec)
     u = jax.lax.bitcast_convert_type(payload.astype(jnp.float32), jnp.uint32)
     lo, hi = u[:, 0::2], u[:, 1::2]
-    return lo, hi, _compute_parity(lo, hi).astype(jnp.uint8)
+    return lo, hi, c.encode_jnp(lo, hi).astype(jnp.dtype(c.check_dtype))
 
 
 def _planes_to_payload(lo, hi):
@@ -194,21 +195,28 @@ def _row_index(page_ids, words_per_page):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("token_words", "words_per_page"))
-def _commit_tokens(lo, hi, par, payload, page_ids, slots, *, token_words, words_per_page):
+@functools.partial(
+    jax.jit, static_argnames=("token_words", "words_per_page", "codec")
+)
+def _commit_tokens(
+    lo, hi, par, payload, page_ids, slots, *, token_words, words_per_page,
+    codec: str = "secded72",
+):
     """Encode token payload rows and scatter them into the arena planes."""
-    rlo, rhi, rpar = _payload_to_planes(payload)
+    rlo, rhi, rpar = _payload_to_planes(payload, codec)
     base = page_ids * words_per_page + slots * token_words
     idx = base[:, None] + jnp.arange(token_words, dtype=jnp.int32)[None, :]
     return lo.at[idx].set(rlo), hi.at[idx].set(rhi), par.at[idx].set(rpar)
 
 
-@functools.partial(jax.jit, static_argnames=("words_per_page", "interpret"))
-def _scrub_rows(lo, hi, par, page_ids, *, words_per_page, interpret):
+@functools.partial(
+    jax.jit, static_argnames=("words_per_page", "codec", "interpret")
+)
+def _scrub_rows(lo, hi, par, page_ids, *, words_per_page, codec, interpret):
     """Gather page rows, scrub-on-read, write corrected planes back."""
     idx = _row_index(page_ids, words_per_page)
     olo, ohi, opar, cnt = paged_gather.gather_scrub_pages(
-        lo[idx], hi[idx], par[idx], interpret=interpret
+        lo[idx], hi[idx], par[idx], codec=codec, interpret=interpret
     )
     return lo.at[idx].set(olo), hi.at[idx].set(ohi), par.at[idx].set(opar), olo, ohi, cnt
 
@@ -227,20 +235,24 @@ class KVPageArena:
         n_pages: int,
         seed: int = 0,
         ecc: bool = True,
+        codec: str = "secded72",
     ):
         self.geom = geom
         self.profile = profile
         self.n_pages = int(n_pages)
         self.ecc = bool(ecc)
         self.seed = int(seed)
+        self.codec_name = str(codec)
+        self.codec = codes.get(self.codec_name)
         w = geom.words_per_page
         self.n_words = self.n_pages * w  # real (non-scratch) words
         total = (self.n_pages + 1) * w
         self._total_words = total
         self.lo = jnp.zeros((total,), jnp.uint32)
         self.hi = jnp.zeros((total,), jnp.uint32)
-        # all-zero data has all-zero Hsiao parity: the empty arena is clean
-        self.parity = jnp.zeros((total,), jnp.uint8)
+        # all-zero data has all-zero check bits in every registered linear
+        # code: the empty arena is clean
+        self.parity = jnp.zeros((total,), jnp.dtype(self.codec.check_dtype))
         self.voltage = float(profile.v_nom)
         self._key = jax.random.PRNGKey(self.seed ^ 0xCACE)
         self._interval = 0
@@ -254,6 +266,20 @@ class KVPageArena:
     # -- rail ---------------------------------------------------------------
     def set_voltage(self, v: float) -> None:
         self.voltage = float(v)
+
+    def change_codec(self, codec: str) -> None:
+        """Re-protect the live arena under another registered code (the `kv`
+        rail's escalation path): the check plane is re-encoded from the
+        current page contents through the new encoder — exactly what a
+        hardware re-protection sweep would write, so faults the *old* code
+        had not yet corrected are re-sealed as (apparent) clean data. Call
+        right after a scrub interval so correctable faults were flushed
+        first; the scheduler does."""
+        if codec == self.codec_name:
+            return
+        self.codec_name = str(codec)
+        self.codec = codes.get(self.codec_name)
+        self.parity = kops.encode(self.lo, self.hi, codec=self.codec_name)
 
     def tick(self) -> None:
         """Inject one interval's faults at the current rail voltage.
@@ -270,15 +296,17 @@ class KVPageArena:
         key = jax.random.fold_in(self._key, self._interval)
         self.faulted = True
         mlo, mhi, mpar = _device_chunk_masks_jit()(
-            key, self._total_words, jnp.float32(rate), jnp.float32(self.profile.row_sigma)
+            key, self._total_words, jnp.float32(rate),
+            jnp.float32(self.profile.row_sigma), n_check=self.codec.n_check,
         )
         self.lo = _xor_into(self.lo, mlo)
         self.hi = _xor_into(self.hi, mhi)
         self.parity = _xor_into(self.parity, mpar)
         if not self.ecc:
-            # No-ECC baseline: parity tracks the faulty data, the read-path
-            # decoder becomes a pass-through and faults flow into attention.
-            self.parity = kops.encode(self.lo, self.hi)
+            # No-ECC baseline: check bits track the faulty data, the read-
+            # path decoder becomes a pass-through and faults flow into
+            # attention.
+            self.parity = kops.encode(self.lo, self.hi, codec=self.codec_name)
 
     # -- data path ----------------------------------------------------------
     def zero_pages(self, page_ids) -> None:
@@ -293,7 +321,9 @@ class KVPageArena:
         z32 = jnp.zeros(idx.shape, jnp.uint32)
         self.lo = _scatter_rows(self.lo, idx, z32)
         self.hi = _scatter_rows(self.hi, idx, z32)
-        self.parity = _scatter_rows(self.parity, idx, jnp.zeros(idx.shape, jnp.uint8))
+        self.parity = _scatter_rows(
+            self.parity, idx, jnp.zeros(idx.shape, self.parity.dtype)
+        )
 
     def commit_tokens(self, payload, page_ids, slots) -> None:
         """Write one token per row: payload (N, token_f32) f32, page_ids and
@@ -308,6 +338,7 @@ class KVPageArena:
             jnp.asarray(slots, jnp.int32),
             token_words=self.geom.token_words,
             words_per_page=self.geom.words_per_page,
+            codec=self.codec_name,
         )
 
     def scrub_pages(self, page_ids):
@@ -321,6 +352,7 @@ class KVPageArena:
             self.parity,
             ids,
             words_per_page=self.geom.words_per_page,
+            codec=self.codec_name,
             interpret=kops.use_interpret(),
         )
         payload = _planes_to_payload(

@@ -2,31 +2,43 @@
 
 The per-leaf undervolting loop launched 2-3 kernels *per weight matrix* per
 voltage step and synced a per-leaf status array back to the host each time.
-The store concatenates all (lo, hi, parity) planes into flat (n_words,)
+The store concatenates all (lo, hi, check) planes into flat (n_words,)
 arenas at protect time, keeps a leaf -> [offset, offset+size) slice index,
-and makes a voltage step exactly one fused ``inject_scrub`` launch over the
-whole model with a single (8,) counter vector crossing to host
-(DESIGN.md §9).
+and makes a voltage step one fused ``inject_scrub`` launch per *codec
+group* with a single counter block crossing to host (DESIGN.md §9/§12).
 
 Mask sources:
   * "host"   — the NumPy FaultField oracle, one field per leaf keyed exactly
     like the historical per-leaf path (``leaf_seed``), so the batched step is
     bit-identical to the per-leaf reference (tested);
-  * "device" — one DeviceFaultField over the arena: counter-based jax.random,
-    masks never exist in host memory (statistically equivalent, FIP holds).
+  * "device" — one DeviceFaultField per codec group: counter-based
+    jax.random, masks never exist in host memory (statistically equivalent,
+    FIP holds).
+
+Codecs (DESIGN.md §12): every memory domain selects a registered ECC scheme
+(``codecs`` maps domain -> codec name; default everything on the built-in
+``secded72``). Slots sharing a codec form one *group* with its own
+concatenated planes and one fused kernel launch per voltage step — the
+uniform-SECDED default is exactly one group whose planes alias the master
+arrays, so the historical single-launch behaviour (and its bit patterns) is
+unchanged. ``set_domain_codec`` re-encodes a domain under a stronger code at
+runtime — the controller escalation path.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import zlib
+from typing import Any
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codes
 from repro.core.faultsim import DeviceFaultField, FaultField
 from repro.core.telemetry import DomainFaultStats, FaultStats
 from repro.core.voltage import PlatformProfile
+from repro.codes import DEFAULT_CODEC
 from repro.kernels import ops as kops
 
 
@@ -47,15 +59,34 @@ class Slot:
     domain: str = "all"
 
 
+@dataclasses.dataclass
+class _CodecGroup:
+    """Slots sharing one ECC scheme: one fused launch per voltage step."""
+
+    name: str
+    codec: Any  # codes.Codec
+    slot_ids: tuple  # indices into store.slots, arena order
+    offsets: tuple  # per-slot word offset inside the group arena
+    n_words: int
+    lo: Any  # (n_words,) uint32 clean data
+    hi: Any
+    check: Any  # (n_words,) codec check dtype
+    dom_ids: Any  # (n_words,) jnp int32 (store-global domain indices)
+    dom_ids_np: np.ndarray
+    device_field: DeviceFaultField
+
+
 class PlaneStore:
     """Flat arena over a sequence of EccWeight leaves (clean planes, device).
 
     With a ``domain_key`` classifier the arena is partitioned into named
     memory domains (DESIGN.md §10): every slot belongs to one domain, and
     ``set_rails`` drives a separate rail voltage per domain through one fused
-    inject+scrub launch with per-domain counter rows. ``profiles`` optionally
-    gives each domain its own PlatformProfile (MoRS-style per-instance fault
-    behaviour); rails without a dedicated profile use ``platform``.
+    inject+scrub launch (per codec group) with per-domain counter rows.
+    ``profiles`` optionally gives each domain its own PlatformProfile
+    (MoRS-style per-instance fault behaviour); rails without a dedicated
+    profile use ``platform``. ``codecs`` maps domains to registered ECC
+    schemes (str for all domains, dict for per-domain choices).
     """
 
     def __init__(
@@ -67,6 +98,7 @@ class PlaneStore:
         mask_source: str = "host",
         domain_key=None,
         profiles=None,
+        codecs=None,
     ):
         assert mask_source in ("host", "device"), mask_source
         assert len(leaves) == len(set(keys)), "leaf keys must be unique"
@@ -75,6 +107,7 @@ class PlaneStore:
         self.mask_source = mask_source
         self._profiles = dict(profiles or {})
         self._external_words: dict[str, int] = {}
+        self._external_codecs: dict[str, str] = {}
         classify = domain_key if domain_key is not None else (lambda _k: "all")
         slots, off = [], 0
         los, his, pars = [], [], []
@@ -99,7 +132,7 @@ class PlaneStore:
         if los:
             self.lo = jnp.concatenate(los)
             self.hi = jnp.concatenate(his)
-            self.parity = jnp.concatenate(pars)
+            self.parity = jnp.concatenate(pars)  # SECDED check bits, as packed
         else:
             self.lo = jnp.zeros((0,), jnp.uint32)
             self.hi = jnp.zeros((0,), jnp.uint32)
@@ -113,29 +146,138 @@ class PlaneStore:
             dom_ids[s.offset : s.offset + s.size] = self._dom_index[s.domain]
         self._dom_ids_np = dom_ids
         self._dom_ids = jnp.asarray(dom_ids) if self.n_words else jnp.zeros((0,), jnp.int32)
-        self._host_fields = {
-            s.key: FaultField(
-                self.domain_profile(s.domain), s.size,
-                seed=leaf_seed(self.seed, s.key),
+        # Per-domain codec choices (default: the built-in SECDED everywhere).
+        if codecs is None:
+            codecs = {}
+        elif isinstance(codecs, str):
+            codecs = {d: codecs for d in self.domains}
+        self._codecs = {d: str(codecs.get(d, DEFAULT_CODEC)) for d in self.domains}
+        for name in self._codecs.values():
+            codes.get(name)  # fail fast on unknown codecs
+        self._build_groups()
+
+    # -- codec groups --------------------------------------------------------
+    def codec_of(self, domain: str) -> str:
+        return self._codecs.get(domain, DEFAULT_CODEC)
+
+    def _build_groups(self) -> None:
+        """(Re)build the per-codec sub-arenas from the master clean planes.
+
+        The uniform-default case — every domain on one codec — produces a
+        single group whose planes alias the master arrays (no copy, no
+        re-encode for SECDED), keeping the historical memory footprint,
+        launch count, and bit patterns.
+        """
+        by_codec: dict[str, list[int]] = {}
+        for si, s in enumerate(self.slots):
+            by_codec.setdefault(self.codec_of(s.domain), []).append(si)
+        single = len(by_codec) == 1
+        groups = []
+        for cname, slot_ids in by_codec.items():
+            codec = codes.get(cname)
+            offsets, off = [], 0
+            for si in slot_ids:
+                offsets.append(off)
+                off += self.slots[si].size
+            if single:
+                lo, hi = self.lo, self.hi
+                dom_np = self._dom_ids_np
+                dom = self._dom_ids
+                dseed = self.seed
+            else:
+                sel = np.concatenate(
+                    [
+                        np.arange(
+                            self.slots[si].offset,
+                            self.slots[si].offset + self.slots[si].size,
+                        )
+                        for si in slot_ids
+                    ]
+                )
+                idx = jnp.asarray(sel)
+                lo, hi = self.lo[idx], self.hi[idx]
+                dom_np = self._dom_ids_np[sel]
+                dom = jnp.asarray(dom_np)
+                # A stable, codec-keyed stream: regrouping must not change
+                # the masks of groups whose membership did not change.
+                dseed = (self.seed ^ zlib.crc32(cname.encode())) & 0x7FFFFFFF
+            if cname == DEFAULT_CODEC and single:
+                check = self.parity  # the leaves arrived SECDED-encoded
+            else:
+                check = kops.encode(lo, hi, codec=cname) if off else jnp.zeros(
+                    (0,), jnp.dtype(codec.check_dtype)
+                )
+            groups.append(
+                _CodecGroup(
+                    name=cname,
+                    codec=codec,
+                    slot_ids=tuple(slot_ids),
+                    offsets=tuple(offsets),
+                    n_words=off,
+                    lo=lo,
+                    hi=hi,
+                    check=check,
+                    dom_ids=dom,
+                    dom_ids_np=dom_np,
+                    device_field=DeviceFaultField(
+                        self.platform, off, seed=dseed, n_check=codec.n_check
+                    ),
+                )
             )
-            for s in self.slots
-        }
-        self._device_field = DeviceFaultField(platform, self.n_words, seed=self.seed)
+        self._groups = groups
+        # Per-leaf host oracle fields, keyed like the historical per-leaf
+        # path; the check-bitplane count follows the slot's codec.
+        self._host_fields = {}
+        for g in self._groups:
+            for si in g.slot_ids:
+                s = self.slots[si]
+                self._host_fields[s.key] = FaultField(
+                    self.domain_profile(s.domain),
+                    s.size,
+                    seed=leaf_seed(self.seed, s.key),
+                    n_check=g.codec.n_check,
+                )
+
+    def set_domain_codec(self, domain: str, codec_name: str) -> None:
+        """Re-protect ``domain`` under another registered code (the
+        controller escalation path). Check planes are re-encoded from the
+        clean master data; fault fields follow the new bitplane geometry.
+        Other domains' groups are rebuilt with identical membership, seeds
+        and geometry, so their mask streams are unchanged."""
+        codes.get(codec_name)  # validate early
+        assert domain in self.domains, (domain, self.domains)
+        if self.codec_of(domain) == codec_name:
+            return
+        self._codecs[domain] = str(codec_name)
+        self._build_groups()
+
+    def codecs_by_domain(self) -> dict:
+        out = {d: self.codec_of(d) for d in self.domains}
+        out.update(self._external_codecs)
+        return out
+
+    def check_bits_by_domain(self) -> dict:
+        """Check bits per 64-bit word for every domain (power weighting)."""
+        return {d: codes.get(c).n_check for d, c in self.codecs_by_domain().items()}
 
     # -- domains -------------------------------------------------------------
     def domain_profile(self, domain: str) -> PlatformProfile:
         return self._profiles.get(domain, self.platform)
 
-    def register_domain_words(self, domain: str, words: int) -> None:
+    def register_domain_words(
+        self, domain: str, words: int, codec: str = DEFAULT_CODEC
+    ) -> None:
         """Account storage that lives *outside* the weight arena — e.g. the
         paged KV cache (core/kvpages.py) — under a named domain.
 
         External domains join ``words_by_domain`` (power weighting, telemetry
         denominators) but not the arena's counter rows: their planes are not
         part of this store's fused inject+scrub launch, they carry their own
-        fault machinery and report telemetry separately.
+        fault machinery and report telemetry separately. ``codec`` records
+        the external store's scheme for the redundancy-cost power weighting.
         """
         self._external_words[str(domain)] = int(words)
+        self._external_codecs[str(domain)] = str(codec)
 
     def words_by_domain(self) -> dict:
         """Word count per domain (power weighting + telemetry denominators),
@@ -148,13 +290,12 @@ class PlaneStore:
         return counts
 
     # -- masks ---------------------------------------------------------------
-    def host_masks(self, v):
-        """Concatenated per-leaf oracle masks (bit-identical to the per-leaf
-        path: same fields, same seeds, same order). ``v`` is a scalar rail
-        voltage or a {domain: voltage} mapping."""
-        volts = v if isinstance(v, dict) else {d: v for d in self.domains}
+    def _group_host_masks(self, g: _CodecGroup, volts: dict):
+        """Concatenated per-leaf oracle masks for one group (bit-identical to
+        the per-leaf path: same fields, same seeds, same order)."""
         mlos, mhis, mpars = [], [], []
-        for s in self.slots:
+        for si in g.slot_ids:
+            s = self.slots[si]
             mk = self._host_fields[s.key].masks(volts[s.domain])
             mlos.append(mk.lo)
             mhis.append(mk.hi)
@@ -162,32 +303,46 @@ class PlaneStore:
         cat = lambda xs, dt: (
             jnp.asarray(np.concatenate(xs)) if xs else jnp.zeros((0,), dt)
         )
-        return cat(mlos, jnp.uint32), cat(mhis, jnp.uint32), cat(mpars, jnp.uint8)
+        return (
+            cat(mlos, jnp.uint32),
+            cat(mhis, jnp.uint32),
+            cat(mpars, jnp.dtype(g.codec.check_dtype)),
+        )
 
-    def _rail_rates(self, volts: dict) -> np.ndarray:
+    def _group_rates(self, g: _CodecGroup, volts: dict) -> np.ndarray:
         """Per-word fault rate vector for a {domain: voltage} schedule."""
-        rates = np.zeros(self.n_words, np.float32)
+        rates = np.zeros(g.n_words, np.float32)
         for d, i in self._dom_index.items():
-            rates[self._dom_ids_np == i] = self.domain_profile(d).fault_rate(
+            rates[g.dom_ids_np == i] = self.domain_profile(d).fault_rate(
                 float(volts[d])
             )
         return rates
 
-    def masks(self, v):
+    def _group_masks(self, g: _CodecGroup, v):
+        volts = v if isinstance(v, dict) else {d: v for d in self.domains}
         if self.mask_source == "device":
             # Per-domain profiles make the rate a function of the word's
             # domain even under a scalar rail, so route through the rate
             # vector (the host path gets this for free from its per-leaf
             # fields); profile-less stores keep the scalar fast path.
             if isinstance(v, dict) or self._profiles:
-                volts = v if isinstance(v, dict) else {d: v for d in self.domains}
-                return self._device_field.masks_for_rates(self._rail_rates(volts))
-            return self._device_field.masks(v)
-        return self.host_masks(v)
+                return g.device_field.masks_for_rates(self._group_rates(g, volts))
+            return g.device_field.masks(v)
+        return self._group_host_masks(g, volts)
+
+    # Legacy single-group helpers (kept for the uniform-codec arena).
+    def host_masks(self, v):
+        assert len(self._groups) == 1, "host_masks is a single-group helper"
+        volts = v if isinstance(v, dict) else {d: v for d in self.domains}
+        return self._group_host_masks(self._groups[0], volts)
+
+    def masks(self, v):
+        assert len(self._groups) == 1, "masks is a single-group helper"
+        return self._group_masks(self._groups[0], v)
 
     # -- the batched voltage step --------------------------------------------
     def set_voltage(self, v: float, ecc: bool = True):
-        """One fused inject+scrub launch for the whole store.
+        """One fused inject+scrub launch per codec group for the whole store.
 
         Returns (faulty_leaves, FaultStats). faulty_leaves are the input
         EccWeight leaves with lo/hi/parity replaced by arena slices at rail
@@ -195,15 +350,22 @@ class PlaneStore:
         """
         if self.n_words == 0:
             return list(self._leaves), FaultStats()
-        mlo, mhi, mpar = self.masks(v)
-        flo, fhi, fpar, counters = kops.inject_scrub(
-            self.lo, self.hi, self.parity, mlo, mhi, mpar, reencode=not ecc
-        )
-        stats = FaultStats.from_counters(np.asarray(counters), words=self.n_words)
-        return self._slice_leaves(flo, fhi, fpar), stats
+        total = np.zeros(8, np.int64)
+        planes = {}
+        for g in self._groups:
+            mlo, mhi, mpar = self._group_masks(g, v)
+            flo, fhi, fpar, counters = kops.inject_scrub(
+                g.lo, g.hi, g.check, mlo, mhi, mpar,
+                codec=g.name, reencode=not ecc,
+            )
+            total += np.asarray(counters)
+            planes[g.name] = (flo, fhi, fpar)
+        stats = FaultStats.from_counters(total, words=self.n_words)
+        return self._slice_leaves(planes), stats
 
     def set_rails(self, volts: dict, ecc: bool = True):
-        """One fused inject+scrub launch with a separate rail per domain.
+        """One fused inject+scrub launch per codec group with a separate rail
+        per domain.
 
         ``volts`` maps every domain name to its rail voltage. Returns
         (faulty_leaves, DomainFaultStats) — one counter row per domain
@@ -214,23 +376,32 @@ class PlaneStore:
         assert not missing, f"rails missing for domains: {sorted(missing)}"
         if self.n_words == 0:
             return list(self._leaves), DomainFaultStats()
-        mlo, mhi, mpar = self.masks(dict(volts))
-        flo, fhi, fpar, counters = kops.inject_scrub_domains(
-            self.lo, self.hi, self.parity, mlo, mhi, mpar,
-            self._dom_ids, len(self.domains), reencode=not ecc,
-        )
-        stats = FaultStats.from_counter_matrix(
-            np.asarray(counters), self.domains, self.words_by_domain()
-        )
-        return self._slice_leaves(flo, fhi, fpar), stats
-
-    def _slice_leaves(self, flo, fhi, fpar):
-        return [
-            dataclasses.replace(
-                leaf,
-                lo=flo[s.offset : s.offset + s.size].reshape(s.shape),
-                hi=fhi[s.offset : s.offset + s.size].reshape(s.shape),
-                parity=fpar[s.offset : s.offset + s.size].reshape(s.shape),
+        total = np.zeros((len(self.domains), 8), np.int64)
+        planes = {}
+        for g in self._groups:
+            mlo, mhi, mpar = self._group_masks(g, dict(volts))
+            flo, fhi, fpar, counters = kops.inject_scrub_domains(
+                g.lo, g.hi, g.check, mlo, mhi, mpar,
+                g.dom_ids, len(self.domains), codec=g.name, reencode=not ecc,
             )
-            for s, leaf in zip(self.slots, self._leaves)
-        ]
+            total += np.asarray(counters)
+            planes[g.name] = (flo, fhi, fpar)
+        stats = FaultStats.from_counter_matrix(
+            total, self.domains, self.words_by_domain()
+        )
+        return self._slice_leaves(planes), stats
+
+    def _slice_leaves(self, planes: dict):
+        """Reassemble per-leaf EccWeight views from per-group faulty planes."""
+        out: list = [None] * len(self.slots)
+        for g in self._groups:
+            flo, fhi, fpar = planes[g.name]
+            for si, off in zip(g.slot_ids, g.offsets):
+                s = self.slots[si]
+                out[si] = dataclasses.replace(
+                    self._leaves[si],
+                    lo=flo[off : off + s.size].reshape(s.shape),
+                    hi=fhi[off : off + s.size].reshape(s.shape),
+                    parity=fpar[off : off + s.size].reshape(s.shape),
+                )
+        return out

@@ -48,24 +48,15 @@ def dispatch_count() -> int:
 
 def _classify_tallies(mlo, mhi, mpar):
     """Per-word boolean tally planes (telemetry.COUNTER_FIELDS lanes 0..6)
-    plus flip counts, for one chunk's masks applied to a zero memory."""
+    plus flip counts, for one chunk's masks applied to a zero memory. Shares
+    the outcome predicates with the fused kernel (inject_scrub)."""
     import jax.numpy as jnp
 
-    from repro.kernels.inject_scrub import _popcount32
+    from repro.kernels.inject_scrub import _popcount32, outcome_tallies
 
     _, _, status = ecc.decode(mlo, mhi, mpar)
     flips = _popcount32(mlo) + _popcount32(mhi) + _popcount32(mpar.astype(jnp.uint32))
-    detected = status == ecc.STATUS_DETECTED
-    tallies = [
-        (status == ecc.STATUS_CLEAN) & (flips == 0),
-        (status == ecc.STATUS_CORRECTED) & (flips == 1),
-        detected,
-        (flips >= 2) & ~detected,
-        flips == 1,
-        flips == 2,
-        flips >= 3,
-    ]
-    return tallies, flips
+    return outcome_tallies(False, status, flips), flips
 
 
 def _point_counters(key, rate, sigma, m):
@@ -215,6 +206,106 @@ def sweep_rail_schedules(
         FaultStats.from_counter_matrix(total[s], domains, words_by_domain)
         for s in range(len(schedules))
     ]
+
+
+# ---------------------------------------------------------------------------
+# Codec scheme comparison (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def _codec_point_counters(key, rate, sigma, m, codec_name):
+    """(8,) counters for one chunk under one codec, on a zero memory.
+
+    The flip masks *are* the faulty codeword; the per-word weakness draw is
+    shared across codecs (faultsim._device_chunk_masks), so every scheme is
+    judged on the same weak cells — only the check-bitplane count (and thus
+    the exposed bit budget) differs. "corrected" counts *genuine*
+    corrections exactly: the decoder's flip must restore the all-zero data
+    word, which for SECDED coincides with the historical
+    status==CORRECTED & flips==1 predicate.
+    """
+    import jax.numpy as jnp
+
+    from repro import codes
+    from repro.kernels.inject_scrub import _popcount32, outcome_tallies
+
+    c = codes.get(codec_name)
+    mlo, mhi, mpar = _device_chunk_masks(key, m, rate, sigma, n_check=c.n_check)
+    synd = c.encode_jnp(mlo, mhi) ^ mpar.astype(jnp.uint32)
+    flip_lo, flip_hi, _, status = c.classify_jnp(synd)
+    flips = _popcount32(mlo) + _popcount32(mhi) + _popcount32(mpar.astype(jnp.uint32))
+    # On the zero memory the masks are the codeword, so the genuine-
+    # corrected plane (exact accounting, all codecs) is correction == mask.
+    genuine = (status == 1) & (flip_lo == mlo) & (flip_hi == mhi)
+    tallies = outcome_tallies(True, status, flips, genuine)
+    cnt = [jnp.sum(t.astype(jnp.int32)) for t in tallies]
+    cnt.append(jnp.sum(flips))
+    return jnp.stack(cnt)
+
+
+@functools.lru_cache(maxsize=None)
+def _codec_chunk_fn(codec_name: str):
+    import jax
+
+    return jax.jit(
+        jax.vmap(
+            functools.partial(_codec_point_counters, codec_name=codec_name),
+            in_axes=(None, 0, 0, None),
+        ),
+        static_argnums=(3,),
+    )
+
+
+def sweep_codec_schemes(
+    codec_names, grid, n_words: int, seed: int = 0, chunk_words: int = 1 << 18
+) -> list[dict]:
+    """Coverage vs check-bit overhead for every (codec, platform, voltage).
+
+    ``grid``: iterable of (PlatformProfile, voltage) pairs, vmapped per codec
+    exactly like ``sweep_platform_grid``. Returns one row dict per
+    (codec, grid point) with the codec's geometry, the aggregated
+    FaultStats counters, and the coverage fractions — the scheme-comparison
+    table benchmarks/codec_compare.py emits (DESIGN.md §12).
+    """
+    import jax
+
+    grid = list(grid)
+    rows: list[dict] = []
+    if not grid:
+        return rows
+    rates = np.array([p.fault_rate(float(v)) for p, v in grid], np.float32)
+    sigmas = np.array([p.row_sigma for p, _ in grid], np.float32)
+    for cname in codec_names:
+        from repro import codes
+
+        codec = codes.get(cname)
+        fn = _codec_chunk_fn(cname)
+        key = jax.random.PRNGKey(seed ^ 0xECC)
+        total = np.zeros((len(grid), 8), np.int64)
+        for ci, start in enumerate(range(0, n_words, chunk_words)):
+            m = min(chunk_words, n_words - start)
+            _dispatches["n"] += 1
+            total += np.asarray(fn(jax.random.fold_in(key, ci), rates, sigmas, m))
+        for i, (p, v) in enumerate(grid):
+            st = FaultStats.from_counters(total[i], n_words)
+            cov = st.coverage()
+            rows.append(
+                {
+                    "codec": cname,
+                    "check_bits": codec.n_check,
+                    "overhead": codec.overhead,
+                    "platform": p.name,
+                    "voltage": float(v),
+                    "words": st.words,
+                    "faulty_words": st.faulty_words,
+                    "faulty_bits": st.faulty_bits,
+                    "corrected": st.corrected,
+                    "detected": st.detected,
+                    "silent": st.silent,
+                    "coverage_correctable": cov["correctable"],
+                    "coverage_detectable": cov["detectable"],
+                    "coverage_silent": cov["silent"],
+                }
+            )
+    return rows
 
 
 # ---------------------------------------------------------------------------

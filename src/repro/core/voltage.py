@@ -179,24 +179,48 @@ def _erfinv(x: float) -> float:
     return math.copysign(math.sqrt(math.sqrt(t * t - ln1mx2 / a) - t), x)
 
 
-def multi_rail_bram_power(volts: dict, words_by_domain: dict, ecc: bool = True) -> float:
+def redundancy_factor(n_check: int) -> float:
+    """Array-size scale of an ECC scheme vs the paper's measured geometry.
+
+    The Table-I power anchors were measured on 72-bit BRAM words (64 data +
+    8 built-in check bits); a codec with ``n_check`` check bits stores
+    ``64 + n_check`` bits per word, so its array draws that bit-ratio of the
+    measured curve (dynamic and leakage both scale ~linearly with bitcells).
+    """
+    return (64 + int(n_check)) / 72.0
+
+
+def multi_rail_bram_power(
+    volts: dict, words_by_domain: dict, ecc: bool = True,
+    check_bits: dict | None = None,
+) -> float:
     """Total BRAM power (W) with each domain's rail at its own voltage.
 
     The paper's P(V) curve is for the whole tested memory; a domain holding a
     fraction of the arena's words draws that fraction of the curve at *its*
     rail. Domains absent from ``words_by_domain`` draw nothing.
+    ``check_bits`` (domain -> check bits per 64-bit word) folds each
+    domain's ECC redundancy into its draw — the cost side of the codec
+    escalation trade-off (DESIGN.md §12); omitted domains assume the
+    measured 8-bit SECDED geometry (factor 1).
     """
     total = max(sum(words_by_domain.values()), 1)
+    check_bits = check_bits or {}
     return sum(
-        (words_by_domain[d] / total) * bram_power(float(v), ecc=ecc)
+        (words_by_domain[d] / total)
+        * bram_power(float(v), ecc=ecc)
+        * redundancy_factor(check_bits.get(d, 8))
         for d, v in volts.items()
         if d in words_by_domain
     )
 
 
 def multi_rail_power_saving(
-    volts: dict, words_by_domain: dict, ecc: bool = True, v_nom: float = 1.0
+    volts: dict, words_by_domain: dict, ecc: bool = True, v_nom: float = 1.0,
+    check_bits: dict | None = None,
 ) -> float:
     """Fractional BRAM saving of a per-domain schedule vs the nominal rail."""
     p0 = bram_power(v_nom, ecc=False)
-    return 1.0 - multi_rail_bram_power(volts, words_by_domain, ecc=ecc) / p0
+    return 1.0 - multi_rail_bram_power(
+        volts, words_by_domain, ecc=ecc, check_bits=check_bits
+    ) / p0

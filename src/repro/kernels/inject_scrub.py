@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused undervolt fault injection + SECDED scrub.
+"""Pallas TPU kernel: fused undervolt fault injection + ECC scrub (any codec).
 
 The runtime undervolting loop used to pay two full HBM round-trips over every
 codeword plane per voltage step — one streaming XOR (``fault_inject``) and one
@@ -6,25 +6,33 @@ decode pass (``secded.decode_2d``) whose only consumed output was the per-word
 status — plus a third encode pass in the no-ECC baseline. This kernel does all
 of it in a single VMEM tile pass (DESIGN.md §9):
 
-  * XOR the flip masks into the (lo, hi, parity) planes and write them back
+  * XOR the flip masks into the (lo, hi, check) planes and write them back
     (the faulty-at-this-voltage view the serving read path consumes),
-  * optionally recompute parity over the faulty data (``reencode=True``, the
-    no-ECC baseline: the decoder becomes a syndrome-0 no-op),
-  * compute the SECDED syndrome and classify every word clean/corrected/
-    detected *in registers*, without materialising corrected planes,
-  * popcount the masks for the ground-truth flip distribution, and
+  * optionally recompute the check bits over the faulty data
+    (``reencode=True``, the no-ECC baseline: the decoder becomes a
+    syndrome-0 no-op),
+  * compute the syndrome and classify every word clean/corrected/detected
+    *in registers*, without materialising corrected planes, and
   * reduce the joint (ECC outcome x ground truth) histogram into a single
     (1, 128) int32 counter block accumulated across all grid steps — the only
     telemetry that ever crosses back to the host.
 
+One kernel body serves every registered code (DESIGN.md §12): the codec
+supplies ``encode_jnp`` / ``classify_jnp``. SEC-class codes resolve the
+syndrome gather-free (the historical SECDED chains, bit-identical); codecs
+that correct multi-bit patterns (``exact_tallies``) additionally materialise
+the correction in registers so the "corrected" lane counts *genuine*
+corrections (delivered data == clean data) rather than the single-flip
+approximation that is exact only for SEC codes.
+
 Counter layout (first ``N_COUNTERS`` lanes, rest zero) matches
 ``telemetry.COUNTER_FIELDS``:
   0 clean (status 0, zero flips)      4 words_1bit
-  1 corrected (status 1, one flip)    5 words_2bit
+  1 corrected (genuine)               5 words_2bit
   2 detected (DED)                    6 words_multi (>= 3 flips)
-  3 silent (>= 2 flips, no DED)       7 faulty_bits (total flips)
+  3 silent (faulty, no DED, not corrected)  7 faulty_bits (total flips)
 
-VMEM budget per grid step (default block 256x512): 6 input planes
+VMEM budget per grid step (default block 256x512, SECDED): 6 input planes
 (2x u32 + u8, twice) ~2.25 MiB + 3 output planes ~1.1 MiB + counters
 (negligible) ~= 3.4 MiB — comfortably inside a v5e core's 16 MiB.
 """
@@ -37,8 +45,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import hsiao
-from repro.kernels.secded import _compute_parity
+from repro import codes
 
 _U32 = jnp.uint32
 
@@ -54,7 +61,38 @@ def _popcount32(v):
     return ((v * _U32(0x01010101)) >> 24).astype(jnp.int32)
 
 
-def _inject_classify(lo, hi, par, mlo, mhi, mpar, reencode):
+def outcome_tallies(exact: bool, status, flips, genuine=None):
+    """Lanes 0..6 of the counter layout, from per-word ECC status and
+    ground-truth flip counts.
+
+    The single definition of the outcome predicates — the fused kernel and
+    the scheme-comparison sweep (core/sweep.py) both consume it, so the
+    nightly codec table can never silently diverge from the telemetry the
+    controller acts on. ``exact`` codecs (multi-bit correctors) supply
+    ``genuine``: the plane marking words whose correction restored the
+    clean data; SEC codes use the provably-equivalent
+    ``status==CORRECTED & flips==1`` predicate instead (any mis-correction
+    implies >= 2 flips and lands in the silent lane).
+    """
+    detected = status == 2
+    if exact:
+        corrected = genuine
+        silent = (flips >= 1) & ~detected & ~corrected
+    else:
+        corrected = (status == 1) & (flips == 1)
+        silent = (flips >= 2) & ~detected
+    return (
+        (status == 0) & (flips == 0),         # 0: true clean
+        corrected,                            # 1: genuinely corrected
+        detected,                             # 2: DED flag raised
+        silent,                               # 3: silent risk
+        flips == 1,                           # 4: ground-truth 1-bit words
+        flips == 2,                           # 5: ground-truth 2-bit words
+        flips >= 3,                           # 6: ground-truth multi-bit words
+    )
+
+
+def _inject_classify(codec, lo, hi, par, mlo, mhi, mpar, reencode, luts=()):
     """Shared tile body: XOR-inject, (re)encode, classify every word.
 
     Returns (flo, fhi, fpar, tallies, flips) where tallies are the seven
@@ -65,32 +103,24 @@ def _inject_classify(lo, hi, par, mlo, mhi, mpar, reencode):
     fhi = hi ^ mhi
     fpar = par ^ mpar
     if reencode:
-        # No-ECC baseline: parity is consistent with the faulty data, so the
-        # read-path decoder is a pass-through and faults flow into the matmul.
-        fpar = _compute_parity(flo, fhi).astype(jnp.uint8)
+        # No-ECC baseline: check bits are consistent with the faulty data, so
+        # the read-path decoder is a pass-through and faults flow into the
+        # matmul.
+        fpar = codec.encode_jnp(flo, fhi).astype(par.dtype)
 
-    # Scrub: syndrome + gather-free classification (same chains as decode_2d,
-    # minus the corrected-plane construction nobody reads here).
-    synd = _compute_parity(flo, fhi) ^ fpar.astype(_U32)
-    matched = jnp.zeros_like(flo, dtype=jnp.bool_)
-    for d in range(hsiao.N_DATA):
-        matched = matched | (synd == _U32(int(hsiao.DATA_COLS[d])))
-    for r in range(hsiao.N_PARITY):
-        matched = matched | (synd == _U32(1 << r))
-    clean = synd == _U32(0)
-    status = jnp.where(clean, jnp.int32(0), jnp.where(matched, jnp.int32(1), jnp.int32(2)))
-
+    # Scrub: syndrome + classification (the corrected planes are only
+    # materialised — in registers — when the codec needs them for exact
+    # genuine-correction accounting; nobody writes them back here).
+    synd = codec.encode_jnp(flo, fhi) ^ fpar.astype(_U32)
+    exact = codec.exact_tallies
+    flip_lo, flip_hi, _, status = codec.classify_jnp(synd, want_flips=exact, luts=luts)
     flips = _popcount32(mlo) + _popcount32(mhi) + _popcount32(mpar.astype(_U32))
-    detected = status == 2
-    tallies = (
-        clean & (flips == 0),                 # 0: true clean
-        (status == 1) & (flips == 1),         # 1: genuinely corrected singles
-        detected,                             # 2: DED flag raised
-        (flips >= 2) & ~detected,             # 3: silent risk
-        flips == 1,                           # 4: ground-truth 1-bit words
-        flips == 2,                           # 5: ground-truth 2-bit words
-        flips >= 3,                           # 6: ground-truth multi-bit words
+    # Genuine correction (exact codecs): the decoder's flip restores the
+    # clean data, i.e. equals the injected data-plane mask.
+    genuine = (
+        (status == 1) & (flip_lo == mlo) & (flip_hi == mhi) if exact else None
     )
+    tallies = outcome_tallies(exact, status, flips, genuine)
     return flo, fhi, fpar, tallies, flips
 
 
@@ -117,13 +147,14 @@ def _accumulate_counters(cnt_ref, vals):
         cnt_ref[...] = cnt_ref[...] + vals
 
 
-def _inject_scrub_kernel(
-    lo_ref, hi_ref, par_ref, mlo_ref, mhi_ref, mpar_ref,
-    olo_ref, ohi_ref, opar_ref, cnt_ref, *, reencode,
-):
+def _inject_scrub_kernel(*refs, codec, reencode, n_luts):
+    # refs: lo, hi, par, mlo, mhi, mpar, *lut_tables, olo, ohi, opar, cnt
+    (lo_ref, hi_ref, par_ref, mlo_ref, mhi_ref, mpar_ref) = refs[:6]
+    luts = tuple(r[...] for r in refs[6 : 6 + n_luts])
+    olo_ref, ohi_ref, opar_ref, cnt_ref = refs[6 + n_luts :]
     flo, fhi, fpar, tallies, flips = _inject_classify(
-        lo_ref[...], hi_ref[...], par_ref[...],
-        mlo_ref[...], mhi_ref[...], mpar_ref[...], reencode,
+        codec, lo_ref[...], hi_ref[...], par_ref[...],
+        mlo_ref[...], mhi_ref[...], mpar_ref[...], reencode, luts,
     )
     olo_ref[...] = flo
     ohi_ref[...] = fhi
@@ -131,20 +162,21 @@ def _inject_scrub_kernel(
     _accumulate_counters(cnt_ref, _counter_row(tallies, flips))
 
 
-def _inject_scrub_domains_kernel(
-    lo_ref, hi_ref, par_ref, mlo_ref, mhi_ref, mpar_ref, dom_ref,
-    olo_ref, ohi_ref, opar_ref, cnt_ref, *, reencode, n_rows,
-):
+def _inject_scrub_domains_kernel(*refs, codec, reencode, n_rows, n_luts):
     """Multi-rail variant: one counter row per memory domain.
 
-    ``dom_ref`` holds the per-word domain index (int32); row ``n_rows - 1``
-    is the zero-pad spill row the wrapper drops. Domains are few (<= 8), so
-    the per-domain masked reductions stay register-resident like the global
-    ones.
+    The domain plane holds the per-word domain index (int32); row
+    ``n_rows - 1`` is the zero-pad spill row the wrapper drops. Domains are
+    few (<= 8), so the per-domain masked reductions stay register-resident
+    like the global ones.
     """
+    # refs: lo, hi, par, mlo, mhi, mpar, dom, *lut_tables, olo, ohi, opar, cnt
+    (lo_ref, hi_ref, par_ref, mlo_ref, mhi_ref, mpar_ref, dom_ref) = refs[:7]
+    luts = tuple(r[...] for r in refs[7 : 7 + n_luts])
+    olo_ref, ohi_ref, opar_ref, cnt_ref = refs[7 + n_luts :]
     flo, fhi, fpar, tallies, flips = _inject_classify(
-        lo_ref[...], hi_ref[...], par_ref[...],
-        mlo_ref[...], mhi_ref[...], mpar_ref[...], reencode,
+        codec, lo_ref[...], hi_ref[...], par_ref[...],
+        mlo_ref[...], mhi_ref[...], mpar_ref[...], reencode, luts,
     )
     olo_ref[...] = flo
     ohi_ref[...] = fhi
@@ -156,65 +188,84 @@ def _inject_scrub_domains_kernel(
     _accumulate_counters(cnt_ref, vals)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "reencode", "interpret"))
+def _lut_specs(codec):
+    """Full-array BlockSpecs + jnp tensors for the codec's dense LUT inputs."""
+    arrays = [jnp.asarray(t) for t in codec.lut_input_arrays()]
+    # n=a.ndim binds the rank eagerly — a bare closure over the loop variable
+    # would give every index map the *last* array's rank.
+    specs = [
+        pl.BlockSpec(a.shape, lambda i, j, n=a.ndim: (0,) * n) for a in arrays
+    ]
+    return specs, arrays
+
+
+@functools.partial(jax.jit, static_argnames=("block", "codec", "reencode", "interpret"))
 def inject_scrub_2d(
-    lo, hi, parity, mlo, mhi, mparity, *, block=(256, 512), reencode=False,
-    interpret=False,
+    lo, hi, parity, mlo, mhi, mparity, *, block=(256, 512), codec="secded72",
+    reencode=False, interpret=False,
 ):
     """Fused inject + scrub on 2D word planes.
 
-    All planes (R, C). Returns (faulty_lo, faulty_hi, faulty_parity,
-    counters (1, _CNT_LANES) int32) with counters accumulated over the grid.
+    All planes (R, C); the check planes carry the codec's check dtype.
+    Returns (faulty_lo, faulty_hi, faulty_check, counters (1, _CNT_LANES)
+    int32) with counters accumulated over the grid.
     """
+    c = codes.get(codec)
     bm, bn = block
     grid = (pl.cdiv(lo.shape[0], bm), pl.cdiv(lo.shape[1], bn))
     spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     cnt_spec = pl.BlockSpec((1, _CNT_LANES), lambda i, j: (0, 0))
+    lut_specs, lut_arrays = _lut_specs(c)
     return pl.pallas_call(
-        functools.partial(_inject_scrub_kernel, reencode=reencode),
+        functools.partial(
+            _inject_scrub_kernel, codec=c, reencode=reencode, n_luts=len(lut_arrays)
+        ),
         grid=grid,
-        in_specs=[spec] * 6,
+        in_specs=[spec] * 6 + lut_specs,
         out_specs=[spec, spec, spec, cnt_spec],
         out_shape=(
             jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
             jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
-            jax.ShapeDtypeStruct(lo.shape, jnp.uint8),
+            jax.ShapeDtypeStruct(lo.shape, jnp.dtype(c.check_dtype)),
             jax.ShapeDtypeStruct((1, _CNT_LANES), jnp.int32),
         ),
         interpret=interpret,
-    )(lo, hi, parity, mlo, mhi, mparity)
+    )(lo, hi, parity, mlo, mhi, mparity, *lut_arrays)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_domains", "block", "reencode", "interpret")
+    jax.jit, static_argnames=("n_domains", "block", "codec", "reencode", "interpret")
 )
 def inject_scrub_domains_2d(
     lo, hi, parity, mlo, mhi, mparity, dom, *, n_domains,
-    block=(256, 512), reencode=False, interpret=False,
+    block=(256, 512), codec="secded72", reencode=False, interpret=False,
 ):
     """Fused inject + scrub with per-domain counter rows.
 
     ``dom`` is an int32 plane of domain indices in [0, n_domains]; index
     ``n_domains`` is the pad/spill row. Returns (faulty_lo, faulty_hi,
-    faulty_parity, counters (n_domains + 1, _CNT_LANES) int32).
+    faulty_check, counters (n_domains + 1, _CNT_LANES) int32).
     """
+    c = codes.get(codec)
     n_rows = n_domains + 1
     bm, bn = block
     grid = (pl.cdiv(lo.shape[0], bm), pl.cdiv(lo.shape[1], bn))
     spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     cnt_spec = pl.BlockSpec((n_rows, _CNT_LANES), lambda i, j: (0, 0))
+    lut_specs, lut_arrays = _lut_specs(c)
     return pl.pallas_call(
         functools.partial(
-            _inject_scrub_domains_kernel, reencode=reencode, n_rows=n_rows
+            _inject_scrub_domains_kernel, codec=c, reencode=reencode,
+            n_rows=n_rows, n_luts=len(lut_arrays),
         ),
         grid=grid,
-        in_specs=[spec] * 7,
+        in_specs=[spec] * 7 + lut_specs,
         out_specs=[spec, spec, spec, cnt_spec],
         out_shape=(
             jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
             jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
-            jax.ShapeDtypeStruct(lo.shape, jnp.uint8),
+            jax.ShapeDtypeStruct(lo.shape, jnp.dtype(c.check_dtype)),
             jax.ShapeDtypeStruct((n_rows, _CNT_LANES), jnp.int32),
         ),
         interpret=interpret,
-    )(lo, hi, parity, mlo, mhi, mparity, dom)
+    )(lo, hi, parity, mlo, mhi, mparity, dom, *lut_arrays)

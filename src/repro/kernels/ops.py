@@ -73,21 +73,24 @@ def _to_2d(*planes, lanes=LANES, block_rows=256):
     return out, n, (bm, lanes)
 
 
-def encode(lo: jnp.ndarray, hi: jnp.ndarray, *, interpret: bool | None = None):
-    """SECDED parity for word planes of any shape; returns uint8 like lo."""
+def encode(lo: jnp.ndarray, hi: jnp.ndarray, *, codec: str = "secded72",
+           interpret: bool | None = None):
+    """ECC check plane for word planes of any shape (codec's check dtype)."""
     interpret = use_interpret() if interpret is None else interpret
     _count_launch()
     (lo2, hi2), n, block = _to_2d(lo, hi)
-    par = _secded.encode_2d(lo2, hi2, block=block, interpret=interpret)
+    par = _secded.encode_2d(lo2, hi2, block=block, codec=codec, interpret=interpret)
     return par.reshape(-1)[:n].reshape(lo.shape)
 
 
-def decode(lo, hi, parity, *, interpret: bool | None = None):
-    """SECDED decode for planes of any shape -> (lo', hi', status int32)."""
+def decode(lo, hi, parity, *, codec: str = "secded72", interpret: bool | None = None):
+    """ECC decode for planes of any shape -> (lo', hi', status int32)."""
     interpret = use_interpret() if interpret is None else interpret
     _count_launch()
     (lo2, hi2, par2), n, block = _to_2d(lo, hi, parity)
-    olo, ohi, st = _secded.decode_2d(lo2, hi2, par2, block=block, interpret=interpret)
+    olo, ohi, st = _secded.decode_2d(
+        lo2, hi2, par2, block=block, codec=codec, interpret=interpret
+    )
     unpad = lambda a: a.reshape(-1)[:n].reshape(lo.shape)
     return unpad(olo), unpad(ohi), unpad(st)
 
@@ -103,8 +106,8 @@ def inject(lo, hi, parity, mlo, mhi, mparity, *, interpret: bool | None = None):
 
 
 def inject_scrub(
-    lo, hi, parity, mlo, mhi, mparity, *, reencode: bool = False,
-    interpret: bool | None = None,
+    lo, hi, parity, mlo, mhi, mparity, *, codec: str = "secded72",
+    reencode: bool = False, interpret: bool | None = None,
 ):
     """Fused inject + scrub: one pass over the planes instead of two (three
     with the no-ECC re-encode).
@@ -118,7 +121,8 @@ def inject_scrub(
     _count_launch()
     (a, b, c, d, e, f), n, block = _to_2d(lo, hi, parity, mlo, mhi, mparity)
     olo, ohi, opar, cnt = _isc.inject_scrub_2d(
-        a, b, c, d, e, f, block=block, reencode=reencode, interpret=interpret
+        a, b, c, d, e, f, block=block, codec=codec, reencode=reencode,
+        interpret=interpret,
     )
     counters = cnt.reshape(-1)[: _isc.N_COUNTERS].at[0].add(n - a.size)
     unpad = lambda x: x.reshape(-1)[:n].reshape(lo.shape)
@@ -127,7 +131,7 @@ def inject_scrub(
 
 def inject_scrub_domains(
     lo, hi, parity, mlo, mhi, mparity, domain_ids, n_domains: int, *,
-    reencode: bool = False, interpret: bool | None = None,
+    codec: str = "secded72", reencode: bool = False, interpret: bool | None = None,
 ):
     """Fused inject + scrub with one counter row per memory domain.
 
@@ -150,7 +154,7 @@ def inject_scrub_domains(
     dom2 = flat_dom.reshape(a.shape)
     olo, ohi, opar, cnt = _isc.inject_scrub_domains_2d(
         a, b, c, d, e, f, dom2, n_domains=n_domains, block=block,
-        reencode=reencode, interpret=interpret,
+        codec=codec, reencode=reencode, interpret=interpret,
     )
     counters = cnt[:n_domains, : _isc.N_COUNTERS]
     unpad = lambda x: x.reshape(-1)[:n].reshape(lo.shape)

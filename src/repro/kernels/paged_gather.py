@@ -1,7 +1,7 @@
 """Pallas kernel: paged KV-cache gather with scrub-on-read (DESIGN.md §11).
 
 The paged serving path stores the *dynamic* model state — the KV cache — in
-SECDED-encoded pages carved out of the `kv` voltage domain (core/kvpages.py).
+ECC-encoded pages carved out of the `kv` voltage domain (core/kvpages.py).
 Every read of a page must travel through the ECC decoder so undervolting
 faults in the cache are corrected before they reach attention, and so the
 per-page DED counters exist to feed the `kv` rail's canary controller.
@@ -9,11 +9,13 @@ per-page DED counters exist to feed the `kv` rail's canary controller.
 This kernel is the read path: given the already-gathered (n_pages, W) word
 planes of the pages one batch of requests needs, it
 
-  * recomputes the SECDED syndrome per 72-bit codeword (same gather-free
-    Hsiao chains as `kernels/secded.py`),
-  * corrects single-bit faults in registers and writes the *corrected*
+  * recomputes the syndrome per codeword with the page arena's codec
+    (DESIGN.md §12 — the same single kernel body serves every registered
+    code; SEC-class codes resolve the syndrome gather-free, DEC-TED gathers
+    from its dense LUT),
+  * corrects correctable faults in registers and writes the *corrected*
     planes out (the scrub write-back the arena commits, so a corrected fault
-    does not accumulate into a double fault at the next rail step), and
+    does not accumulate into an uncorrectable one at the next rail step), and
   * reduces one (clean, corrected, detected) counter row **per page** — the
     per-page telemetry that is attributed to the request that owns the page
     and aggregated into the `kv` domain's DomainFaultStats row.
@@ -37,47 +39,38 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import hsiao
-from repro.kernels.secded import _compute_parity
+from repro import codes
+from repro.kernels.inject_scrub import _lut_specs
 
 _U32 = jnp.uint32
 
 _CNT_LANES = 128  # lane-aligned counter row (lanes 0..2 used)
 
 
-def _gather_scrub_kernel(lo_ref, hi_ref, par_ref, olo_ref, ohi_ref, opar_ref, cnt_ref):
+def _gather_scrub_kernel(*refs, codec, n_luts):
+    # refs: lo, hi, par, *lut_tables, olo, ohi, opar, cnt
+    lo_ref, hi_ref, par_ref = refs[:3]
+    luts = tuple(r[...] for r in refs[3 : 3 + n_luts])
+    olo_ref, ohi_ref, opar_ref, cnt_ref = refs[3 + n_luts :]
     lo = lo_ref[...]
     hi = hi_ref[...]
-    stored = par_ref[...].astype(_U32)
-    synd = _compute_parity(lo, hi) ^ stored
+    stored = par_ref[...]
+    synd = codec.encode_jnp(lo, hi) ^ stored.astype(_U32)
+    flip_lo, flip_hi, _, status = codec.classify_jnp(synd, luts=luts)
 
-    flip_lo = jnp.zeros_like(lo)
-    flip_hi = jnp.zeros_like(hi)
-    matched = jnp.zeros_like(lo, dtype=jnp.bool_)
-    for d in range(hsiao.N_DATA):
-        col = _U32(int(hsiao.DATA_COLS[d]))
-        m = synd == col
-        matched = matched | m
-        if d < 32:
-            flip_lo = jnp.where(m, flip_lo | _U32(1 << d), flip_lo)
-        else:
-            flip_hi = jnp.where(m, flip_hi | _U32(1 << (d - 32)), flip_hi)
-    for r in range(hsiao.N_PARITY):
-        matched = matched | (synd == _U32(1 << r))  # parity-bit error: data fine
-
-    clean = synd == _U32(0)
-    corrected = matched & ~clean
-    detected = ~clean & ~matched
+    clean = status == 0
+    corrected = status == 1
+    detected = status == 2
     olo = lo ^ flip_lo
     ohi = hi ^ flip_hi
     olo_ref[...] = olo
     ohi_ref[...] = ohi
-    # Scrub write-back parity: recompute over the corrected data so a
-    # corrected parity-bit fault is cleared too; *detected* words keep their
-    # stored parity so the DED flag stays latched on re-reads (the data is
-    # wrong and must keep flagging, exactly like the hardware).
+    # Scrub write-back check bits: recompute over the corrected data so a
+    # corrected check-bit fault is cleared too; *detected* words keep their
+    # stored check bits so the DED flag stays latched on re-reads (the data
+    # is wrong and must keep flagging, exactly like the hardware).
     opar_ref[...] = jnp.where(
-        detected, par_ref[...], _compute_parity(olo, ohi).astype(jnp.uint8)
+        detected, stored, codec.encode_jnp(olo, ohi).astype(stored.dtype)
     )
 
     lane = jax.lax.broadcasted_iota(jnp.int32, (lo.shape[0], _CNT_LANES), 1)
@@ -99,44 +92,51 @@ def _gather_scrub_kernel(lo_ref, hi_ref, par_ref, olo_ref, ohi_ref, opar_ref, cn
 
 
 @functools.partial(
-    jax.jit, static_argnames=("page_block", "block_cols", "interpret")
+    jax.jit, static_argnames=("page_block", "block_cols", "codec", "interpret")
 )
-def gather_scrub_2d(lo, hi, parity, *, page_block=16, block_cols=4096, interpret=False):
+def gather_scrub_2d(
+    lo, hi, parity, *, page_block=16, block_cols=4096, codec="secded72",
+    interpret=False,
+):
     """Scrub a stack of gathered pages.
 
-    lo/hi: (P, W) uint32, parity: (P, W) uint8; P a multiple of
-    ``page_block``, W a multiple of 128. Returns (corrected_lo, corrected_hi,
-    parity, counters (P, 128) int32) where counters[i, 0:3] =
+    lo/hi: (P, W) uint32, parity: (P, W) in the codec's check dtype; P a
+    multiple of ``page_block``, W a multiple of 128. Returns (corrected_lo,
+    corrected_hi, parity, counters (P, 128) int32) where counters[i, 0:3] =
     (clean, corrected, detected) for page i.
     """
+    c = codes.get(codec)
     p_rows, w = lo.shape
     bp = min(page_block, p_rows)
     bn = min(block_cols, w)
     grid = (pl.cdiv(p_rows, bp), pl.cdiv(w, bn))
     spec = pl.BlockSpec((bp, bn), lambda i, j: (i, j))
     cnt_spec = pl.BlockSpec((bp, _CNT_LANES), lambda i, j: (i, 0))
+    lut_specs, lut_arrays = _lut_specs(c)
     return pl.pallas_call(
-        _gather_scrub_kernel,
+        functools.partial(_gather_scrub_kernel, codec=c, n_luts=len(lut_arrays)),
         grid=grid,
-        in_specs=[spec] * 3,
+        in_specs=[spec] * 3 + lut_specs,
         out_specs=[spec, spec, spec, cnt_spec],
         out_shape=(
             jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
             jax.ShapeDtypeStruct(lo.shape, jnp.uint32),
-            jax.ShapeDtypeStruct(lo.shape, jnp.uint8),
+            jax.ShapeDtypeStruct(lo.shape, jnp.dtype(c.check_dtype)),
             jax.ShapeDtypeStruct((p_rows, _CNT_LANES), jnp.int32),
         ),
         interpret=interpret,
-    )(lo, hi, parity)
+    )(lo, hi, parity, *lut_arrays)
 
 
-def gather_scrub_pages(lo, hi, parity, *, interpret: bool | None = None):
+def gather_scrub_pages(lo, hi, parity, *, codec="secded72", interpret: bool | None = None):
     """Shape-tolerant wrapper: pads P/W to block multiples, trims the result.
 
     lo/hi: (P, W) uint32 planes of P gathered pages (any P, W >= 1); parity
-    (P, W) uint8. Returns (lo', hi', parity', counters (P, 8) int32) with
-    counters[:, 0:3] = per-page (clean, corrected, detected); pad words and
-    pad pages decode clean and are trimmed/subtracted.
+    (P, W) in the codec's check dtype. Returns (lo', hi', parity', counters
+    (P, 8) int32) with counters[:, 0:3] = per-page (clean, corrected,
+    detected); pad words and pad pages decode clean (all-zero planes are a
+    valid codeword of every registered linear code) and are
+    trimmed/subtracted.
     """
     from repro.kernels import ops as kops
 
@@ -148,9 +148,10 @@ def gather_scrub_pages(lo, hi, parity, *, interpret: bool | None = None):
     pad_p = (-p_rows) % bp
     if pad_w or pad_p:
         zp = lambda a, dt: jnp.pad(a, ((0, pad_p), (0, pad_w))).astype(dt)
-        lo, hi, parity = zp(lo, jnp.uint32), zp(hi, jnp.uint32), zp(parity, jnp.uint8)
+        lo, hi = zp(lo, jnp.uint32), zp(hi, jnp.uint32)
+        parity = zp(parity, parity.dtype)
     olo, ohi, opar, cnt = gather_scrub_2d(
-        lo, hi, parity, page_block=bp, interpret=interpret
+        lo, hi, parity, page_block=bp, codec=codec, interpret=interpret
     )
     cnt = cnt[:p_rows, :8]
     if pad_p or pad_w:

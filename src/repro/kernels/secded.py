@@ -1,12 +1,16 @@
-"""Pallas TPU kernels: SECDED(72,64) encode and decode.
+"""Pallas TPU kernels: codec-generic encode and decode (default SECDED(72,64)).
 
 Layout: word planes are 2D (rows, cols) with cols a multiple of 128 (lane
 dimension); `ops.py` handles flattening/padding of arbitrary shapes. All bit
-manipulation happens in uint32 VPU lanes; the syndrome->flip mapping is
-gather-free (72 unrolled compares against the Hsiao column constants), so the
-kernel lowers to pure vector compare/select chains on TPU.
+manipulation happens in uint32 VPU lanes. One kernel body serves every
+registered code (repro.codes): the codec supplies the check-bit recompute
+(`encode_jnp`) and the syndrome->action resolution (`classify_jnp`). For the
+SEC-class codes the resolution is gather-free (unrolled compares against the
+code's columns, so the kernel lowers to pure vector compare/select chains on
+TPU — bit-identical to the historical hard-coded Hsiao kernels); the DEC-TED
+code gathers from its dense syndrome LUT instead.
 
-VMEM budget per grid step (default block 256x512):
+VMEM budget per grid step (default block 256x512, SECDED):
   encode: lo+hi in (1 MiB) + parity out (128 KiB)            ~1.2 MiB
   decode: lo+hi+par in (1.2 MiB) + lo+hi+status out (1.5 MiB) ~2.7 MiB
 """
@@ -19,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import hsiao
+from repro import codes
 
 _U32 = jnp.uint32
 
@@ -34,49 +38,31 @@ def _parity32(v):
 
 
 def _compute_parity(lo, hi):
-    """Recompute the 8 check bits; returns uint32 plane with parity in [0,256)."""
-    p = jnp.zeros_like(lo)
-    for r in range(hsiao.N_PARITY):
-        mlo = _U32(int(hsiao.MASK_LO[r]))
-        mhi = _U32(int(hsiao.MASK_HI[r]))
-        # parity(a) ^ parity(b) == parity(a ^ b): one fold per check bit.
-        bit = _parity32((lo & mlo) ^ (hi & mhi))
-        p = p | (bit << r)
-    return p
+    """Recompute the Hsiao(72,64) check bits; returns uint32 plane in [0,256).
+
+    Kept as the historical name — this is exactly the SECDED codec's
+    ``encode_jnp`` and remains the hot path for the default code.
+    """
+    return codes.get("secded72").encode_jnp(lo, hi)
 
 
-def _encode_kernel(lo_ref, hi_ref, par_ref):
-    par_ref[...] = _compute_parity(lo_ref[...], hi_ref[...]).astype(jnp.uint8)
+def _encode_kernel(lo_ref, hi_ref, par_ref, *, codec):
+    par_ref[...] = codec.encode_jnp(lo_ref[...], hi_ref[...]).astype(par_ref.dtype)
 
 
-def _decode_kernel(lo_ref, hi_ref, par_ref, out_lo_ref, out_hi_ref, status_ref):
+def _decode_kernel(*refs, codec, n_luts):
+    # refs: lo, hi, par, *lut_tables, out_lo, out_hi, status
+    lo_ref, hi_ref, par_ref = refs[:3]
+    luts = tuple(r[...] for r in refs[3 : 3 + n_luts])
+    out_lo_ref, out_hi_ref, status_ref = refs[3 + n_luts :]
     lo = lo_ref[...]
     hi = hi_ref[...]
-    stored = par_ref[...].astype(_U32)
-    synd = _compute_parity(lo, hi) ^ stored
-
-    # Gather-free syndrome resolution: compare against all 72 Hsiao columns.
-    flip_lo = jnp.zeros_like(lo)
-    flip_hi = jnp.zeros_like(hi)
-    matched = jnp.zeros_like(lo, dtype=jnp.bool_)
-    for d in range(hsiao.N_DATA):
-        col = _U32(int(hsiao.DATA_COLS[d]))
-        m = synd == col
-        matched = matched | m
-        if d < 32:
-            flip_lo = jnp.where(m, flip_lo | _U32(1 << d), flip_lo)
-        else:
-            flip_hi = jnp.where(m, flip_hi | _U32(1 << (d - 32)), flip_hi)
-    for r in range(hsiao.N_PARITY):
-        matched = matched | (synd == _U32(1 << r))  # parity-bit error: data fine
-
-    clean = synd == _U32(0)
+    synd = codec.encode_jnp(lo, hi) ^ par_ref[...].astype(_U32)
+    flip_lo, flip_hi, _, status = codec.classify_jnp(synd, luts=luts)
     out_lo_ref[...] = lo ^ flip_lo
     out_hi_ref[...] = hi ^ flip_hi
     # status: 0 clean, 1 corrected, 2 detected (uncorrectable)
-    status_ref[...] = jnp.where(
-        clean, jnp.int32(0), jnp.where(matched, jnp.int32(1), jnp.int32(2))
-    )
+    status_ref[...] = status
 
 
 def _grid_spec(shape, block, n_in, n_out):
@@ -86,26 +72,33 @@ def _grid_spec(shape, block, n_in, n_out):
     return grid, [spec] * n_in, [spec] * n_out if n_out > 1 else spec
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def encode_2d(lo, hi, *, block=(256, 512), interpret=False):
-    """Parity plane for 2D word planes. lo/hi: (R, C) uint32 -> (R, C) uint8."""
+@functools.partial(jax.jit, static_argnames=("block", "codec", "interpret"))
+def encode_2d(lo, hi, *, block=(256, 512), codec="secded72", interpret=False):
+    """Check plane for 2D word planes. lo/hi: (R, C) uint32 -> (R, C) of the
+    codec's check dtype (uint8 up to 8 check bits, uint32 beyond)."""
+    c = codes.get(codec)
     grid, in_specs, out_spec = _grid_spec(lo.shape, block, 2, 1)
     return pl.pallas_call(
-        _encode_kernel,
+        functools.partial(_encode_kernel, codec=c),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct(lo.shape, jnp.uint8),
+        out_shape=jax.ShapeDtypeStruct(lo.shape, jnp.dtype(c.check_dtype)),
         interpret=interpret,
     )(lo, hi)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def decode_2d(lo, hi, parity, *, block=(256, 512), interpret=False):
-    """SECDED decode of 2D planes -> (lo', hi', status int32)."""
+@functools.partial(jax.jit, static_argnames=("block", "codec", "interpret"))
+def decode_2d(lo, hi, parity, *, block=(256, 512), codec="secded72", interpret=False):
+    """Codec decode of 2D planes -> (lo', hi', status int32)."""
+    from repro.kernels.inject_scrub import _lut_specs
+
+    c = codes.get(codec)
     grid, in_specs, out_specs = _grid_spec(lo.shape, block, 3, 3)
+    lut_specs, lut_arrays = _lut_specs(c)
+    in_specs = in_specs + lut_specs
     return pl.pallas_call(
-        _decode_kernel,
+        functools.partial(_decode_kernel, codec=c, n_luts=len(lut_arrays)),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
@@ -115,4 +108,4 @@ def decode_2d(lo, hi, parity, *, block=(256, 512), interpret=False):
             jax.ShapeDtypeStruct(lo.shape, jnp.int32),
         ),
         interpret=interpret,
-    )(lo, hi, parity)
+    )(lo, hi, parity, *lut_arrays)

@@ -26,7 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import shapes
-from repro.core import MultiRailController, UndervoltController, voltage as vmod
+from repro.core import (
+    EscalationPolicy,
+    MultiRailController,
+    UndervoltController,
+    voltage as vmod,
+)
 from repro.core.faultsim import FaultField
 from repro.core.kvpages import PAGE_TOKENS, KVGeometry, KVPageArena
 from repro.core.memory import EccMemoryDomain
@@ -71,23 +76,48 @@ class ReliabilityConfig:
     # guardband [v_min, v_nom] is fault-free by definition, so starting at
     # its edge saves ~40 no-op rounds without changing the lock point
     controller_start_v: float | None = None
+    # Per-domain ECC scheme selection (DESIGN.md §12): a registered codec
+    # name for every domain, or a {domain: name} mapping (unnamed domains
+    # keep the built-in secded72). Dict form implies multi_rail.
+    codecs: Any = None
+    # Optional DED-canary escalation ladder (multi-rail only): an
+    # EscalationPolicy, or a tuple of codec names weakest -> strongest. On a
+    # DED trip a rail steps up its code instead of retreating (see
+    # core/controller.py); the redundancy cost lands in power_report.
+    escalation: Any = None
 
     @property
     def embed_protected(self) -> bool:
         return self.multi_rail if self.protect_embed is None else self.protect_embed
 
+    @property
+    def escalation_policy(self) -> EscalationPolicy | None:
+        if self.escalation is None:
+            return None
+        if isinstance(self.escalation, EscalationPolicy):
+            return self.escalation
+        return EscalationPolicy(ladder=tuple(self.escalation))
 
-def _decode_gather_table(ew: kops.EccWeight) -> jnp.ndarray:
-    """SECDED-read an EccWeight back to a dequantized float (K, N) table.
+
+def _decode_gather_table(ew: kops.EccWeight, codec: str = "secded72") -> jnp.ndarray:
+    """ECC-read an EccWeight back to a dequantized float (K, N) table.
 
     Gather-read tables (the embedding) cannot go through the fused
     decode-matmul kernel; their ECC read happens when the rail moves, exactly
     like domain mode's refresh — at nominal voltage this is the identity on
-    the quantized values.
+    the quantized values. Weight leaves protected by a non-SECDED codec take
+    the same path: the fused matmul kernel reads Hsiao planes only, so
+    stronger codes pay a decode-at-refresh materialisation instead
+    (DESIGN.md §12).
     """
     from repro.kernels import ref as kref
 
-    lo, hi, _ = kops.decode(ew.lo, ew.hi, ew.parity)
+    lo, hi, _ = kops.decode(ew.lo, ew.hi, ew.parity, codec=codec)
+    if lo.ndim == 3:  # layer-stacked (G, K/8, N): unpack per group
+        w_i8 = jnp.stack(
+            [kref.unpack_ecc_weights(lo[g], hi[g]) for g in range(lo.shape[0])]
+        )
+        return w_i8.astype(jnp.float32) * ew.scale[:, None, :]
     w_i8 = kref.unpack_ecc_weights(lo, hi)
     return w_i8.astype(jnp.float32) * ew.scale
 
@@ -171,6 +201,10 @@ class ServingEngine:
             self.params = params
             self.domain = None
         elif rel.mode == "domain":
+            assert rel.codecs in (None, "secded72"), (
+                "domain mode stores raw bits behind the built-in SECDED; "
+                "codec selection needs mode='inline'"
+            )
             self.domain = EccMemoryDomain(
                 rel.platform, seed=rel.seed, ecc_enabled=rel.ecc,
                 voltage=rel.voltage or 1.0,
@@ -181,6 +215,10 @@ class ServingEngine:
         else:  # inline
             assert not rel.multi_rail or rel.batched, (
                 "multi_rail drives the batched plane arena"
+            )
+            assert rel.batched or rel.codecs in (None, "secded72"), (
+                "the per-leaf reference path is SECDED-only; codec selection "
+                "needs the batched arena"
             )
             self.domain = None
             self.params, self._plane_sizes = protect_params_inline(
@@ -209,6 +247,13 @@ class ServingEngine:
                 if rel.multi_rail and rel.rail_spread > 0
                 else None
             )
+            if rel.multi_rail:
+                store_codecs = shapes.domain_codecs(rel.codecs)
+            else:
+                assert rel.codecs is None or isinstance(rel.codecs, str), (
+                    "per-domain codec dicts need multi_rail=True"
+                )
+                store_codecs = rel.codecs
             self._store = PlaneStore(
                 [self._inline_template[i] for i, _ in self._ecc_slots],
                 [key for _, key in self._ecc_slots],
@@ -217,6 +262,7 @@ class ServingEngine:
                 mask_source=rel.mask_source,
                 domain_key=shapes.domain_of if rel.multi_rail else None,
                 profiles=rail_profiles,
+                codecs=store_codecs,
             )
             self.voltage = rel.voltage or self.platform.v_nom
             if rel.multi_rail:
@@ -229,6 +275,10 @@ class ServingEngine:
                     profiles={
                         d: self._store.domain_profile(d)
                         for d in self._store.domains
+                    },
+                    escalation=rel.escalation_policy,
+                    codecs={
+                        d: self._store.codec_of(d) for d in self._store.domains
                     },
                 )
                 self.set_rails({d: self.voltage for d in self._store.domains})
@@ -281,13 +331,26 @@ class ServingEngine:
         self.stats.accumulate(dstats.total())
         self._last_scrub = dstats
 
+    def _leaf_codec(self, key: str) -> str:
+        if self.rel.multi_rail:
+            return self._store.codec_of(shapes.domain_of(key))
+        slots = self._store.slots
+        return self._store.codec_of(slots[0].domain) if slots else "secded72"
+
     def _reassemble_params(self, leaves):
         """Put faulty arena slices back into the param tree; embedding-like
         tables (read by gather, not matmul) are materialised through the ECC
-        decode at refresh time — the fused read path only covers matmuls."""
+        decode at refresh time — the fused read path only covers matmuls.
+        Leaves protected by a non-SECDED codec take the same decode-at-
+        refresh path: the fused decode-matmul kernel reads Hsiao planes
+        only (DESIGN.md §12)."""
         flat = list(self._inline_template)
         for (i, key), leaf in zip(self._ecc_slots, leaves):
-            flat[i] = _decode_gather_table(leaf) if "embed" in key else leaf
+            codec = self._leaf_codec(key)
+            if "embed" in key or codec != "secded72":
+                flat[i] = _decode_gather_table(leaf, codec=codec)
+            else:
+                flat[i] = leaf
         return jax.tree_util.tree_unflatten(self._inline_treedef, flat)
 
     def _apply_inline_faults_batched(self, v: float):
@@ -395,12 +458,26 @@ class ServingEngine:
         geom = KVGeometry.from_config(self.cfg, page_tokens)
         if n_pages is None:
             n_pages = n_lanes * geom.pages_for(self.max_len)
+        kv_codec = (
+            shapes.domain_codecs(self.rel.codecs)["kv"]
+            if self.rel is not None
+            else shapes.DEFAULT_CODEC
+        )
+        if walk_kv and self.controller is not None:
+            rail = getattr(self.controller, "rails", {}).get("kv")
+            if rail is not None:
+                # A previous serve's escalation persists: the rail learned
+                # this domain needs the stronger code, so the fresh arena is
+                # protected under it — controller state and applied
+                # protection must never diverge (DESIGN.md §12).
+                kv_codec = rail.codec
         arena = KVPageArena(
             geom,
             profile,
             n_pages,
             seed=self.rel.seed if self.rel else 0,
             ecc=self.rel.ecc if self.rel else True,
+            codec=kv_codec,
         )
         if kv_voltage is None:
             if self.rails is not None and "kv" in self.rails:
@@ -416,14 +493,14 @@ class ServingEngine:
             assert self.rel is not None and self.rel.multi_rail, (
                 "walk_kv needs a multi-rail engine"
             )
-            kv_controller = self.controller.add_rail("kv", profile)
+            kv_controller = self.controller.add_rail("kv", profile, codec=kv_codec)
             # The controller is the source of truth for the walked rail: the
             # arena must inject interval-1 faults at the voltage the canary
             # believes it is judging, or the first-DED decision is made on
             # telemetry from a different operating point. (An explicit
             # kv_voltage only pins the rail when it is not being walked.)
             arena.set_voltage(kv_controller.voltage)
-        helpers = self._paged_helpers(geom)
+        helpers = self._paged_helpers(geom, kv_codec)
         report = sched.serve_stream(
             self.params,
             self.cfg,
@@ -435,25 +512,30 @@ class ServingEngine:
             scrub_interval=scrub_interval,
             max_block=max_block,
             kv_controller=kv_controller,
+            helpers_factory=lambda cname: self._paged_helpers(geom, cname),
         )
         # Fold the cache telemetry + storage into the engine's books: the kv
         # domain now has real words (power weighting) and real counters.
         self.stats.accumulate(report.kv_stats)
         self.rail_stats.accumulate(DomainFaultStats({"kv": report.kv_stats}))
         if self.rel is not None and self.rel.mode == "inline":
-            self._store.register_domain_words("kv", arena.n_words)
+            self._store.register_domain_words(
+                "kv", arena.n_words, codec=arena.codec_name
+            )
         if self.rails is not None:
             self.rails["kv"] = arena.voltage
         self.kv_arena = arena
         return report
 
-    def _paged_helpers(self, geom: KVGeometry) -> dict:
+    def _paged_helpers(self, geom: KVGeometry, codec: str = "secded72") -> dict:
         cache = getattr(self, "_paged_helper_cache", None)
         if cache is None:
             cache = self._paged_helper_cache = {}
-        if geom not in cache:
-            cache[geom] = serve_steps.make_paged_helpers(self.cfg, geom)
-        return cache[geom]
+        if (geom, codec) not in cache:
+            cache[(geom, codec)] = serve_steps.make_paged_helpers(
+                self.cfg, geom, codec
+            )
+        return cache[(geom, codec)]
 
     # -- runtime undervolting loop ---------------------------------------------
     def autotune_voltage(self, max_rounds: int = 60):
@@ -488,6 +570,16 @@ class ServingEngine:
         arena_rails = self._store.domains
         for _ in range(max_rounds):
             volts = self.controller.update(self._last_scrub)
+            # A rail that escalated its codec re-protects its domain before
+            # the schedule is applied: the next interval's telemetry must be
+            # judged under the stronger code (DESIGN.md §12). Only arena
+            # rails are polled here — a late-bound rail's changes stay
+            # pending for the component that owns its storage (the serving
+            # loop applies `kv` escalations via the scheduler).
+            for d in arena_rails:
+                cname = self.controller.rails[d].pop_codec_change()
+                if cname:
+                    self._store.set_domain_codec(d, cname)
             # apply the new schedule (the backed-off one on the final round)
             self.set_rails(volts)
             if all(self.controller.rails[d].locked for d in arena_rails):
@@ -501,36 +593,62 @@ class ServingEngine:
             agg.accumulate(st)
         return agg
 
+    def _check_bits(self) -> dict:
+        """Per-domain ECC check bits (the redundancy-cost power weighting)."""
+        store = getattr(self, "_store", None)
+        return store.check_bits_by_domain() if store is not None else {}
+
     def power_w(self) -> float:
         """Modeled accelerator power at the current rail voltage(s)."""
         ecc = bool(self.rel and self.rel.ecc)
         if self.rails is not None:
             return vmod.P_REST_W + vmod.multi_rail_bram_power(
-                self.rails, self._store.words_by_domain(), ecc=ecc
+                self.rails, self._store.words_by_domain(), ecc=ecc,
+                check_bits=self._check_bits(),
             )
-        return vmod.accelerator_power(self.voltage, ecc=ecc)
+        # Single rail: the whole arena shares one codec; its redundancy
+        # scales the BRAM draw (factor 1 for the measured SECDED geometry).
+        bits = self._check_bits()
+        factor = vmod.redundancy_factor(next(iter(bits.values()), 8))
+        return vmod.P_REST_W + vmod.bram_power(self.voltage, ecc=ecc) * factor
 
     def power_report(self) -> dict:
-        """Per-rail power breakdown + fractional BRAM saving vs nominal."""
+        """Per-rail power breakdown + fractional BRAM saving vs nominal,
+        including each domain's codec and its redundancy cost."""
         ecc = bool(self.rel and self.rel.ecc)
         if self.rails is not None:
             words = self._store.words_by_domain()
             total = max(sum(words.values()), 1)
+            bits = self._check_bits()
+            codecs = self._store.codecs_by_domain()
             return {
                 "rails": dict(self.rails),
-                "bram_w": vmod.multi_rail_bram_power(self.rails, words, ecc=ecc),
+                "codecs": codecs,
+                "check_bits": bits,
+                "bram_w": vmod.multi_rail_bram_power(
+                    self.rails, words, ecc=ecc, check_bits=bits
+                ),
                 "bram_w_by_domain": {
-                    d: (words[d] / total) * vmod.bram_power(v, ecc=ecc)
+                    d: (words[d] / total)
+                    * vmod.bram_power(v, ecc=ecc)
+                    * vmod.redundancy_factor(bits.get(d, 8))
                     for d, v in self.rails.items()
                 },
                 "total_w": self.power_w(),
                 "saving_vs_nominal": vmod.multi_rail_power_saving(
-                    self.rails, words, ecc=ecc
+                    self.rails, words, ecc=ecc, check_bits=bits
                 ),
             }
+        bits = self._check_bits()
+        factor = vmod.redundancy_factor(next(iter(bits.values()), 8))
         return {
             "rails": {"all": self.voltage},
-            "bram_w": vmod.bram_power(self.voltage, ecc=ecc),
+            "codecs": dict(getattr(self, "_store", None).codecs_by_domain())
+            if getattr(self, "_store", None) is not None
+            else {},
+            "bram_w": vmod.bram_power(self.voltage, ecc=ecc) * factor,
             "total_w": self.power_w(),
-            "saving_vs_nominal": vmod.power_saving(1.0, self.voltage, ecc=ecc),
+            "saving_vs_nominal": 1.0
+            - vmod.bram_power(self.voltage, ecc=ecc) * factor
+            / vmod.bram_power(1.0, ecc=False),
         }

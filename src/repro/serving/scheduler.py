@@ -226,12 +226,21 @@ def serve_stream(
     max_block: int = 16,
     kv_controller=None,
     init_cache_fn=None,
+    helpers_factory=None,
 ) -> ServeReport:
     """Drive a request stream to completion over the paged cache.
 
     ``helpers`` comes from serving/steps.make_paged_helpers; ``kv_controller``
     is an optional UndervoltController fed the per-interval scrub telemetry —
-    its output voltage is applied to the arena (the `kv` rail walk).
+    its output voltage is applied to the arena (the `kv` rail walk). When the
+    controller escalates its ECC scheme (core/controller.py EscalationPolicy),
+    the arena is re-encoded under the stronger code and ``helpers_factory``
+    (codec name -> helpers dict) supplies a commit path matching the new
+    check-plane geometry. Without a factory there is no way to apply a
+    stronger code to the live arena, so escalation is *suppressed* around
+    each controller update (and the caller's policy restored afterwards) —
+    the controller must never advance its codec state past the protection
+    actually in force (it would mis-report and double-escalate).
 
     Decode runs in *blocks* of up to ``max_block`` steps lowered to one
     scanned dispatch (multi-step scheduling): the block size is the largest
@@ -395,7 +404,25 @@ def serve_stream(
                 interval.accumulate(rs)
             arena.stats.accumulate(interval)
             if kv_controller is not None and not kv_controller.locked:
-                arena.set_voltage(kv_controller.update(interval))
+                # See docstring: without a factory a stronger code cannot be
+                # applied to the live arena, so escalation is suppressed for
+                # this update only (the caller's policy is left intact).
+                saved_policy = kv_controller.escalation
+                if helpers_factory is None:
+                    kv_controller.escalation = None
+                try:
+                    arena.set_voltage(kv_controller.update(interval))
+                finally:
+                    kv_controller.escalation = saved_policy
+                change = kv_controller.pop_codec_change()
+                if change:
+                    # Escalate right after the scrub above flushed every
+                    # correctable fault: the arena re-encodes under the
+                    # stronger code and the commit path switches with it.
+                    # (A change can only arrive when a factory exists —
+                    # escalation was suppressed above otherwise.)
+                    arena.change_codec(change)
+                    helpers = helpers_factory(change)
             kv_voltages.append(arena.voltage)
 
     outputs = {

@@ -100,7 +100,10 @@ def _load_lane(cache, cachem, src_row, lane):
     )
 
 
-def _multistep(params, tok, cache, lo, hi, par, pos0, page_ids, slots, *, cfg, geom):
+def _multistep(
+    params, tok, cache, lo, hi, par, pos0, page_ids, slots, *, cfg, geom,
+    codec="secded72",
+):
     """Decode ``k`` tokens per lane in one dispatch (multi-step scheduling).
 
     The continuous-batching loop pays Python dispatch per token where the
@@ -123,6 +126,7 @@ def _multistep(params, tok, cache, lo, hi, par, pos0, page_ids, slots, *, cfg, g
             lo, hi, par, payload, pids, slts,
             token_words=geom.token_words,
             words_per_page=geom.words_per_page,
+            codec=codec,
         )
         return (nxt, cache, lo, hi, par, pos + 1), nxt[:, 0]
 
@@ -132,7 +136,7 @@ def _multistep(params, tok, cache, lo, hi, par, pos0, page_ids, slots, *, cfg, g
     return toks, cache, lo, hi, par
 
 
-def make_paged_helpers(cfg: ModelConfig, geom: KVGeometry):
+def make_paged_helpers(cfg: ModelConfig, geom: KVGeometry, codec: str = "secded72"):
     """jit'd continuous-batching helpers sharing one payload layout.
 
     Returns a dict of:
@@ -148,7 +152,9 @@ def make_paged_helpers(cfg: ModelConfig, geom: KVGeometry):
     """
     return {
         "prefill": jax.jit(make_prefill_step(cfg)),
-        "multistep": jax.jit(functools.partial(_multistep, cfg=cfg, geom=geom)),
+        "multistep": jax.jit(
+            functools.partial(_multistep, cfg=cfg, geom=geom, codec=codec)
+        ),
         "extract_range": jax.jit(
             functools.partial(_extract_range, geom=geom), static_argnames=("s0",)
         ),

@@ -95,3 +95,33 @@ def test_missing_rows_is_an_error(gate):
     gate("BASELINE", _kernel_rows({1: 1.0, 2: 1.0}))
     gate("CURRENT", _kernel_rows({1: 1.0}))
     assert cr.check() == 2
+
+
+def test_step_summary_table_reports_every_gate(gate, tmp_path):
+    """The markdown table written for $GITHUB_STEP_SUMMARY names each gated
+    benchmark with its final-attempt status — this is what makes the
+    nightly lane's continue-on-error gate visible on the run page."""
+    summary = tmp_path / "summary.md"
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 2.0}))  # kernel gate fails
+    gate("SERVE_BASELINE", _serve_rows(1.10))
+    gate("SERVE_CURRENT", _serve_rows(1.15))  # serve gate passes
+    assert cr.check(threshold=0.20, summary_path=str(summary)) == 1
+    text = summary.read_text()
+    assert "| inject_scrub fused_over_pair | ❌ FAIL |" in text
+    assert "| serve_throughput cont_over_fixed | ✅ pass |" in text
+    # appends (Actions semantics), and the pass path writes a table too
+    gate("CURRENT", _kernel_rows({1: 1.02}))
+    assert cr.check(threshold=0.20, summary_path=str(summary)) == 0
+    assert summary.read_text().count("### Benchmark regression gate") == 2
+    assert "| inject_scrub fused_over_pair | ✅ pass |" in summary.read_text()
+
+
+def test_summary_skipped_serve_row(gate, tmp_path):
+    summary = tmp_path / "summary.md"
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.0}))
+    assert cr.check(threshold=0.20, summary_path=str(summary)) == 0
+    assert "| serve_throughput cont_over_fixed | ➖ skipped | no baseline |" in (
+        summary.read_text()
+    )

@@ -1,0 +1,280 @@
+"""Codec subsystem wired through the system: generalized kernels, the
+codec-grouped PlaneStore, the paged KV arena, the controller escalation
+ladder, and the scheme-comparison sweep (DESIGN.md §12)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import codes
+from repro.configs import shapes
+from repro.core import sweep
+from repro.core.controller import EscalationPolicy, UndervoltController
+from repro.core.kvpages import KVGeometry, KVPageArena
+from repro.core.planestore import PlaneStore
+from repro.core.telemetry import FaultStats
+from repro.core.voltage import PLATFORMS
+from repro.kernels import ops, paged_gather
+
+ALL = ("parity65", "secded72", "ileave88", "dected79")
+
+
+def _sparse_masks(rng, c, n, p=0.01):
+    mlo = (rng.random(n) < p).astype(np.uint32) << rng.integers(0, 32, n).astype(np.uint32)
+    mhi = (rng.random(n) < p).astype(np.uint32) << rng.integers(0, 32, n).astype(np.uint32)
+    mch = (
+        (rng.random(n) < p / 2).astype(np.uint64)
+        << rng.integers(0, c.n_check, n).astype(np.uint64)
+    ).astype(c.check_dtype)
+    return jnp.asarray(mlo), jnp.asarray(mhi), jnp.asarray(mch)
+
+
+# ---------------------------------------------------------------------------
+# generalized kernels vs the numpy oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", ALL)
+def test_fused_inject_scrub_counters_match_oracle(codec):
+    c = codes.get(codec)
+    rng = np.random.default_rng(3)
+    n = 4096
+    lo = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    hi = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    par = ops.encode(lo, hi, codec=codec)
+    assert np.asarray(par).dtype == c.check_dtype
+    mlo, mhi, mch = _sparse_masks(rng, c, n)
+    flo, fhi, fpar, cnt = ops.inject_scrub(lo, hi, par, mlo, mhi, mch, codec=codec)
+    cnt = np.asarray(cnt)
+    nlo, nhi, nst = c.decode_np(np.asarray(flo), np.asarray(fhi), np.asarray(fpar))
+    assert cnt[2] == int((nst == 2).sum())
+    # genuinely-corrected lane: the decode restores the clean data
+    restored = (nlo == np.asarray(lo)) & (nhi == np.asarray(hi))
+    assert cnt[1] == int(((nst == 1) & restored).sum())
+    # every word lands in exactly one outcome lane
+    assert cnt[0] + cnt[1] + cnt[2] + cnt[3] == n
+    # the decode kernel agrees with the oracle bit-for-bit
+    dlo, dhi, dst = ops.decode(flo, fhi, fpar, codec=codec)
+    assert np.array_equal(np.asarray(dlo), nlo)
+    assert np.array_equal(np.asarray(dst), nst)
+
+
+@pytest.mark.parametrize("codec", ALL)
+def test_gather_scrub_pages_counters_and_writeback(codec):
+    c = codes.get(codec)
+    rng = np.random.default_rng(4)
+    pages, w = 5, 384
+    n = pages * w
+    lo = jnp.asarray(rng.integers(0, 2**32, (pages, w), dtype=np.uint32))
+    hi = jnp.asarray(rng.integers(0, 2**32, (pages, w), dtype=np.uint32))
+    par = ops.encode(lo, hi, codec=codec)
+    mlo, mhi, mch = _sparse_masks(rng, c, n)
+    flo = lo ^ mlo.reshape(pages, w)
+    fhi = hi ^ mhi.reshape(pages, w)
+    fpar = par ^ mch.reshape(pages, w)
+    olo, ohi, opar, cnt = paged_gather.gather_scrub_pages(flo, fhi, fpar, codec=codec)
+    nlo, nhi, nst = c.decode_np(np.asarray(flo), np.asarray(fhi), np.asarray(fpar))
+    exp = np.stack([(nst == 0).sum(1), (nst == 1).sum(1), (nst == 2).sum(1)], 1)
+    assert np.array_equal(np.asarray(cnt)[:, :3], exp)
+    assert np.array_equal(np.asarray(olo), nlo)
+    assert np.array_equal(np.asarray(ohi), nhi)
+    # DED latch: detected words keep their stored check bits; all others
+    # re-encode clean over the corrected data
+    opar = np.asarray(opar)
+    det = nst == 2
+    assert np.array_equal(opar[det], np.asarray(fpar)[det])
+    re = c.encode_np(nlo, nhi)
+    assert np.array_equal(opar[~det], re[~det])
+
+
+# ---------------------------------------------------------------------------
+# PlaneStore codec groups
+# ---------------------------------------------------------------------------
+def _toy_store(mask_source, codecs=None, seed=3):
+    rng = np.random.default_rng(7)
+    leaves = [
+        ops.pack_ecc_weights(jnp.asarray(rng.standard_normal((64, 96)), jnp.float32))
+        for _ in range(4)
+    ]
+    keys = ["a_attn", "b_mlp", "c_attn", "d_embed"]
+    return PlaneStore(
+        leaves, keys, PLATFORMS["vc707"], seed=seed, mask_source=mask_source,
+        domain_key=shapes.domain_of, codecs=codecs,
+    )
+
+
+@pytest.mark.parametrize("mask_source", ["host", "device"])
+def test_store_explicit_secded_is_default(mask_source):
+    s1 = _toy_store(mask_source)
+    s2 = _toy_store(mask_source, codecs="secded72")
+    lv1, st1 = s1.set_rails({d: 0.55 for d in s1.domains})
+    lv2, st2 = s2.set_rails({d: 0.55 for d in s2.domains})
+    for a, b in zip(lv1, lv2):
+        assert np.array_equal(np.asarray(a.lo), np.asarray(b.lo))
+        assert np.array_equal(np.asarray(a.parity), np.asarray(b.parity))
+    assert st1.total().counters().tolist() == st2.total().counters().tolist()
+
+
+@pytest.mark.parametrize("mask_source", ["host", "device"])
+def test_store_mixed_codecs_partition_and_dtypes(mask_source):
+    store = _toy_store(
+        mask_source, codecs={"attention": "dected79", "mlp": "ileave88"}
+    )
+    assert store.codecs_by_domain() == {
+        "attention": "dected79", "mlp": "ileave88", "embedding": "secded72"
+    }
+    assert store.check_bits_by_domain() == {
+        "attention": 15, "mlp": 24, "embedding": 8
+    }
+    lv, st = store.set_rails({"attention": 0.55, "mlp": 0.55, "embedding": 1.0})
+    assert lv[0].parity.dtype == np.uint32  # attention -> dected79
+    assert lv[1].parity.dtype == np.uint32  # mlp -> ileave88
+    assert lv[3].parity.dtype == np.uint8  # embedding stays secded
+    assert st["embedding"].faulty_bits == 0  # nominal rail
+    assert st["attention"].words == store.words_by_domain()["attention"]
+    # the stronger codes at 0.55 V should be correcting, not detecting much
+    assert st["attention"].corrected > 0 or st["mlp"].corrected > 0
+
+
+@pytest.mark.parametrize("mask_source", ["host", "device"])
+def test_set_domain_codec_rebuild_preserves_other_groups(mask_source):
+    store = _toy_store(mask_source, codecs={"attention": "dected79"})
+    lv1, _ = store.set_rails({"attention": 0.55, "mlp": 0.55, "embedding": 0.55})
+    store.set_domain_codec("mlp", "ileave88")
+    lv2, _ = store.set_rails({"attention": 0.55, "mlp": 0.55, "embedding": 0.55})
+    # attention's group (membership unchanged) reproduces identical planes
+    assert np.array_equal(np.asarray(lv1[0].lo), np.asarray(lv2[0].lo))
+    assert np.array_equal(np.asarray(lv1[2].hi), np.asarray(lv2[2].hi))
+    # mlp re-encoded under the new scheme
+    assert lv2[1].parity.dtype == np.uint32
+    assert store.codec_of("mlp") == "ileave88"
+
+
+def test_store_stronger_codes_beat_secded_on_deep_undervolt():
+    """Same arena, same voltage: DEC-TED leaves strictly fewer uncorrected
+    faulty words than SECDED (the escalation pay-off, device masks)."""
+    def uncorrected(codecs):
+        store = _toy_store("device", codecs=codecs, seed=11)
+        _, st = store.set_rails({d: 0.54 for d in store.domains})
+        t = st.total()
+        return t.detected + t.silent, t.faulty_words
+
+    weak, fw1 = uncorrected(None)
+    strong, fw2 = uncorrected("dected79")
+    assert fw1 > 0 and fw2 > 0
+    assert strong < weak
+
+
+# ---------------------------------------------------------------------------
+# paged KV arena with a codec
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", ["parity65", "ileave88", "dected79"])
+def test_kv_arena_roundtrip_nominal_any_codec(codec):
+    geom = KVGeometry((0,), n_groups=1, n_kv_heads=2, head_dim=8, page_tokens=4)
+    arena = KVPageArena(geom, PLATFORMS["vc707"], n_pages=3, codec=codec)
+    assert np.asarray(arena.parity).dtype == codes.get(codec).check_dtype
+    rng = np.random.default_rng(0)
+    payload = rng.standard_normal((8, geom.token_f32)).astype(np.float32)
+    pages = np.array([0, 0, 0, 0, 2, 2, 2, 2], np.int32)
+    slots = np.array([0, 1, 2, 3, 0, 1, 2, 3], np.int32)
+    arena.commit_tokens(jnp.asarray(payload), pages, slots)
+    got, cnt = arena.scrub_pages(np.array([0, 2], np.int32))
+    assert np.array_equal(
+        np.asarray(got).reshape(8, geom.token_f32), payload
+    )
+    assert cnt[:, 2].sum() == 0  # nothing detected at nominal
+
+
+def test_kv_arena_change_codec_preserves_contents():
+    geom = KVGeometry((0,), n_groups=1, n_kv_heads=2, head_dim=8, page_tokens=4)
+    arena = KVPageArena(geom, PLATFORMS["vc707"], n_pages=2, codec="secded72")
+    rng = np.random.default_rng(1)
+    payload = rng.standard_normal((4, geom.token_f32)).astype(np.float32)
+    arena.commit_tokens(
+        jnp.asarray(payload), np.zeros(4, np.int32), np.arange(4, dtype=np.int32)
+    )
+    arena.change_codec("dected79")
+    assert np.asarray(arena.parity).dtype == np.uint32
+    got, cnt = arena.scrub_pages(np.array([0], np.int32))
+    assert np.array_equal(np.asarray(got).reshape(4, -1), payload)
+    assert cnt[:, 2].sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# controller escalation
+# ---------------------------------------------------------------------------
+def _stats(words=1000, detected=0, silent=0):
+    return FaultStats(words=words, detected=detected, silent=silent)
+
+
+def test_escalation_steps_code_up_instead_of_retreating():
+    ctrl = UndervoltController(
+        PLATFORMS["vc707"], start_v=0.57,
+        escalation=EscalationPolicy(ladder=("secded72", "dected79")),
+    )
+    assert ctrl.codec == "secded72"
+    v0 = ctrl.voltage
+    ctrl.update(_stats(detected=5))  # trip -> escalate, voltage holds
+    assert ctrl.codec == "dected79"
+    assert not ctrl.locked and ctrl.voltage == v0
+    assert ctrl.pop_codec_change() == "dected79"
+    assert ctrl.pop_codec_change() is None  # one-shot
+    ctrl.update(_stats())  # clean interval: the walk resumes
+    assert ctrl.voltage < v0
+    ctrl.update(_stats(detected=3))  # ladder exhausted -> retreat + lock
+    assert ctrl.locked
+    assert ctrl.history[-1].action == "trip+backoff"
+    assert [r.action for r in ctrl.history[:2]] == ["escalate", "lower"]
+
+
+def test_escalation_respects_ded_rate_threshold():
+    ctrl = UndervoltController(
+        PLATFORMS["vc707"], start_v=0.57,
+        escalation=EscalationPolicy(ladder=("secded72", "dected79"), ded_rate=0.01),
+    )
+    ctrl.update(_stats(words=1000, detected=5))  # 0.5% <= 1%: retreat, not escalate
+    assert ctrl.locked and ctrl.codec == "secded72"
+    ctrl2 = UndervoltController(
+        PLATFORMS["vc707"], start_v=0.57,
+        escalation=EscalationPolicy(ladder=("secded72", "dected79"), ded_rate=0.01),
+    )
+    ctrl2.update(_stats(words=1000, detected=50))  # 5% > 1%: escalate
+    assert not ctrl2.locked and ctrl2.codec == "dected79"
+
+
+def test_paranoid_silent_trip_never_escalates():
+    ctrl = UndervoltController(
+        PLATFORMS["vc707"], start_v=0.57, paranoid=True,
+        escalation=EscalationPolicy(ladder=("secded72", "dected79")),
+    )
+    ctrl.update(_stats(silent=2))  # silent-only trip: the code can't see it
+    assert ctrl.locked and ctrl.codec == "secded72"
+
+
+# ---------------------------------------------------------------------------
+# scheme-comparison sweep (the acceptance table)
+# ---------------------------------------------------------------------------
+def test_scheme_sweep_stronger_codes_cover_more_at_crash():
+    p = PLATFORMS["vc707"]
+    rows = sweep.sweep_codec_schemes(
+        ("secded72", "dected79", "ileave88"), [(p, p.v_crash)], 1 << 16, seed=0
+    )
+    cov = {r["codec"]: r["coverage_correctable"] for r in rows}
+    assert all(r["faulty_words"] > 0 for r in rows)
+    assert cov["dected79"] > cov["secded72"]
+    assert cov["ileave88"] > cov["secded72"]
+    # overhead ordering is the price side of the trade-off
+    bits = {r["codec"]: r["check_bits"] for r in rows}
+    assert bits["secded72"] < bits["dected79"] < bits["ileave88"]
+
+
+def test_scheme_sweep_secded_matches_platform_sweep():
+    """The codec sweep's secded72 row reproduces the historical platform
+    sweep exactly (same stream, same classification)."""
+    p = PLATFORMS["vc707"]
+    pts = sweep.sweep_platform_grid([(p, 0.55)], 1 << 15, seed=2)
+    rows = sweep.sweep_codec_schemes(("secded72",), [(p, 0.55)], 1 << 15, seed=2)
+    st = pts[0].stats
+    r = rows[0]
+    assert (st.corrected, st.detected, st.silent, st.faulty_bits) == (
+        r["corrected"], r["detected"], r["silent"], r["faulty_bits"]
+    )

@@ -1,0 +1,270 @@
+"""Codec subsystem properties: every registered code honours its guarantees.
+
+The round-trip law under k injected flips, per codec:
+  k = 0             -> CLEAN everywhere
+  k = 1             -> CORRECTED (SECDED / DEC-TED / interleaved), data
+                       restored; DETECTED for parity (corrects nothing)
+  k = 2 (distinct)  -> DETECTED for SECDED; CORRECTED + restored for DEC-TED;
+                       interleaved: CORRECTED iff the flips land in different
+                       subcodes, DETECTED otherwise — never silent
+  burst of 4        -> CORRECTED + restored for the 4-way interleaved code
+  k = 3 (distinct)  -> DETECTED for DEC-TED (the TED property)
+
+plus: numpy oracle and jnp path bit-identical on random words, and the
+construction invariants (Hsiao odd-weight columns, BCH syndrome
+distinctness — the latter is proven at build time by codes.base.build_luts).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro import codes
+from repro.codes import base, interleaved as il
+
+ALL = ("parity65", "secded72", "ileave88", "dected79")
+
+
+def _flip(codec, lo, hi, ch, bits):
+    """XOR codeword bit positions (data 0..63, check 64..) into planes."""
+    lo, hi = np.uint32(lo), np.uint32(hi)
+    ch = np.uint32(ch)
+    for b in bits:
+        if b < 32:
+            lo ^= np.uint32(1 << b)
+        elif b < 64:
+            hi ^= np.uint32(1 << (b - 32))
+        else:
+            ch ^= np.uint32(1 << (b - 64))
+    return lo, hi, codec.check_dtype(ch)
+
+
+def _decode(codec, lo, hi, ch):
+    dlo, dhi, st_ = codec.decode_np(
+        np.array([lo], np.uint32), np.array([hi], np.uint32),
+        np.array([ch], codec.check_dtype),
+    )
+    return int(dlo[0]), int(dhi[0]), int(st_[0])
+
+
+def _encode1(codec, lo, hi):
+    return codec.encode_np(np.array([lo], np.uint32), np.array([hi], np.uint32))[0]
+
+
+# ---------------------------------------------------------------------------
+# registry + geometry
+# ---------------------------------------------------------------------------
+def test_registry_and_geometry():
+    assert set(ALL) <= set(codes.names())
+    for name in ALL:
+        c = codes.get(name)
+        assert c.name == name
+        assert c.n_bits == 64 + c.n_check
+        assert c.check_dtype == (np.uint8 if c.n_check <= 8 else np.uint32)
+        assert 0 < c.overhead < 0.5
+        assert codes.get(name) is c  # factory is cached
+    with pytest.raises(KeyError):
+        codes.get("hamming31")
+
+
+def test_secded_tables_are_the_hsiao_reexport():
+    from repro.core import hsiao
+
+    c = codes.get("secded72")
+    assert np.array_equal(c.mask_lo, hsiao.MASK_LO)
+    assert np.array_equal(c.mask_hi, hsiao.MASK_HI)
+    # the dense status table agrees with the historical action LUT
+    for synd in range(256):
+        action = int(hsiao.SYNDROME_LUT[synd])
+        expect = (
+            base.STATUS_CLEAN if action == hsiao.LUT_CLEAN
+            else base.STATUS_DETECTED if action == hsiao.LUT_DETECT
+            else base.STATUS_CORRECTED
+        )
+        assert int(c.lut_status[synd]) == expect, synd
+
+
+# ---------------------------------------------------------------------------
+# round-trip guarantees
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(word=st.integers(0, 2**64 - 1), codec=st.sampled_from(ALL))
+def test_clean_roundtrip(word, codec):
+    c = codes.get(codec)
+    lo, hi = word & 0xFFFFFFFF, word >> 32
+    ch = _encode1(c, lo, hi)
+    dlo, dhi, status = _decode(c, lo, hi, ch)
+    assert status == base.STATUS_CLEAN and (dlo, dhi) == (lo, hi)
+
+
+@settings(max_examples=80, deadline=None)
+@given(word=st.integers(0, 2**64 - 1), b=st.integers(0, 255), codec=st.sampled_from(ALL))
+def test_single_flip(word, b, codec):
+    c = codes.get(codec)
+    lo, hi = word & 0xFFFFFFFF, word >> 32
+    ch = _encode1(c, lo, hi)
+    b = b % c.n_bits
+    flo, fhi, fch = _flip(c, lo, hi, ch, [b])
+    dlo, dhi, status = _decode(c, flo, fhi, fch)
+    if c.corrects_random >= 1:
+        assert status == base.STATUS_CORRECTED, (codec, b)
+        assert (dlo, dhi) == (lo, hi), (codec, b)
+    else:  # parity: detect, never touch the data
+        assert status == base.STATUS_DETECTED
+        assert (dlo, dhi) == (int(flo), int(fhi))
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    word=st.integers(0, 2**64 - 1),
+    b1=st.integers(0, 200),
+    b2=st.integers(0, 200),
+)
+def test_double_flip_secded_detects_dected_corrects(word, b1, b2):
+    lo, hi = word & 0xFFFFFFFF, word >> 32
+    for codec, want in (("secded72", "detect"), ("dected79", "correct")):
+        c = codes.get(codec)
+        p1, p2 = b1 % c.n_bits, b2 % c.n_bits
+        if p1 == p2:
+            continue
+        ch = _encode1(c, lo, hi)
+        flo, fhi, fch = _flip(c, lo, hi, ch, [p1, p2])
+        dlo, dhi, status = _decode(c, flo, fhi, fch)
+        if want == "detect":
+            assert status == base.STATUS_DETECTED, (codec, p1, p2)
+        else:
+            assert status == base.STATUS_CORRECTED, (codec, p1, p2)
+            assert (dlo, dhi) == (lo, hi), (codec, p1, p2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    word=st.integers(0, 2**64 - 1),
+    b1=st.integers(0, 78),
+    b2=st.integers(0, 78),
+    b3=st.integers(0, 78),
+)
+def test_triple_flip_dected_detects(word, b1, b2, b3):
+    if len({b1, b2, b3}) != 3:
+        return
+    c = codes.get("dected79")
+    lo, hi = word & 0xFFFFFFFF, word >> 32
+    ch = _encode1(c, lo, hi)
+    flo, fhi, fch = _flip(c, lo, hi, ch, [b1, b2, b3])
+    _, _, status = _decode(c, flo, fhi, fch)
+    assert status == base.STATUS_DETECTED, (b1, b2, b3)
+
+
+@settings(max_examples=60, deadline=None)
+@given(word=st.integers(0, 2**64 - 1), start=st.integers(0, 84))
+def test_interleaved_corrects_bursts_of_four(word, start):
+    c = codes.get("ileave88")
+    lo, hi = word & 0xFFFFFFFF, word >> 32
+    ch = _encode1(c, lo, hi)
+    start = min(start, c.n_bits - 4)
+    flo, fhi, fch = _flip(c, lo, hi, ch, [start, start + 1, start + 2, start + 3])
+    dlo, dhi, status = _decode(c, flo, fhi, fch)
+    assert status == base.STATUS_CORRECTED, start
+    assert (dlo, dhi) == (lo, hi), start
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    word=st.integers(0, 2**64 - 1),
+    b1=st.integers(0, 87),
+    b2=st.integers(0, 87),
+)
+def test_interleaved_doubles_never_silent(word, b1, b2):
+    """2 random flips: corrected when they split across subcodes, detected
+    when they share one — SECDED's guarantee is never weakened."""
+    if b1 == b2:
+        return
+    c = codes.get("ileave88")
+    lo, hi = word & 0xFFFFFFFF, word >> 32
+    ch = _encode1(c, lo, hi)
+    flo, fhi, fch = _flip(c, lo, hi, ch, [b1, b2])
+    dlo, dhi, status = _decode(c, flo, fhi, fch)
+    if b1 % il.N_WAYS == b2 % il.N_WAYS:  # same subcode: a double there
+        assert status == base.STATUS_DETECTED, (b1, b2)
+    else:
+        assert status == base.STATUS_CORRECTED, (b1, b2)
+        assert (dlo, dhi) == (lo, hi), (b1, b2)
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle == jnp path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", ALL)
+def test_numpy_oracle_matches_jnp(codec):
+    c = codes.get(codec)
+    rng = np.random.default_rng(5)
+    n = 512
+    lo = rng.integers(0, 2**32, n, dtype=np.uint32)
+    hi = rng.integers(0, 2**32, n, dtype=np.uint32)
+    ch = c.encode_np(lo, hi)
+    assert np.array_equal(
+        ch.astype(np.uint32),
+        np.asarray(c.encode_jnp(jnp.asarray(lo), jnp.asarray(hi))),
+    )
+    # corrupt with 0..3 random codeword-bit flips per word
+    k = rng.integers(0, 4, n)
+    flo, fhi, fch = lo.copy(), hi.copy(), ch.astype(np.uint32)
+    for i in range(n):
+        for b in rng.choice(c.n_bits, size=k[i], replace=False):
+            if b < 32:
+                flo[i] ^= np.uint32(1 << b)
+            elif b < 64:
+                fhi[i] ^= np.uint32(1 << (b - 32))
+            else:
+                fch[i] ^= np.uint32(1 << (b - 64))
+    fch = fch.astype(c.check_dtype)
+    nlo, nhi, nst = c.decode_np(flo, fhi, fch)
+    jlo, jhi, jst = (
+        np.asarray(x)
+        for x in c.decode_jnp(jnp.asarray(flo), jnp.asarray(fhi), jnp.asarray(fch))
+    )
+    assert np.array_equal(nlo, jlo) and np.array_equal(nhi, jhi), codec
+    assert np.array_equal(nst, jst), codec
+
+
+# ---------------------------------------------------------------------------
+# construction invariants
+# ---------------------------------------------------------------------------
+def test_hsiao_generalised_construction():
+    from repro.codes.secded import build_hsiao
+
+    for n_data, n_check in ((64, 8), (16, 6)):
+        code = build_hsiao(n_data, n_check)
+        cols = [int(c) for c in code["data_cols"]] + [
+            int(c) for c in code["parity_cols"]
+        ]
+        assert len(set(cols)) == n_data + n_check
+        assert all(bin(c).count("1") % 2 == 1 for c in cols)
+
+
+def test_dected_systematic_form():
+    from repro.codes.dected import build_dected
+
+    code = build_dected()
+    # every check bit's mask covers some data bits; LUT corrects 79 singles
+    # + C(79,2) doubles, everything else (but 0) detects
+    n_corr = int((code["lut_status"] == base.STATUS_CORRECTED).sum())
+    assert n_corr == 79 + 79 * 78 // 2
+    assert int(code["lut_status"][0]) == base.STATUS_CLEAN
+
+
+def test_interleaved_bit_ownership_is_a_partition():
+    c = codes.get("ileave88")
+    # every data bit is covered by exactly one subcode's masks
+    owner = np.full(64, -1)
+    for b in range(c.n_check):
+        s = b % il.N_WAYS
+        mask = (int(c.mask_lo[b]), int(c.mask_hi[b]))
+        for j in range(64):
+            half, bit = (0, j) if j < 32 else (1, j - 32)
+            if (mask[half] >> bit) & 1:
+                assert owner[j] in (-1, s), j
+                owner[j] = s
+    assert np.array_equal(owner, np.arange(64) % il.N_WAYS)
