@@ -1,0 +1,145 @@
+"""Sharded-scrub throughput: words scrubbed/sec vs host-device count 1 -> 8.
+
+Benchmarks the shard_map'd paged scrub-on-read step (distributed/meshrel.py):
+every reliability shard gathers its own page rows from its slice of the
+stacked KV planes, runs the Hsiao scrub kernel, and writes corrected planes
+back — no plane word crosses a shard, so throughput should scale with the
+shard count until the host runs out of cores. Each device count runs in its
+own subprocess (``--xla_force_host_platform_device_count`` is locked at jax
+init), timed after a warmup call.
+
+CSV rows: ``mesh_scrub_d<N>,us_per_call,words_per_s=...`` plus the scaling
+summary row the nightly trajectory tracks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import csv_line, emit
+
+DEFAULT_DEVICES = (1, 2, 4, 8)
+
+
+def _worker(n_devices: int, n_pages: int, page_words: int, repeat: int) -> None:
+    """Runs inside a subprocess with ``n_devices`` forced host devices."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.distributed import meshrel
+    from repro.launch.mesh import make_reliability_mesh
+
+    assert len(jax.devices()) == n_devices, (len(jax.devices()), n_devices)
+    mesh = make_reliability_mesh(n_devices)
+    sharding = meshrel.arena_sharding(mesh)
+    local_words = n_pages * page_words
+    total = n_devices * local_words
+    rng = np.random.default_rng(0)
+    lo = jax.device_put(
+        jnp.asarray(rng.integers(0, 1 << 32, size=total, dtype=np.uint32)), sharding
+    )
+    hi = jax.device_put(
+        jnp.asarray(rng.integers(0, 1 << 32, size=total, dtype=np.uint32)), sharding
+    )
+    from repro.kernels import ops as kops
+
+    par = jax.device_put(kops.encode(lo, hi), sharding)
+    # every shard scrubs all of its local pages each call
+    table = jax.device_put(
+        jnp.tile(jnp.arange(n_pages, dtype=jnp.int32)[None], (n_devices, 1)),
+        jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data")),
+    )
+    step = meshrel.make_kv_scrub_step(mesh, page_words, local_words, n_pages)
+    olo, ohi, opar, _, _, cnt = step(lo, hi, par, table)
+    jax.block_until_ready(cnt)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        olo, ohi, opar, _, _, cnt = step(lo, hi, par, table)
+        jax.block_until_ready(cnt)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    print(json.dumps({
+        "devices": n_devices,
+        "us_per_call": us,
+        "words_scrubbed": total,
+        "words_per_s": total / (us / 1e6),
+        "clean_words": int(np.asarray(cnt)[..., 0].sum()),
+    }))
+
+
+def run_points(devices, n_pages: int, page_words: int, repeat: int) -> list[dict]:
+    rows = []
+    for n in devices:
+        env = dict(os.environ)
+        # preserve unrelated XLA flags; only the forced device count is ours
+        kept = [
+            f for f in env.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")
+        ]
+        env["XLA_FLAGS"] = " ".join(
+            kept + [f"--xla_force_host_platform_device_count={n}"]
+        )
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (
+                os.path.join(os.path.dirname(__file__), "..", "src"),
+                os.path.join(os.path.dirname(__file__), ".."),
+                env.get("PYTHONPATH", ""),
+            ) if p
+        )
+        out = subprocess.run(
+            [
+                sys.executable, "-m", "benchmarks.sharded_scrub",
+                "--worker", "--devices", str(n), "--pages", str(n_pages),
+                "--page-words", str(page_words), "--repeat", str(repeat),
+            ],
+            capture_output=True, text=True, env=env, timeout=900,
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="single device count (worker / one-point mode)")
+    ap.add_argument("--max-devices", type=int, default=8)
+    ap.add_argument("--pages", type=int, default=16)
+    ap.add_argument("--page-words", type=int, default=2048)
+    ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny geometry (CI: exercise the path, not the clock)")
+    # parse_known_args: benchmarks.run passes its section name through argv
+    args, _ = ap.parse_known_args(argv)
+    if args.smoke:
+        args.pages, args.page_words, args.repeat = 4, 512, 1
+    if args.worker:
+        _worker(args.devices, args.pages, args.page_words, args.repeat)
+        return
+    devices = [n for n in DEFAULT_DEVICES if n <= args.max_devices]
+    if args.devices:
+        devices = [args.devices]
+    rows = run_points(devices, args.pages, args.page_words, args.repeat)
+    for r in rows:
+        print(csv_line(
+            f"mesh_scrub_d{r['devices']}", r["us_per_call"],
+            f"words_per_s={r['words_per_s']:.3e}",
+        ))
+    if len(rows) > 1:
+        scale = rows[-1]["words_per_s"] / rows[0]["words_per_s"]
+        print(csv_line(
+            f"mesh_scrub_scaling_{rows[0]['devices']}to{rows[-1]['devices']}",
+            0.0, f"throughput_ratio={scale:.2f}",
+        ))
+    emit(rows, "sharded_scrub")
+
+
+if __name__ == "__main__":
+    main()

@@ -101,6 +101,24 @@ def domain_codecs(overrides=None) -> dict[str, str]:
     return out
 
 
+def rail_policy(name: str) -> str:
+    """Validate a mesh rail policy name (DESIGN.md §13).
+
+    ``uniform``: one voltage per domain across every chip, locked at the
+    worst shard's first DED. ``per_shard``: every chip walks its own V_min.
+    Validated here, next to the memory-domain registry, for the same reason
+    as ``domain_codecs``: a typo'd policy silently falling back to a default
+    is the misconfiguration to prevent.
+    """
+    from repro.core.controller import RAIL_POLICIES
+
+    name = str(name)
+    assert name in RAIL_POLICIES, (
+        f"unknown rail policy {name!r}; known: {RAIL_POLICIES}"
+    )
+    return name
+
+
 def supports_paged_kv(cfg: ModelConfig) -> bool:
     """Whether the paged SECDED KV cache (core/kvpages.py) covers this arch.
 

@@ -11,16 +11,22 @@ Built-in-ECC-under-undervolting for ML memory systems:
 """
 
 from repro.core import controller, ecc, faultsim, hsiao, memory, quantize, telemetry, voltage
-from repro.core.controller import EscalationPolicy, MultiRailController, UndervoltController
+from repro.core.controller import (
+    RAIL_POLICIES,
+    EscalationPolicy,
+    MeshRailController,
+    MultiRailController,
+    UndervoltController,
+)
 from repro.core.faultsim import FaultField, FlipMasks
 from repro.core.memory import EccMemoryDomain
-from repro.core.telemetry import DomainFaultStats, FaultStats
+from repro.core.telemetry import DomainFaultStats, FaultStats, ShardFaultStats
 from repro.core.voltage import PLATFORMS, PlatformProfile
 
 __all__ = [
     "controller", "ecc", "faultsim", "hsiao", "memory", "quantize",
-    "telemetry", "voltage", "EscalationPolicy", "MultiRailController",
-    "UndervoltController",
+    "telemetry", "voltage", "EscalationPolicy", "MeshRailController",
+    "MultiRailController", "RAIL_POLICIES", "UndervoltController",
     "FaultField", "FlipMasks", "EccMemoryDomain", "DomainFaultStats",
-    "FaultStats", "PLATFORMS", "PlatformProfile",
+    "FaultStats", "ShardFaultStats", "PLATFORMS", "PlatformProfile",
 ]

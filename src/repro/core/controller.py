@@ -56,6 +56,7 @@ class ControllerRecord:
     silent: int
     action: str
     codec: str = DEFAULT_CODEC
+    shard: int = -1  # mesh shard whose canary was judged (-1: unsharded)
 
 
 class UndervoltController:
@@ -70,11 +71,13 @@ class UndervoltController:
         start_v: float | None = None,
         escalation: EscalationPolicy | None = None,
         codec: str | None = None,
+        shard: int = -1,
     ):
         self.platform = platform
         self.step_v = step_v
         self.backoff_steps = backoff_steps
         self.paranoid = paranoid
+        self.shard = int(shard)
         # Warm start: the guardband is fault-free by definition (paper §III),
         # so a search may legally begin anywhere in [v_min, v_nom].
         self.voltage = (
@@ -133,7 +136,7 @@ class UndervoltController:
         self.history.append(
             ControllerRecord(
                 self.voltage, stats.corrected, stats.detected, stats.silent,
-                action, self.codec,
+                action, self.codec, self.shard,
             )
         )
         return self.voltage
@@ -162,18 +165,21 @@ class MultiRailController:
         profiles: dict | None = None,
         escalation: EscalationPolicy | None = None,
         codecs: dict | None = None,
+        shard: int = -1,
     ):
         profiles = profiles or {}
         codecs = codecs or {}
         self.domains = tuple(domains)
         assert self.domains, "MultiRailController needs at least one domain"
         self._platform = platform
+        self.shard = int(shard)
         self._defaults = dict(
             step_v=step_v,
             backoff_steps=backoff_steps,
             paranoid=paranoid,
             start_v=start_v,
             escalation=escalation,
+            shard=shard,
         )
         self.rails = {
             d: UndervoltController(
@@ -238,4 +244,130 @@ class MultiRailController:
         for d, ctrl in self.rails.items():
             if d in by_domain:
                 ctrl.update(by_domain[d])
+        return self.voltages
+
+
+RAIL_POLICIES = ("uniform", "per_shard")
+
+
+class MeshRailController:
+    """Rail control across a mesh of chips (DESIGN.md §13).
+
+    Every reliability shard (data-parallel replica / chip) has its own fault
+    population, so its own safe V_min. Two policies:
+
+      * ``uniform`` — one MultiRailController fed the *psum-aggregated*
+        per-domain telemetry: any shard's DED event appears in the aggregate
+        counters, so the shared schedule locks at the worst shard's V_min
+        (the whole fleet runs one voltage per domain — simple supply
+        design, conservative power);
+      * ``per_shard`` — one MultiRailController per shard, each fed only its
+        own shard's counter rows: every chip walks to its own first-DED
+        point, modeling the per-board V_min spread the MLP undervolting
+        follow-up measures (maximum power saving, per-chip supplies).
+
+    On a 1-shard mesh both policies collapse to exactly the single
+    MultiRailController walk (the refactor's bit-identity anchor).
+    """
+
+    def __init__(
+        self,
+        platform: PlatformProfile,
+        domains,
+        n_shards: int,
+        policy: str = "uniform",
+        **defaults,
+    ):
+        assert policy in RAIL_POLICIES, (policy, RAIL_POLICIES)
+        assert n_shards >= 1, n_shards
+        self.policy = policy
+        self.n_shards = int(n_shards)
+        self.domains = tuple(domains)
+        if policy == "uniform":
+            self.shards = [MultiRailController(platform, domains, **defaults)]
+        else:
+            self.shards = [
+                MultiRailController(platform, domains, shard=s, **defaults)
+                for s in range(self.n_shards)
+            ]
+
+    def shard(self, s: int) -> MultiRailController:
+        """The MultiRailController judging shard ``s`` (the shared one under
+        the uniform policy)."""
+        return self.shards[0] if self.policy == "uniform" else self.shards[s]
+
+    def add_rail(self, domain: str, profile=None, codec=None) -> list:
+        """Attach a late-bound rail (the `kv` cache) on every shard's
+        controller; returns the per-shard rail list (length n_shards —
+        the uniform policy's single rail is shared across entries)."""
+        if domain not in self.domains:
+            self.domains = self.domains + (domain,)
+        return [self.shard(s).add_rail(domain, profile, codec) for s in range(self.n_shards)]
+
+    @property
+    def locked(self) -> bool:
+        return all(c.locked for c in self.shards)
+
+    def locked_for(self, domains) -> bool:
+        return all(
+            c.rails[d].locked for c in self.shards for d in domains
+        )
+
+    @property
+    def voltages(self) -> list:
+        """Per-shard {domain: voltage} schedule (length n_shards)."""
+        return [dict(self.shard(s).voltages) for s in range(self.n_shards)]
+
+    @property
+    def history(self) -> dict:
+        """{(shard, domain): [ControllerRecord]} across every rail walked."""
+        out = {}
+        for s in range(self.n_shards):
+            ctrl = self.shard(s)
+            for d, recs in ctrl.history.items():
+                out[(s if self.policy == "per_shard" else -1, d)] = recs
+            if self.policy == "uniform":
+                break
+        return out
+
+    @property
+    def codecs(self) -> dict:
+        """{domain: codec} of the shared walk (uniform) / shard 0 — mesh
+        stores carry one codec per domain (per-shard ladders are not
+        supported; see ServingEngine)."""
+        return dict(self.shards[0].codecs)
+
+    def pop_codec_changes(self) -> dict:
+        """Escalations since the last poll (uniform policy only — the store
+        applies them globally)."""
+        assert self.policy == "uniform", (
+            "per-shard codec escalation needs per-shard plane groups"
+        )
+        return self.shards[0].pop_codec_changes()
+
+    def update(self, stats) -> list:
+        """Feed one interval's mesh telemetry; returns the next per-shard
+        schedule.
+
+        ``stats``: a ShardFaultStats (per-shard rows), a list of
+        DomainFaultStats (one per shard), or — uniform policy only — a
+        single DomainFaultStats already reduced across shards.
+        """
+        by_shard = getattr(stats, "by_shard", stats)
+        if self.policy == "uniform":
+            if hasattr(by_shard, "by_domain"):  # already reduced
+                self.shards[0].update(by_shard)
+            else:
+                from repro.core.telemetry import DomainFaultStats
+
+                self.shards[0].update(DomainFaultStats.summed(by_shard))
+        else:
+            assert not hasattr(by_shard, "by_domain"), (
+                "per_shard policy needs per-shard telemetry rows"
+            )
+            assert len(by_shard) == self.n_shards, (
+                len(by_shard), self.n_shards,
+            )
+            for s, st in enumerate(by_shard):
+                self.shards[s].update(st)
         return self.voltages

@@ -236,6 +236,7 @@ class KVPageArena:
         seed: int = 0,
         ecc: bool = True,
         codec: str = "secded72",
+        shard: int = 0,
     ):
         self.geom = geom
         self.profile = profile
@@ -244,6 +245,11 @@ class KVPageArena:
         self.seed = int(seed)
         self.codec_name = str(codec)
         self.codec = codes.get(self.codec_name)
+        # Mesh shard identity (DESIGN.md §13): replica ``shard``'s arena is
+        # its own silicon, so its interval draws come from a shard-folded
+        # key — the same fold the shard_map'd weight path applies via
+        # lax.axis_index. Shard 0 keeps the historical stream bit-for-bit.
+        self.shard = int(shard)
         w = geom.words_per_page
         self.n_words = self.n_pages * w  # real (non-scratch) words
         total = (self.n_pages + 1) * w
@@ -255,6 +261,8 @@ class KVPageArena:
         self.parity = jnp.zeros((total,), jnp.dtype(self.codec.check_dtype))
         self.voltage = float(profile.v_nom)
         self._key = jax.random.PRNGKey(self.seed ^ 0xCACE)
+        if self.shard:
+            self._key = jax.random.fold_in(self._key, self.shard)
         self._interval = 0
         self.faulted = False  # True once any tick() injected a mask
         self.stats = FaultStats()  # cumulative scrub-on-read telemetry

@@ -31,6 +31,7 @@ import dataclasses
 import zlib
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -74,6 +75,26 @@ class _CodecGroup:
     dom_ids: Any  # (n_words,) jnp int32 (store-global domain indices)
     dom_ids_np: np.ndarray
     device_field: DeviceFaultField
+    sharded: Any = None  # _ShardedGroup when the store is mesh-sharded
+
+
+@dataclasses.dataclass
+class _ShardedGroup:
+    """Mesh-partitioned view of one codec group (DESIGN.md §13).
+
+    The group planes padded to a shard multiple and placed with the arena
+    NamedSharding: each reliability shard (chip) owns ``local_words``
+    contiguous words and draws their faults from its own per-shard stream
+    inside the shard_map'd rail step.
+    """
+
+    seed: int  # the group's device-stream seed (shard 0 reproduces it)
+    local_words: int
+    pad: int
+    lo: Any  # (n_shards * local_words,) uint32, sharded
+    hi: Any
+    check: Any
+    dom: Any  # (n_shards * local_words,) int32, spill index on pad words
 
 
 class PlaneStore:
@@ -99,14 +120,22 @@ class PlaneStore:
         domain_key=None,
         profiles=None,
         codecs=None,
+        mesh=None,
     ):
         assert mask_source in ("host", "device"), mask_source
         assert len(leaves) == len(set(keys)), "leaf keys must be unique"
         self.platform = platform
         self.seed = int(seed)
         self.mask_source = mask_source
+        self.mesh = mesh
+        if mesh is not None:
+            # Mesh-sharded arena (DESIGN.md §13): masks must be generated
+            # inside shard_map from per-shard streams — the host oracle has
+            # no shard identity.
+            assert mask_source == "device", "sharded arenas need device masks"
         self._profiles = dict(profiles or {})
         self._external_words: dict[str, int] = {}
+        self._external_shard_words: dict[int, dict[str, int]] = {}
         self._external_codecs: dict[str, str] = {}
         classify = domain_key if domain_key is not None else (lambda _k: "all")
         slots, off = [], 0
@@ -225,6 +254,8 @@ class PlaneStore:
                 )
             )
         self._groups = groups
+        if self.mesh is not None:
+            self._build_sharded_groups()
         # Per-leaf host oracle fields, keyed like the historical per-leaf
         # path; the check-bitplane count follows the slot's codec.
         self._host_fields = {}
@@ -237,6 +268,154 @@ class PlaneStore:
                     seed=leaf_seed(self.seed, s.key),
                     n_check=g.codec.n_check,
                 )
+
+    # -- mesh sharding (DESIGN.md §13) ---------------------------------------
+    @property
+    def n_shards(self) -> int:
+        """Reliability shard (chip) count; 0 when the store is unsharded."""
+        if self.mesh is None:
+            return 0
+        from repro.distributed.sharding import reliability_shards
+
+        return reliability_shards(self.mesh)
+
+    def _build_sharded_groups(self) -> None:
+        """Partition every codec group's planes across the mesh.
+
+        Word ``w`` of a group lands on shard ``w // local_words``; pad words
+        (zero data, spill domain index) fill the tail so every shard owns the
+        same word count. A 1-shard mesh adds no padding and shard 0 keeps the
+        group's device-stream seed, so the sharded step is bit-identical to
+        the unsharded device path (tested in tests/test_meshrel.py).
+        """
+        from repro.distributed import meshrel
+
+        n_shards = self.n_shards
+        sigmas = {self.domain_profile(d).row_sigma for d in self.domains}
+        assert len(sigmas) <= 1, (
+            "sharded arenas share one row-weakness field per chip; "
+            f"got sigmas {sorted(sigmas)}"
+        )
+        sharding = meshrel.arena_sharding(self.mesh)
+        spill = len(self.domains)
+        self._shard_words = [dict.fromkeys(self.domains, 0) for _ in range(n_shards)]
+        for g in self._groups:
+            padded = meshrel.pad_to_shards(g.n_words, n_shards)
+            pad = padded - g.n_words
+            dom_np = np.concatenate(
+                [g.dom_ids_np, np.full(pad, spill, np.int32)]
+            ) if pad else g.dom_ids_np
+            local = padded // n_shards if n_shards else 0
+            for s in range(n_shards):
+                counts = np.bincount(
+                    dom_np[s * local : (s + 1) * local], minlength=spill + 1
+                )
+                for i, d in enumerate(self.domains):
+                    self._shard_words[s][d] += int(counts[i])
+
+            def padded_plane(x, dtype=None):
+                x = jnp.asarray(x)
+                if pad:
+                    x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+                return jax.device_put(x, sharding)
+
+            g.sharded = _ShardedGroup(
+                seed=g.device_field.seed,
+                local_words=local,
+                pad=pad,
+                lo=padded_plane(g.lo),
+                hi=padded_plane(g.hi),
+                check=padded_plane(g.check),
+                dom=jax.device_put(jnp.asarray(dom_np), sharding),
+            )
+
+    def shard_words_by_domain(self) -> list:
+        """Per-shard {domain: words} (power weighting + per-shard telemetry
+        denominators), arena slices plus shard-registered external domains."""
+        assert self.mesh is not None
+        out = []
+        for s in range(self.n_shards):
+            d = dict(self._shard_words[s])
+            for dom, w in self._external_shard_words.get(s, {}).items():
+                d[dom] = d.get(dom, 0) + w
+            out.append(d)
+        return out
+
+    def _normalize_schedule(self, schedule) -> list:
+        """One {domain: voltage} dict per shard from any accepted form:
+        a single dict (uniform), a sequence of per-shard dicts, or a dict
+        whose values are per-shard sequences."""
+        n = self.n_shards
+        if isinstance(schedule, dict):
+            if any(np.ndim(v) for v in schedule.values()):
+                for d, v in schedule.items():
+                    assert np.ndim(v) == 0 or np.size(v) == n, (
+                        f"domain {d!r}: {np.size(v)} voltages for {n} shards"
+                    )
+                per = []
+                for s in range(n):
+                    per.append(
+                        {
+                            d: float(np.asarray(v).reshape(-1)[s])
+                            if np.ndim(v)
+                            else float(v)
+                            for d, v in schedule.items()
+                        }
+                    )
+                return per
+            # independent dicts: a caller adjusting one shard's entry must
+            # not silently retune every chip
+            return [dict(schedule) for _ in range(n)]
+        schedule = [dict(s) for s in schedule]
+        assert len(schedule) == n, (len(schedule), n)
+        return schedule
+
+    def set_rails_sharded(self, schedule, ecc: bool = True):
+        """Per-(shard, domain) voltage step across the whole mesh.
+
+        One shard_map'd fused inject+scrub launch per codec group: every
+        shard injects its own fault population at its own rails and tallies
+        its own counter rows; only the (n_shards, n_domains, 8) counter
+        block (plus its psum) crosses to host. Returns
+        (faulty_leaves, ShardFaultStats). A uniform schedule on a 1-shard
+        mesh is bit-identical to ``set_rails`` with device masks.
+        """
+        from repro.core.telemetry import ShardFaultStats
+        from repro.distributed import meshrel
+
+        assert self.mesh is not None, "set_rails_sharded needs a mesh"
+        schedule = self._normalize_schedule(schedule)
+        n_shards = self.n_shards
+        if self.n_words == 0:
+            return list(self._leaves), ShardFaultStats(
+                [DomainFaultStats(shard=s) for s in range(n_shards)]
+            )
+        profiles = {d: self.domain_profile(d) for d in self.domains}
+        sigma = next(iter({p.row_sigma for p in profiles.values()}))
+        rates = meshrel.schedule_rates(schedule, self.domains, profiles, n_shards)
+        total = np.zeros((n_shards, len(self.domains), 8), np.int64)
+        planes = {}
+        host = jax.devices()[0]
+        for g in self._groups:
+            sg = g.sharded
+            step = meshrel.make_rail_step(
+                self.mesh, sg.local_words, len(self.domains), g.name,
+                sg.seed, float(sigma), reencode=not ecc,
+            )
+            flo, fhi, fpar, per_shard, _agg = step(
+                sg.lo, sg.hi, sg.check, sg.dom, jnp.asarray(rates)
+            )
+            total += np.asarray(per_shard)
+            # The CPU engine's decode path is single-device, so the faulty
+            # planes are gathered once per rail step; a TP mesh would keep
+            # them sharded in place (the weights are consumed sharded).
+            planes[g.name] = tuple(
+                jax.device_put(x, host) for x in (flo, fhi, fpar)
+            )
+        stats = ShardFaultStats.from_counter_blocks(
+            total, self.domains, self.shard_words_by_domain()
+        )
+        return self._slice_leaves(planes), stats
 
     def set_domain_codec(self, domain: str, codec_name: str) -> None:
         """Re-protect ``domain`` under another registered code (the
@@ -265,7 +444,8 @@ class PlaneStore:
         return self._profiles.get(domain, self.platform)
 
     def register_domain_words(
-        self, domain: str, words: int, codec: str = DEFAULT_CODEC
+        self, domain: str, words: int, codec: str = DEFAULT_CODEC,
+        shard: int | None = None,
     ) -> None:
         """Account storage that lives *outside* the weight arena — e.g. the
         paged KV cache (core/kvpages.py) — under a named domain.
@@ -275,18 +455,30 @@ class PlaneStore:
         part of this store's fused inject+scrub launch, they carry their own
         fault machinery and report telemetry separately. ``codec`` records
         the external store's scheme for the redundancy-cost power weighting.
+        ``shard`` attributes the words to one reliability shard's chip (mesh
+        stores: each replica's KV arena is its own silicon); None registers
+        them store-wide (the unsharded path).
         """
-        self._external_words[str(domain)] = int(words)
+        if shard is None:
+            self._external_words[str(domain)] = int(words)
+        else:
+            self._external_shard_words.setdefault(int(shard), {})[str(domain)] = (
+                int(words)
+            )
         self._external_codecs[str(domain)] = str(codec)
 
     def words_by_domain(self) -> dict:
         """Word count per domain (power weighting + telemetry denominators),
-        arena slots plus any registered external domains."""
+        arena slots plus any registered external domains (shard-registered
+        externals contribute their cross-shard sum)."""
         counts = dict.fromkeys(self.domains, 0)
         for s in self.slots:
             counts[s.domain] += s.size
         for d, w in self._external_words.items():
             counts[d] = counts.get(d, 0) + w
+        for per in self._external_shard_words.values():
+            for d, w in per.items():
+                counts[d] = counts.get(d, 0) + w
         return counts
 
     # -- masks ---------------------------------------------------------------
@@ -348,6 +540,7 @@ class PlaneStore:
         EccWeight leaves with lo/hi/parity replaced by arena slices at rail
         voltage ``v`` (scale/k/n/fuse untouched).
         """
+        assert self.mesh is None, "mesh-sharded stores step via set_rails_sharded"
         if self.n_words == 0:
             return list(self._leaves), FaultStats()
         total = np.zeros(8, np.int64)
@@ -372,6 +565,7 @@ class PlaneStore:
         crosses to host. A uniform schedule is bit-identical to
         ``set_voltage`` (same fields/streams, same kernel math; tested).
         """
+        assert self.mesh is None, "mesh-sharded stores step via set_rails_sharded"
         missing = set(self.domains) - set(volts)
         assert not missing, f"rails missing for domains: {sorted(missing)}"
         if self.n_words == 0:

@@ -145,6 +145,72 @@ def sweep_platform_grid(
     ]
 
 
+def sweep_platform_grid_sharded(
+    grid,
+    n_words: int,
+    n_shards: int,
+    seed: int = 0,
+    chunk_words: int = 1 << 18,
+) -> list[list[SweepPoint]]:
+    """Per-shard (platform, voltage) grids: one sweep per mesh chip.
+
+    Every shard evaluates the same grid on its *own* fault population —
+    shard 0 on the unsharded stream (``sweep_platform_grid`` row-for-row),
+    shard s > 0 on ``fold_in(key, s)`` — the same key schedule the
+    shard_map'd rail step derives from ``lax.axis_index``. Returns
+    ``n_shards`` lists of SweepPoints; the per-shard first-DED voltages give
+    the chip-to-chip V_min spread (arXiv:2005.04737) without touching a
+    controller.
+    """
+    import jax
+
+    grid = list(grid)
+    if not grid or n_shards <= 0:
+        return [[] for _ in range(max(n_shards, 0))]
+    rates = np.array([p.fault_rate(float(v)) for p, v in grid], np.float32)
+    sigmas = np.array([p.row_sigma for p, _ in grid], np.float32)
+    fn = _grid_chunk_fn()
+    base = jax.random.PRNGKey(seed ^ 0xECC)
+    out = []
+    for s in range(n_shards):
+        key = base if s == 0 else jax.random.fold_in(base, s)
+        total = np.zeros((len(grid), 8), np.int64)
+        for ci, start in enumerate(range(0, n_words, chunk_words)):
+            m = min(chunk_words, n_words - start)
+            _dispatches["n"] += 1
+            total += np.asarray(fn(jax.random.fold_in(key, ci), rates, sigmas, m))
+        out.append(
+            [
+                SweepPoint(p.name, float(v), FaultStats.from_counters(total[i], n_words, shard=s))
+                for i, (p, v) in enumerate(grid)
+            ]
+        )
+    return out
+
+
+def shard_vmin_spread(profile, voltages, n_words: int, n_shards: int, seed: int = 0):
+    """First-DED voltage per shard on a descending voltage walk.
+
+    The mesh analogue of the paper's V_min measurement: walk ``voltages``
+    (descending) per shard and report the last voltage *before* its first
+    detected-uncorrectable event — the per-chip lock point a `per_shard`
+    rail policy converges to. Returns a list of n_shards voltages; ``None``
+    for a shard that DEDs already at the grid's top voltage (the grid holds
+    no safe point for that chip — callers must widen it, not lock there).
+    """
+    grid = [(profile, float(v)) for v in voltages]
+    per_shard = sweep_platform_grid_sharded(grid, n_words, n_shards, seed=seed)
+    out = []
+    for points in per_shard:
+        vmin = None
+        for pt in points:
+            if pt.stats.detected > 0:
+                break
+            vmin = pt.voltage
+        out.append(vmin)
+    return out
+
+
 def sweep_rail_schedules(
     schedules,
     domains,

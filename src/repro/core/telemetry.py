@@ -19,7 +19,14 @@ COUNTER_FIELDS = (
 
 @dataclasses.dataclass
 class FaultStats:
-    """Aggregated per-read fault statistics for one memory domain."""
+    """Aggregated per-read fault statistics for one memory domain.
+
+    ``shard`` records which mesh shard (chip / replica) produced the
+    counters: -1 means "unsharded or aggregated across shards". It is
+    bookkeeping, not a counter — ``accumulate`` never adds it, and merging
+    stats from different shards resets it to -1 so a cross-shard total can
+    never masquerade as one shard's telemetry.
+    """
 
     words: int = 0
     clean: int = 0  # syndrome 0, no ground-truth flips
@@ -31,6 +38,7 @@ class FaultStats:
     words_2bit: int = 0
     words_multi: int = 0
     faulty_bits: int = 0
+    shard: int = -1  # mesh shard id; -1 = unsharded / cross-shard aggregate
 
     def accumulate(self, other: "FaultStats") -> None:
         """Add ``other``'s counters into ``self``, in place.
@@ -39,14 +47,29 @@ class FaultStats:
         combinator but mutated the receiver, so call sites could silently
         alias the accumulator. Use ``FaultStats.summed`` for a pure merge.
         """
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        for f in ("words",) + COUNTER_FIELDS:
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        if self.shard != other.shard:
+            self.shard = -1
 
     @classmethod
     def summed(cls, stats) -> "FaultStats":
-        """Pure merge: a fresh FaultStats totalling an iterable of stats."""
+        """Pure merge: a fresh FaultStats totalling an iterable of stats.
+
+        Entries may be plain FaultStats or any container exposing ``total()``
+        (DomainFaultStats, ShardFaultStats) — the cross-shard / cross-domain
+        reduction helper the mesh telemetry path leans on. The result's
+        ``shard`` is that of the inputs when they agree, -1 otherwise (an
+        aggregate over shards is not one shard's row).
+        """
         out = cls()
+        first = True
         for s in stats:
+            if not isinstance(s, FaultStats):
+                s = s.total()
+            if first:
+                out.shard = s.shard
+                first = False
             out.accumulate(s)
         return out
 
@@ -64,11 +87,11 @@ class FaultStats:
         }
 
     @classmethod
-    def from_counters(cls, counters, words: int) -> "FaultStats":
+    def from_counters(cls, counters, words: int, shard: int = -1) -> "FaultStats":
         """Build stats from the fused kernel's device-reduced counter vector."""
         c = np.asarray(counters).reshape(-1)
         assert c.size >= len(COUNTER_FIELDS), c.shape
-        return cls(words=int(words), **{
+        return cls(words=int(words), shard=int(shard), **{
             f: int(c[i]) for i, f in enumerate(COUNTER_FIELDS)
         })
 
@@ -78,7 +101,7 @@ class FaultStats:
 
     @classmethod
     def from_counter_matrix(
-        cls, counters, names, words_by_domain
+        cls, counters, names, words_by_domain, shard: int = -1
     ) -> "DomainFaultStats":
         """Build per-domain stats from the kernel's (n_domains, 8+) counter
         block (row order == ``names`` == the store's domain order)."""
@@ -86,9 +109,10 @@ class FaultStats:
         assert c.shape[0] == len(names) and c.shape[1] >= len(COUNTER_FIELDS), c.shape
         return DomainFaultStats(
             {
-                d: cls.from_counters(c[i], words=words_by_domain[d])
+                d: cls.from_counters(c[i], words=words_by_domain[d], shard=shard)
                 for i, d in enumerate(names)
-            }
+            },
+            shard=int(shard),
         )
 
     @classmethod
@@ -119,10 +143,12 @@ class DomainFaultStats:
     """Per-memory-domain fault statistics (multi-rail telemetry).
 
     Thin ordered mapping domain name -> FaultStats; iteration order is the
-    store's domain order (== the kernel's counter row order).
+    store's domain order (== the kernel's counter row order). ``shard``
+    tags which mesh shard the rows came from (-1: unsharded / aggregated).
     """
 
     by_domain: dict[str, FaultStats] = dataclasses.field(default_factory=dict)
+    shard: int = -1
 
     def __getitem__(self, domain: str) -> FaultStats:
         return self.by_domain[domain]
@@ -143,7 +169,77 @@ class DomainFaultStats:
 
     def accumulate(self, other: "DomainFaultStats") -> None:
         for d, st in other.by_domain.items():
-            self.by_domain.setdefault(d, FaultStats()).accumulate(st)
+            self.by_domain.setdefault(d, FaultStats(shard=st.shard)).accumulate(st)
+        if self.shard != other.shard:
+            self.shard = -1
+
+    @classmethod
+    def summed(cls, stats) -> "DomainFaultStats":
+        """Pure cross-shard reduction: sum an iterable of DomainFaultStats
+        into one fresh per-domain view (domain rows keep their identity,
+        shard tags collapse to -1 unless every input is the same shard)."""
+        out = cls()
+        first = True
+        for s in stats:
+            if first:
+                out.shard = s.shard
+                first = False
+            out.accumulate(s)
+        return out
 
     def coverage(self) -> dict:
         return {d: st.coverage() for d, st in self.by_domain.items()}
+
+
+@dataclasses.dataclass
+class ShardFaultStats:
+    """Per-shard, per-domain fault statistics (mesh-sharded telemetry).
+
+    One DomainFaultStats per mesh shard, in shard order — the host view of
+    the (n_shards, n_domains, 8) counter block the shard_map'd inject+scrub
+    step returns. ``reduced()`` is the explicit cross-shard reduction; the
+    per-shard rows are never silently collapsed (a `per_shard` rail walk
+    needs every shard's own DED canary row).
+    """
+
+    by_shard: list = dataclasses.field(default_factory=list)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.by_shard)
+
+    @property
+    def domains(self) -> tuple[str, ...]:
+        return self.by_shard[0].domains if self.by_shard else ()
+
+    def __getitem__(self, shard: int) -> DomainFaultStats:
+        return self.by_shard[shard]
+
+    @classmethod
+    def from_counter_blocks(
+        cls, counters, names, words_by_shard
+    ) -> "ShardFaultStats":
+        """Build from the sharded kernel's (n_shards, n_domains, 8+) counter
+        block; ``words_by_shard`` is one {domain: words} dict per shard."""
+        c = np.asarray(counters)
+        assert c.ndim == 3 and c.shape[0] == len(words_by_shard), c.shape
+        return cls(
+            [
+                FaultStats.from_counter_matrix(c[s], names, words_by_shard[s], shard=s)
+                for s in range(c.shape[0])
+            ]
+        )
+
+    def reduced(self) -> DomainFaultStats:
+        """Cross-shard reduction to one per-domain view (the psum picture:
+        what a single-counter log would have recorded)."""
+        return DomainFaultStats.summed(self.by_shard)
+
+    def total(self) -> FaultStats:
+        return self.reduced().total()
+
+    def accumulate(self, other: "ShardFaultStats") -> None:
+        while len(self.by_shard) < len(other.by_shard):
+            self.by_shard.append(DomainFaultStats(shard=len(self.by_shard)))
+        for s, st in enumerate(other.by_shard):
+            self.by_shard[s].accumulate(st)

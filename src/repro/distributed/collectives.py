@@ -1,5 +1,6 @@
-"""Distributed-optimization collectives: int8-compressed gradient all-reduce
-with error feedback, as a shard_map'd pure-DP train step.
+"""Distributed collectives: the reliability layer's shard-index / counter-psum
+primitives (DESIGN.md §13) plus the int8-compressed gradient all-reduce with
+error feedback, as a shard_map'd pure-DP train step.
 
 4x less DP all-reduce traffic; the quantization residual is carried in an
 error-feedback buffer so the compression bias vanishes over steps (EF-SGD,
@@ -20,6 +21,46 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models import lm
 from repro.optim import adamw
+
+
+def shard_index(axes) -> jnp.ndarray:
+    """Row-major linear shard index over one or more mesh axes.
+
+    Only meaningful inside shard_map / pmap over exactly ``axes``. The
+    reliability layer folds this into the fault-field PRNG key so every
+    shard (chip / replica) draws its own independent fault population
+    (DESIGN.md §13); shard 0 keeps the unsharded key so a 1-device mesh is
+    bit-identical to the historical stream.
+    """
+    if isinstance(axes, str):
+        axes = (axes,)
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def shard_key(base_key, axes):
+    """Per-shard PRNG key: the base key on shard 0 (bit-identity anchor for
+    the 1-device mesh), ``fold_in(base, shard)`` everywhere else — so no
+    shard can reproduce another's fault masks while the unsharded stream is
+    preserved exactly where the refactor's correctness anchor needs it."""
+    idx = shard_index(axes)
+    return jnp.where(idx == 0, base_key, jax.random.fold_in(base_key, idx))
+
+
+def psum_counters(counters, axes):
+    """Cross-shard reduction of an ECC counter block inside shard_map.
+
+    The only collective the reliability layer issues per rail step: a few
+    hundred int32 lanes, regardless of arena size (DESIGN.md §13 traffic
+    accounting). Accepts one axis name or a tuple (the batch super-axis).
+    """
+    if isinstance(axes, str):
+        axes = (axes,)
+    for a in axes:
+        counters = jax.lax.psum(counters, a)
+    return counters
 
 
 def quantize_int8(x: jnp.ndarray):

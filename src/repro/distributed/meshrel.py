@@ -1,0 +1,227 @@
+"""Mesh-sharded reliability layer (DESIGN.md §13).
+
+The reliability stack from DESIGN.md §9–§12 — the PlaneStore arena, the paged
+KV cache, the fused inject+scrub and scrub-on-read kernels, the multi-rail
+controller — was single-device: one chip, one fault population, one rail set.
+At production scale every replica/shard is its own chip with its own silicon
+(MoRS models per-SRAM fault-map variation; the MLP undervolting follow-up
+measures per-board V_min spread), so this module makes the layer mesh-native:
+
+  * the flat word arenas are partitioned across the mesh's *reliability
+    shard axes* (the batch super-axis — each data-parallel replica is one
+    chip whose rails move together; TP inside a replica shares the board);
+  * the fused inject+scrub and paged scrub-on-read kernels run under
+    ``shard_map``: every shard generates its own ``DeviceFaultField`` masks
+    with ``collectives.shard_key`` (``jax.lax.axis_index`` folded into the
+    PRNG key), so shards draw independent fault populations — shard 0 keeps
+    the unsharded key, the bit-identity anchor for the 1-device mesh;
+  * per-shard (n_shards, n_domains, 8) counter blocks come back alongside a
+    ``collectives.psum_counters`` aggregate, so both rail policies are fed:
+    `uniform` (one schedule, worst-shard canary via the psum view) and
+    `per_shard` (each shard walks its own V_min).
+
+Collective traffic per rail step: one counter psum of n_domains x 128 int32
+lanes — independent of arena size. The plane data itself never crosses
+shards (each chip scrubs its own words); the CPU serving engine additionally
+gathers the faulty planes to one device because its decode path is
+single-device (a real TP mesh would consume them sharded in place).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import codes
+from repro.core.faultsim import _check_dtype, _device_chunk_masks
+from repro.distributed import collectives
+from repro.distributed.sharding import reliability_axes, reliability_shards
+from repro.kernels import ops as kops
+
+__all__ = [
+    "arena_sharding",
+    "make_kv_scrub_step",
+    "make_rail_step",
+    "pad_to_shards",
+    "reliability_axes",
+    "reliability_shards",
+    "schedule_rates",
+]
+
+
+def _axes_spec(axes) -> P:
+    return P(axes[0] if len(axes) == 1 else tuple(axes))
+
+
+def arena_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding partitioning a flat (n_words,) arena over the
+    reliability shard axes (word count must be a multiple of the shard
+    count — ``pad_to_shards`` arranges that)."""
+    return NamedSharding(mesh, _axes_spec(reliability_axes(mesh)))
+
+
+def pad_to_shards(n: int, n_shards: int) -> int:
+    """Padded word count: the smallest multiple of ``n_shards`` >= n."""
+    return -(-n // n_shards) * n_shards
+
+
+def _chunked_shard_masks(key, local_n, rates_w, sigma, n_check, chunk_words):
+    """Per-shard flip masks over ``local_n`` flat words, chunked exactly like
+    ``DeviceFaultField.masks_for_rates`` (fold_in per chunk index) so the
+    1-shard mesh reproduces the unsharded device stream bit-for-bit."""
+    los, his, pars = [], [], []
+    for ci, start in enumerate(range(0, local_n, chunk_words)):
+        m = min(chunk_words, local_n - start)
+        lo, hi, par = _device_chunk_masks(
+            jax.random.fold_in(key, ci), m, rates_w[start : start + m],
+            sigma, n_check=n_check,
+        )
+        los.append(lo)
+        his.append(hi)
+        pars.append(par)
+    if not los:
+        z32 = jnp.zeros((0,), jnp.uint32)
+        return z32, z32, jnp.zeros((0,), jnp.dtype(_check_dtype(n_check)))
+    if len(los) == 1:
+        return los[0], his[0], pars[0]
+    return jnp.concatenate(los), jnp.concatenate(his), jnp.concatenate(pars)
+
+
+@functools.lru_cache(maxsize=None)
+def make_rail_step(
+    mesh: Mesh,
+    local_words: int,
+    n_domains: int,
+    codec: str,
+    seed: int,
+    row_sigma: float,
+    reencode: bool = False,
+    chunk_words: int = 1 << 18,
+):
+    """Build the shard_map'd fused inject+scrub step for one codec group.
+
+    Returns a jitted callable
+        fn(lo, hi, check, dom, rates) ->
+            (faulty_lo, faulty_hi, faulty_check,
+             per_shard_counters (n_shards, n_domains, 8),
+             psum_counters (n_domains, 8))
+    where the planes are flat (n_shards * local_words,) arrays sharded over
+    the mesh's reliability axes, ``dom`` the per-word domain index (spill
+    index ``n_domains`` for pad words), and ``rates`` an
+    (n_shards, n_domains + 1) per-(shard, domain) fault-rate table (spill
+    column 0.0). Every shard draws its masks from its own stream
+    (collectives.shard_key); the counter psum is the step's only collective.
+    """
+    axes = reliability_axes(mesh)
+    codec_obj = codes.get(codec)
+    base_key = jax.random.PRNGKey(seed ^ 0xECC)
+    sigma = jnp.float32(row_sigma)
+    spec = _axes_spec(axes)
+
+    def body(lo, hi, check, dom, rates):
+        key = collectives.shard_key(base_key, axes)
+        rates_w = rates[0][dom]  # (local_words,) per-word fault rate
+        mlo, mhi, mpar = _chunked_shard_masks(
+            key, local_words, rates_w, sigma, codec_obj.n_check, chunk_words
+        )
+        flo, fhi, fpar, cnt = kops.inject_scrub_domains(
+            lo, hi, check, mlo, mhi, mpar, dom, n_domains,
+            codec=codec, reencode=reencode,
+        )
+        agg = collectives.psum_counters(cnt, axes)
+        return flo, fhi, fpar, cnt[None], agg
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec, spec, spec, spec, spec),
+        out_specs=(spec, spec, spec, spec, P()),
+        check_rep=False,
+    )
+    # counters come back already sliced to the 8 telemetry lanes:
+    # kops.inject_scrub_domains drops the lane padding and the spill row
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def make_kv_scrub_step(
+    mesh: Mesh,
+    words_per_page: int,
+    local_words: int,
+    table_cols: int,
+    codec: str = "secded72",
+):
+    """Shard_map'd paged scrub-on-read over per-replica KV arenas.
+
+    The planes are the ``n_shards`` replicas' arenas stacked flat
+    ((n_shards * local_words,), sharded over the reliability axes); ``table``
+    is one (table_cols,) page-id row per shard (scratch-page filler for
+    unused columns, ids local to the replica's arena). Each shard gathers
+    its own rows, runs the scrub-on-read kernel, writes corrected planes
+    back, and contributes its (table_cols, 8) counter rows; no plane word
+    ever crosses a shard boundary. Returns a jitted callable
+        fn(lo, hi, par, table) -> (lo, hi, par, payload_lo, payload_hi,
+                                   counters (n_shards, table_cols, 8))
+    """
+    from repro.kernels import paged_gather
+
+    axes = reliability_axes(mesh)
+    spec = _axes_spec(axes)
+    interpret = kops.use_interpret()
+
+    def body(lo, hi, par, table):
+        idx = table[0][:, None] * words_per_page + jnp.arange(
+            words_per_page, dtype=jnp.int32
+        )
+        olo, ohi, opar, cnt = paged_gather.gather_scrub_pages(
+            lo[idx], hi[idx], par[idx], codec=codec, interpret=interpret
+        )
+        return (
+            lo.at[idx].set(olo),
+            hi.at[idx].set(ohi),
+            par.at[idx].set(opar),
+            olo[None],
+            ohi[None],
+            cnt[None],
+        )
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, spec, spec, spec, spec, spec),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Host-side helpers for the per-(shard, domain) rail schedule
+# ---------------------------------------------------------------------------
+def schedule_rates(
+    schedule, domains, profiles, n_shards: int
+) -> np.ndarray:
+    """(n_shards, n_domains + 1) fault-rate table for a rail schedule.
+
+    ``schedule``: one {domain: voltage} dict (uniform across shards) or a
+    sequence of ``n_shards`` of them (per-shard rails). ``profiles`` maps
+    domain -> PlatformProfile. The trailing spill column is rate 0 — pad
+    words never fault and never count.
+    """
+    if isinstance(schedule, dict):
+        schedule = [schedule] * n_shards
+    schedule = list(schedule)
+    assert len(schedule) == n_shards, (len(schedule), n_shards)
+    rates = np.zeros((n_shards, len(domains) + 1), np.float32)
+    for s, volts in enumerate(schedule):
+        missing = set(domains) - set(volts)
+        assert not missing, f"shard {s} rails missing domains: {sorted(missing)}"
+        for i, d in enumerate(domains):
+            rates[s, i] = profiles[d].fault_rate(float(volts[d]))
+    return rates

@@ -33,6 +33,25 @@ def batch_axes(mesh: Mesh) -> tuple:
     return tuple(n for n in ("pod", "data") if n in mesh.axis_names)
 
 
+def reliability_axes(mesh: Mesh) -> tuple:
+    """Mesh axes the reliability layer shards over (DESIGN.md §13).
+
+    One reliability shard = one chip with its own voltage rails and fault
+    population. The repo's mesh convention places TP inside a replica whose
+    memories share a board/rail, so the shard unit is the data-parallel
+    replica: the batch super-axis ("pod", "data"). A mesh without batch
+    axes (kernel micro-harnesses) treats every axis as a shard axis — each
+    device is then its own chip.
+    """
+    ba = batch_axes(mesh)
+    return ba if ba else tuple(mesh.axis_names)
+
+
+def reliability_shards(mesh: Mesh) -> int:
+    """Chip count of the reliability layer on ``mesh`` (rail-set count)."""
+    return _axes_size(mesh, reliability_axes(mesh))
+
+
 def _axes_size(mesh: Mesh, axes: tuple) -> int:
     return math.prod(mesh.shape[a] for a in axes)
 

@@ -1,6 +1,15 @@
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# 512 fake hosts by default. An externally-forced device count wins (the CI
+# mesh smoke job runs this module with 8 and --mesh host), but unrelated
+# pre-set XLA flags are preserved rather than treated as an override — a
+# developer's exported tuning flag must not silently drop the mesh to one
+# real CPU device.
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+if _FORCE_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = " ".join(
+        f for f in (os.environ.get("XLA_FLAGS", ""), f"{_FORCE_FLAG}=512") if f
+    )
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -29,10 +38,10 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, get_config, input_specs, supported_shapes
+from repro.configs import ARCHS, get_config, get_smoke_config, input_specs, supported_shapes
 from repro.configs.shapes import SHAPES
 from repro.distributed import sharding as shd
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import lm
 from repro.optim import adamw
 from repro.serving import steps as serve_steps
@@ -356,7 +365,10 @@ def _analysis_counts(cfg, shape_name, mesh, overrides):
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, kv_quant=False,
-             pad_heads: int = 0, label: str | None = None, **overrides) -> dict:
+             pad_heads: int = 0, label: str | None = None,
+             mesh_kind: str = "production", host_model: int = 1,
+             smoke: bool = False, memory_only: bool = False,
+             **overrides) -> dict:
     """Per cell:
       * memory pass — full depth, scans intact: memory_analysis + the
         compile-success proof (this is what would run on the pod);
@@ -367,14 +379,19 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, kv_quant=False,
     """
     import dataclasses as _dc
 
-    cfg = get_config(arch)
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
     if kv_quant:
         cfg = _dc.replace(cfg, kv_quant=True)
     if pad_heads:
         # beyond-paper optimization: pad q-heads up to a TP-divisible count
         # (zero-initialised extra heads; +pad/H FLOPs, restores 16-way TP)
         cfg = _dc.replace(cfg, n_heads=pad_heads)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if mesh_kind == "host":
+        # CI mesh smoke: whatever fake host devices the job forced, so the
+        # sharding rules and SPMD lowering run on every PR, not just at 512.
+        mesh = make_host_mesh(model=host_model)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     chips = math.prod(mesh.shape.values())
     rec = {
         "arch": arch, "shape": shape_name,
@@ -383,11 +400,33 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, kv_quant=False,
     }
     if label:
         rec["label"] = label
+    # Degraded cells must be distinguishable from (and never cache-block)
+    # the full-size, full-analysis record for the same (arch, shape, mesh).
+    if smoke:
+        rec["smoke"] = True
+    if memory_only:
+        rec["analysis"] = "memory_only"
     t0 = time.time()
     try:
         compiled = _lower_compile(cfg, shape_name, mesh, overrides)
         ma = compiled.memory_analysis()
         t_mem_pass = time.time() - t0
+        if memory_only:
+            # Compile-success proof + memory pass only (the CI smoke lane):
+            # the roofline analysis passes triple the compile count.
+            arg_b = ma.argument_size_in_bytes if ma else 0
+            tmp_b = ma.temp_size_in_bytes if ma else 0
+            out_b = ma.output_size_in_bytes if ma else 0
+            rec.update(
+                memory=dict(
+                    argument_bytes=arg_b, temp_bytes=tmp_b, output_bytes=out_b,
+                    peak_est_gib=(arg_b + tmp_b) / 2**30,
+                    fits_16g=(arg_b + tmp_b) < 16 * 2**30,
+                ),
+                seconds=dict(memory_pass=t_mem_pass, build=time.time() - t0),
+            )
+            rec.setdefault("seconds", {})["total"] = time.time() - t0
+            return rec
 
         flops_dev, hlo_bytes_dev, coll_dev, coll_counts = _analysis_counts(
             cfg, shape_name, mesh, overrides
@@ -455,11 +494,24 @@ def main() -> None:
     ap.add_argument("--kv-quant", action="store_true", help="int8 KV cache")
     ap.add_argument("--pad-heads", type=int, default=0, help="pad q-heads to N")
     ap.add_argument("--label", default=None, help="tag for hillclimb records")
+    ap.add_argument("--mesh", default="production", choices=["production", "host"],
+                    help="host: mesh over the forced host devices (CI smoke)")
+    ap.add_argument("--host-mesh-model", type=int, default=1,
+                    help="TP ways of the host mesh (--mesh host)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke-size configs (CI: lowering coverage, not scale)")
+    ap.add_argument("--memory-only", action="store_true",
+                    help="skip the roofline analysis passes (1 compile per cell)")
     ap.add_argument("--out", default="benchmarks/out/dryrun.json")
     args = ap.parse_args()
 
     archs = [a for a in ARCHS if a != "paper-nn"] if args.arch == "all" else [args.arch]
-    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.mesh == "host":
+        # one host mesh shape regardless of the pod flags — --both-meshes
+        # would lower every cell twice under the same record key
+        meshes = [False]
+    else:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     results = []
@@ -468,7 +520,10 @@ def main() -> None:
             results = json.load(f)
 
     def key(r):
-        return (r["arch"], r["shape"], r["mesh"], r.get("label"))
+        return (
+            r["arch"], r["shape"], r["mesh"], r.get("label"),
+            r.get("smoke", False), r.get("analysis"),
+        )
 
     done = {key(r) for r in results if r.get("status") == "ok"}
 
@@ -481,8 +536,18 @@ def main() -> None:
                 print(f"SKIP {arch} x {shape} (not applicable)")
                 continue
             for mp in meshes:
-                mesh_name = "2x16x16" if mp else "16x16"
-                if (arch, shape, mesh_name) in done:
+                if args.mesh == "host":
+                    n = len(jax.devices())
+                    mesh_name = (
+                        f"{n // args.host_mesh_model}x{args.host_mesh_model}"
+                    )
+                else:
+                    mesh_name = "2x16x16" if mp else "16x16"
+                cur = (
+                    arch, shape, mesh_name, args.label, args.smoke,
+                    "memory_only" if args.memory_only else None,
+                )
+                if cur in done:
                     print(f"CACHED {arch} x {shape} @ {mesh_name}")
                     continue
                 print(f"RUN {arch} x {shape} @ {mesh_name} ...", flush=True)
@@ -492,17 +557,26 @@ def main() -> None:
                     sharding_mode=args.sharding,
                     ecc_serve=args.ecc and SHAPES[shape].kind != "train",
                     kv_quant=args.kv_quant, pad_heads=args.pad_heads,
-                    label=args.label,
+                    label=args.label, mesh_kind=args.mesh,
+                    host_model=args.host_mesh_model, smoke=args.smoke,
+                    memory_only=args.memory_only,
                 )
                 results = [r for r in results if key(r) != key(rec)] + [rec]
                 with open(args.out, "w") as f:
                     json.dump(results, f, indent=1)
-                if rec["status"] == "ok":
+                if rec["status"] == "ok" and "t_compute_s" in rec:
                     print(
                         f"  ok: t_comp={rec['t_compute_s']:.3e}s "
                         f"t_mem={rec['t_memory_s']:.3e}s "
                         f"t_coll={rec['t_collective_s']:.3e}s "
                         f"bottleneck={rec['bottleneck']} "
+                        f"mem/chip={rec['memory']['peak_est_gib']:.2f}GiB "
+                        f"({rec['seconds']['total']:.0f}s)",
+                        flush=True,
+                    )
+                elif rec["status"] == "ok":
+                    print(
+                        f"  ok (memory-only): "
                         f"mem/chip={rec['memory']['peak_est_gib']:.2f}GiB "
                         f"({rec['seconds']['total']:.0f}s)",
                         flush=True,

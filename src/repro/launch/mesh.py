@@ -42,3 +42,24 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     assert n % model == 0, (n, model)
     return compat_make_mesh((n // model, model), ("data", "model"))
+
+
+def make_reliability_mesh(n_shards: int | None = None, model: int = 1):
+    """Mesh for the sharded reliability layer (DESIGN.md §13).
+
+    ``n_shards`` data-parallel replicas (default: every available device) x
+    ``model`` TP ways; the "data" axis is the reliability shard axis — one
+    replica = one chip with its own rails and fault population. Unlike
+    ``make_host_mesh`` this may use a *subset* of the devices, so a 1-shard
+    mesh (the bit-identity anchor) can be built in a forced-8-device
+    process alongside the full-width one.
+    """
+    import numpy as np
+
+    n = len(jax.devices())
+    if n_shards is None:
+        assert n % model == 0, (n, model)
+        n_shards = n // model
+    assert n_shards * model <= n, (n_shards, model, n)
+    devs = np.array(jax.devices()[: n_shards * model]).reshape(n_shards, model)
+    return jax.sharding.Mesh(devs, ("data", "model"))

@@ -28,6 +28,7 @@ import numpy as np
 from repro.configs import shapes
 from repro.core import (
     EscalationPolicy,
+    MeshRailController,
     MultiRailController,
     UndervoltController,
     voltage as vmod,
@@ -36,7 +37,7 @@ from repro.core.faultsim import FaultField
 from repro.core.kvpages import PAGE_TOKENS, KVGeometry, KVPageArena
 from repro.core.memory import EccMemoryDomain
 from repro.core.planestore import PlaneStore, leaf_seed
-from repro.core.telemetry import DomainFaultStats, FaultStats
+from repro.core.telemetry import DomainFaultStats, FaultStats, ShardFaultStats
 from repro.kernels import ops as kops
 from repro.models import lm
 from repro.models.base import ModelConfig
@@ -85,6 +86,10 @@ class ReliabilityConfig:
     # DED trip a rail steps up its code instead of retreating (see
     # core/controller.py); the redundancy cost lands in power_report.
     escalation: Any = None
+    # Mesh rail policy (DESIGN.md §13; engines built with a mesh):
+    # "uniform" locks one schedule at the worst shard's first DED;
+    # "per_shard" walks every chip to its own V_min.
+    rail_policy: str = "uniform"
 
     @property
     def embed_protected(self) -> bool:
@@ -178,11 +183,28 @@ class ServingEngine:
         params,
         rel: ReliabilityConfig | None = None,
         max_len: int = 512,
+        mesh=None,
     ):
         self.cfg = cfg
         self.rel = rel
         self.max_len = max_len
+        self.mesh = mesh
         self.platform = vmod.PLATFORMS[rel.platform] if rel else None
+        if mesh is not None:
+            # Mesh-sharded reliability (DESIGN.md §13): every reliability
+            # shard is its own chip with its own fault population and rails.
+            assert rel is not None and rel.multi_rail and rel.mode == "inline", (
+                "mesh engines drive the multi-rail batched plane arena"
+            )
+            assert rel.mask_source == "device", (
+                "mesh engines need device masks (per-shard streams live "
+                "inside shard_map)"
+            )
+            shapes.rail_policy(rel.rail_policy)
+            assert rel.rail_policy == "uniform" or rel.escalation is None, (
+                "per-shard codec escalation needs per-shard plane groups; "
+                "use rail_policy='uniform' with an escalation ladder"
+            )
         self.controller = (
             UndervoltController(
                 self.platform,
@@ -193,8 +215,9 @@ class ServingEngine:
             if rel and not rel.multi_rail
             else None  # multi-rail controller is built once the arena exists
         )
-        self.rails = None  # {domain: voltage} when multi_rail
+        self.rails = None  # {domain: voltage} when multi_rail; [dict] per shard on a mesh
         self.rail_stats = DomainFaultStats()  # cumulative per-domain telemetry
+        self.shard_stats = ShardFaultStats()  # cumulative per-shard rows (mesh)
         self.stats = FaultStats()
         self._clean_params = params
         if rel is None:
@@ -263,12 +286,11 @@ class ServingEngine:
                 domain_key=shapes.domain_of if rel.multi_rail else None,
                 profiles=rail_profiles,
                 codecs=store_codecs,
+                mesh=mesh,
             )
             self.voltage = rel.voltage or self.platform.v_nom
             if rel.multi_rail:
-                self.controller = MultiRailController(
-                    self.platform,
-                    self._store.domains,
+                rail_kw = dict(
                     step_v=rel.controller_step_v,
                     paranoid=rel.paranoid,
                     start_v=rel.controller_start_v,
@@ -281,6 +303,18 @@ class ServingEngine:
                         d: self._store.codec_of(d) for d in self._store.domains
                     },
                 )
+                if mesh is not None:
+                    self.controller = MeshRailController(
+                        self.platform,
+                        self._store.domains,
+                        self._store.n_shards,
+                        policy=rel.rail_policy,
+                        **rail_kw,
+                    )
+                else:
+                    self.controller = MultiRailController(
+                        self.platform, self._store.domains, **rail_kw
+                    )
                 self.set_rails({d: self.voltage for d in self._store.domains})
             else:
                 self.set_voltage(self.voltage)
@@ -320,6 +354,8 @@ class ServingEngine:
         them would silently skew the power accounting, which weights every
         domain in ``words_by_domain`` including the registered cache words."""
         assert self.rel is not None and self.rel.multi_rail
+        if self.mesh is not None:
+            return self._set_rails_mesh(volts)
         new = {d: float(v) for d, v in volts.items()}
         if self.rails:
             new = {**self.rails, **new}
@@ -330,6 +366,33 @@ class ServingEngine:
         self.rail_stats.accumulate(dstats)
         self.stats.accumulate(dstats.total())
         self._last_scrub = dstats
+
+    def _set_rails_mesh(self, volts):
+        """Mesh rail step: one shard_map'd fused launch per codec group,
+        every chip at its own schedule (DESIGN.md §13). ``volts`` is any
+        form ``PlaneStore._normalize_schedule`` accepts — one dict, a
+        per-shard list, or per-shard value arrays."""
+        schedule = self._store._normalize_schedule(volts)
+        if self.rails:
+            schedule = [
+                {**old, **{d: float(v) for d, v in new.items()}}
+                for old, new in zip(self.rails, schedule)
+            ]
+        else:
+            schedule = [
+                {d: float(v) for d, v in s.items()} for s in schedule
+            ]
+        self.rails = schedule
+        self.voltage = max(v for s in schedule for v in s.values())
+        leaves, sstats = self._store.set_rails_sharded(
+            schedule, ecc=self.rel.ecc
+        )
+        self.params = self._reassemble_params(leaves)
+        self.shard_stats.accumulate(sstats)
+        reduced = sstats.reduced()
+        self.rail_stats.accumulate(reduced)
+        self.stats.accumulate(reduced.total())
+        self._last_scrub = sstats
 
     def _leaf_codec(self, key: str) -> str:
         if self.rel.multi_rail:
@@ -448,10 +511,28 @@ class ServingEngine:
         ``walk_kv`` (multi-rail engines): attach a `kv` rail to the
         MultiRailController and let the per-interval scrub DED counters walk
         the cache voltage independently of the weight rails.
+
+        Mesh engines (DESIGN.md §13) serve the stream data-parallel: the
+        requests are partitioned round-robin across the reliability shards,
+        every replica runs its own continuous-batching loop over its own
+        KV arena (its own chip: per-shard fault stream, per-shard `kv` rail
+        under the `per_shard` policy) and the merged MeshServeReport carries
+        both the per-shard rows and the cross-shard aggregate.
         """
         assert shapes.supports_paged_kv(self.cfg), (
             f"{self.cfg.name}: paged KV unsupported (see shapes.supports_paged_kv)"
         )
+        if self.mesh is not None:
+            return self._serve_mesh(
+                requests,
+                n_lanes=n_lanes,
+                page_tokens=page_tokens,
+                n_pages=n_pages,
+                scrub_interval=scrub_interval,
+                max_block=max_block,
+                kv_voltage=kv_voltage,
+                walk_kv=walk_kv,
+            )
         profile = self.platform or vmod.PLATFORMS["vc707"]
         if self.rel is not None and self.rel.multi_rail:
             profile = self._store.domain_profile("kv")
@@ -527,6 +608,104 @@ class ServingEngine:
         self.kv_arena = arena
         return report
 
+    def _serve_mesh(
+        self,
+        requests,
+        *,
+        n_lanes: int,
+        page_tokens: int,
+        n_pages: int | None,
+        scrub_interval: int,
+        max_block: int,
+        kv_voltage: float | None,
+        walk_kv: bool,
+    ) -> "sched.MeshServeReport":
+        """Data-parallel continuous batching across the reliability shards.
+
+        Each replica is one chip: its KV arena draws the shard's own fault
+        stream (KVPageArena(shard=s) — the host-side mirror of the
+        shard_map path's axis_index key fold) and, under `per_shard` rails,
+        walks its own `kv` voltage. The `uniform` policy threads ONE shared
+        kv rail through every replica's stream in turn, so its canary sees
+        every chip's DED events — the worst-shard lock.
+        """
+        import dataclasses as _dc
+
+        geom = KVGeometry.from_config(self.cfg, page_tokens)
+        if n_pages is None:
+            n_pages = n_lanes * geom.pages_for(self.max_len)
+        profile = self._store.domain_profile("kv")
+        n_shards = self._store.n_shards
+        parts = sched.partition_requests(
+            sched.normalize_requests(requests), n_shards
+        )
+        base_codec = shapes.domain_codecs(self.rel.codecs)["kv"]
+        kv_rails = (
+            self.controller.add_rail("kv", profile, codec=base_codec)
+            if walk_kv
+            else [None] * n_shards
+        )
+        reports = []
+        for s in range(n_shards):
+            rail = kv_rails[s]
+            # A previous serve's escalation persists per rail (DESIGN.md §12).
+            kv_codec = rail.codec if rail is not None else base_codec
+            arena = KVPageArena(
+                geom,
+                profile,
+                n_pages,
+                seed=self.rel.seed,
+                ecc=self.rel.ecc,
+                codec=kv_codec,
+                shard=s,
+            )
+            if kv_voltage is not None:
+                arena.set_voltage(float(kv_voltage))
+            else:
+                arena.set_voltage(float(self.rails[s].get("kv", self.voltage)))
+            if rail is not None:
+                # The controller is the source of truth for a walked rail
+                # (see serve()); under `uniform` the shared rail resumes
+                # from wherever the previous shard's stream left it — the
+                # worst-shard canary by construction.
+                arena.set_voltage(rail.voltage)
+            report = sched.serve_stream(
+                self.params,
+                self.cfg,
+                self._paged_helpers(geom, kv_codec),
+                arena,
+                parts[s],
+                n_lanes=n_lanes,
+                max_len=self.max_len,
+                scrub_interval=scrub_interval,
+                max_block=max_block,
+                kv_controller=rail,
+                helpers_factory=lambda cname: self._paged_helpers(geom, cname),
+            )
+            reports.append(report)
+            self._store.register_domain_words(
+                "kv", arena.n_words, codec=arena.codec_name, shard=s
+            )
+            self.rails[s]["kv"] = arena.voltage
+        mesh_report = sched.MeshServeReport.merge(reports)
+        self.stats.accumulate(mesh_report.kv_stats)
+        self.rail_stats.accumulate(
+            DomainFaultStats({"kv": mesh_report.kv_stats})
+        )
+        self.shard_stats.accumulate(
+            ShardFaultStats(
+                [
+                    DomainFaultStats(
+                        {"kv": _dc.replace(r.kv_stats, shard=s)}, shard=s
+                    )
+                    for s, r in enumerate(reports)
+                ]
+            )
+        )
+        self.kv_arenas = [r.arena for r in reports]
+        self.kv_arena = self.kv_arenas[0]
+        return mesh_report
+
     def _paged_helpers(self, geom: KVGeometry, codec: str = "secded72") -> dict:
         cache = getattr(self, "_paged_helper_cache", None)
         if cache is None:
@@ -546,6 +725,8 @@ class ServingEngine:
         returns ({domain: voltage}, {domain: history}).
         """
         assert self.rel is not None and self.controller is not None
+        if self.mesh is not None:
+            return self._autotune_rails_mesh(max_rounds)
         if self.rel.multi_rail:
             return self._autotune_rails(max_rounds)
         for _ in range(max_rounds):
@@ -586,6 +767,27 @@ class ServingEngine:
                 break
         return self.controller.voltages, self.controller.history
 
+    def _autotune_rails_mesh(self, max_rounds: int):
+        """Mesh rail search: every chip's canary is judged on its own
+        counter rows. `per_shard` walks each chip to its own V_min;
+        `uniform` locks one schedule at the worst chip's first DED (the
+        psum-aggregated counters trip on any shard's event)."""
+        self.set_rails(self.controller.voltages)
+        arena_rails = self._store.domains
+        for _ in range(max_rounds):
+            schedule = self.controller.update(self._last_scrub)
+            if self.controller.policy == "uniform":
+                # Escalations apply store-wide (one codec per domain across
+                # the mesh); per_shard policy forbids ladders at init.
+                for d in arena_rails:
+                    cname = self.controller.shards[0].rails[d].pop_codec_change()
+                    if cname:
+                        self._store.set_domain_codec(d, cname)
+            self.set_rails(schedule)
+            if self.controller.locked_for(arena_rails):
+                break
+        return self.controller.voltages, self.controller.history
+
     def _domain_scrub(self) -> FaultStats:
         agg = FaultStats()
         for name in self.domain.names():
@@ -599,8 +801,14 @@ class ServingEngine:
         return store.check_bits_by_domain() if store is not None else {}
 
     def power_w(self) -> float:
-        """Modeled accelerator power at the current rail voltage(s)."""
+        """Modeled accelerator power at the current rail voltage(s); on a
+        mesh, the fleet total (every reliability shard is its own chip)."""
         ecc = bool(self.rel and self.rel.ecc)
+        if self.mesh is not None:
+            return self._store.n_shards * vmod.P_REST_W + vmod.mesh_bram_power(
+                self.rails, self._store.shard_words_by_domain(), ecc=ecc,
+                check_bits=self._check_bits(),
+            )
         if self.rails is not None:
             return vmod.P_REST_W + vmod.multi_rail_bram_power(
                 self.rails, self._store.words_by_domain(), ecc=ecc,
@@ -614,8 +822,40 @@ class ServingEngine:
 
     def power_report(self) -> dict:
         """Per-rail power breakdown + fractional BRAM saving vs nominal,
-        including each domain's codec and its redundancy cost."""
+        including each domain's codec and its redundancy cost. Mesh engines
+        report per-shard chips plus the fleet aggregate (DESIGN.md §13)."""
         ecc = bool(self.rel and self.rel.ecc)
+        if self.mesh is not None:
+            words = self._store.shard_words_by_domain()
+            bits = self._check_bits()
+            per_shard = [
+                {
+                    "shard": s,
+                    "rails": dict(self.rails[s]),
+                    "bram_w": vmod.multi_rail_bram_power(
+                        self.rails[s], words[s], ecc=ecc, check_bits=bits
+                    ),
+                    "saving_vs_nominal": vmod.multi_rail_power_saving(
+                        self.rails[s], words[s], ecc=ecc, check_bits=bits
+                    ),
+                }
+                for s in range(self._store.n_shards)
+            ]
+            bram = vmod.mesh_bram_power(
+                self.rails, words, ecc=ecc, check_bits=bits
+            )
+            return {
+                "n_shards": self._store.n_shards,
+                "policy": self.rel.rail_policy,
+                "codecs": self._store.codecs_by_domain(),
+                "check_bits": bits,
+                "shards": per_shard,
+                "bram_w": bram,
+                "total_w": self.power_w(),
+                "saving_vs_nominal": vmod.mesh_power_saving(
+                    self.rails, words, ecc=ecc, check_bits=bits
+                ),
+            }
         if self.rails is not None:
             words = self._store.words_by_domain()
             total = max(sum(words.values()), 1)

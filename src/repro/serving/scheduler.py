@@ -100,6 +100,82 @@ class ServeReport:
     pages_free_at_end: int  # == arena.n_pages unless the allocator leaked
 
 
+def normalize_requests(requests) -> list:
+    """(prompt, max_new_tokens) pairs -> Request objects with stream-order
+    rids (pre-built Requests pass through untouched)."""
+    return [
+        r
+        if isinstance(r, Request)
+        else Request(i, np.asarray(r[0], np.int32), int(r[1]))
+        for i, r in enumerate(requests)
+    ]
+
+
+def partition_requests(requests, n_shards: int) -> list:
+    """Round-robin the stream across ``n_shards`` data-parallel replicas.
+
+    Round-robin by arrival index keeps each replica's queue in global FCFS
+    order (admission inside a replica stays FCFS), and a 1-shard mesh gets
+    the whole stream in order — the serve path's bit-identity anchor.
+    """
+    assert n_shards >= 1, n_shards
+    parts: list = [[] for _ in range(n_shards)]
+    for i, r in enumerate(requests):
+        parts[i % n_shards].append(r)
+    return parts
+
+
+@dataclasses.dataclass
+class MeshServeReport:
+    """Merged outcome of one data-parallel mesh serve (DESIGN.md §13).
+
+    Per-shard ServeReports stay intact in ``by_shard`` — the per-chip DED
+    counters and kv-rail trajectories are the whole point of the mesh
+    telemetry — while the merged views answer the single-stream questions
+    (which tokens came back, what did the cache see in aggregate).
+    """
+
+    by_shard: list  # ServeReport per reliability shard
+    outputs: dict  # rid -> generated tokens, merged across shards
+    request_stats: dict  # rid -> FaultStats, merged across shards
+    kv_stats: FaultStats  # cross-shard aggregate cache telemetry
+    shard_of: dict  # rid -> shard that served it
+    steps: int  # total decode dispatch steps across shards
+    preemptions: int
+
+    @property
+    def kv_stats_by_shard(self) -> list:
+        """Per-chip cache telemetry, shard-tagged (never collapsed)."""
+        return [
+            dataclasses.replace(r.kv_stats, shard=s)
+            for s, r in enumerate(self.by_shard)
+        ]
+
+    @property
+    def kv_voltages_by_shard(self) -> list:
+        return [list(r.kv_voltages) for r in self.by_shard]
+
+    @classmethod
+    def merge(cls, reports) -> "MeshServeReport":
+        reports = list(reports)
+        outputs, request_stats, shard_of = {}, {}, {}
+        for s, r in enumerate(reports):
+            for rid, toks in r.outputs.items():
+                assert rid not in outputs, f"request {rid} served twice"
+                outputs[rid] = toks
+                shard_of[rid] = s
+            request_stats.update(r.request_stats)
+        return cls(
+            by_shard=reports,
+            outputs=outputs,
+            request_stats=request_stats,
+            kv_stats=FaultStats.summed(r.kv_stats for r in reports),
+            shard_of=shard_of,
+            steps=sum(r.steps for r in reports),
+            preemptions=sum(r.preemptions for r in reports),
+        )
+
+
 class ContinuousBatchingScheduler:
     """Host-side lane + page bookkeeping (admit / grow / preempt / retire)."""
 
@@ -254,10 +330,7 @@ def serve_stream(
     from repro.models import lm
 
     geom = arena.geom
-    requests = [
-        r if isinstance(r, Request) else Request(i, np.asarray(r[0], np.int32), int(r[1]))
-        for i, r in enumerate(requests)
-    ]
+    requests = normalize_requests(requests)
     for r in requests:
         total = len(r.prompt) + r.max_new_tokens
         assert total <= max_len, (r.rid, total, max_len)

@@ -1,0 +1,42 @@
+"""benchmarks/run.py trajectory files: CSV-row parsing + BENCH_<name>.json."""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.run import SECTIONS, parse_rows, write_trajectory  # noqa: E402
+
+
+def test_parse_rows_drops_noise():
+    text = "\n".join(
+        [
+            "name,us_per_call,derived",  # header
+            "# === kernels ===",  # section marker
+            "fused_inject_scrub,123.4,ratio=0.91",
+            "mesh_scrub_d8,99.0,words_per_s=1.2e+07",
+            "not a csv line",
+            "bad,notafloat,x",
+            "trailing,5.0,a,b,c",  # derived keeps embedded commas
+        ]
+    )
+    rows = parse_rows(text)
+    assert rows == [
+        {"name": "fused_inject_scrub", "us_per_call": 123.4, "derived": "ratio=0.91"},
+        {"name": "mesh_scrub_d8", "us_per_call": 99.0, "derived": "words_per_s=1.2e+07"},
+        {"name": "trailing", "us_per_call": 5.0, "derived": "a,b,c"},
+    ]
+
+
+def test_write_trajectory_at_root(tmp_path):
+    rows = [{"name": "x", "us_per_call": 1.0, "derived": "d"}]
+    path = write_trajectory("kernels", rows, 12.34, root=str(tmp_path))
+    assert os.path.basename(path) == "BENCH_kernels.json"
+    with open(path) as f:
+        data = json.load(f)
+    assert data == {"suite": "kernels", "rows": rows, "seconds": 12.3}
+
+
+def test_mesh_section_registered():
+    assert "mesh" in dict(SECTIONS)
