@@ -14,6 +14,13 @@ are useless across runners, which differ 3-5x):
     better; fails when it degrades more than ``--threshold`` vs baseline
     *or* drops below 1.0 — continuous batching beating fixed batching on
     the mixed-length stream is an acceptance property, not just a trend.
+  * mesh scaling (sharded_scrub.json, when a current run exists): scrub
+    words/s must not *shrink* when devices are added. Growing the mesh and
+    going slower (the d4 -> d8 dip BENCH_mesh.json recorded) is a sharding
+    bug, not noise — each step up in device count must keep at least
+    ``--mesh-floor`` of the previous count's throughput. No baseline file
+    needed: like the cont-over-fixed >= 1.0 clause this is an absolute
+    acceptance property of the in-process measurement.
 
 ``--retries N`` re-measures and re-checks up to N times on failure: the
 ratios cancel machine speed but a badly descheduled CI runner can still
@@ -43,6 +50,7 @@ BASELINE = os.path.join(HERE, "baseline", "kernel_micro.json")
 CURRENT = os.path.join(HERE, "out", "kernel_micro.json")
 SERVE_BASELINE = os.path.join(HERE, "baseline", "serve_throughput.json")
 SERVE_CURRENT = os.path.join(HERE, "out", "serve_throughput.json")
+MESH_CURRENT = os.path.join(HERE, "out", "sharded_scrub.json")
 
 
 def _gated_rows(rows: list[dict]) -> dict:
@@ -137,15 +145,63 @@ def _check_serve(threshold: float, results: list | None = None) -> int:
     return 0
 
 
+def _check_mesh(mesh_floor: float, results: list | None = None) -> int:
+    """Scaling-ratio floor on the sharded scrub step (no baseline file).
+
+    Reads the per-device-count rows sharded_scrub.json emits and requires
+    every step up in device count to retain at least ``mesh_floor`` of the
+    previous count's words/s. Adding chips must never lose throughput:
+    the historical d8-below-d4 measurement (8.75e6 vs 1.07e7 words/s)
+    is exactly the regression this gate turns from a silent JSON row into
+    a red CI lane.
+    """
+    results = [] if results is None else results
+    if not os.path.exists(MESH_CURRENT):
+        results.append(("sharded_scrub scaling", "skipped", "no current run"))
+        return 0  # mesh gate is opt-in via running benchmarks.sharded_scrub
+    with open(MESH_CURRENT) as f:
+        rows = [r for r in json.load(f) if "devices" in r and "words_per_s" in r]
+    by_dev = {int(r["devices"]): float(r["words_per_s"]) for r in rows}
+    if len(by_dev) < 2:
+        print("FAIL: sharded_scrub.json has < 2 device counts", file=sys.stderr)
+        results.append(("sharded_scrub scaling", "error", "< 2 device counts"))
+        return 2
+    devs = sorted(by_dev)
+    rc, worst = 0, 1.0
+    for lo_d, hi_d in zip(devs, devs[1:]):
+        ratio = by_dev[hi_d] / by_dev[lo_d]
+        worst = min(worst, ratio)
+        print(
+            f"sharded_scrub d{lo_d}->d{hi_d}: {by_dev[lo_d]:.3e} -> "
+            f"{by_dev[hi_d]:.3e} words/s (x{ratio:.2f}, floor {mesh_floor:.2f})"
+        )
+        if ratio < mesh_floor:
+            print(
+                f"FAIL: scrub throughput shrinks {lo_d}->{hi_d} devices "
+                f"(x{ratio:.2f} < floor {mesh_floor:.2f})",
+                file=sys.stderr,
+            )
+            rc = 1
+    detail = f"worst step ratio x{worst:.2f} (floor {mesh_floor:.2f})"
+    results.append(("sharded_scrub scaling", "fail" if rc else "pass", detail))
+    return rc
+
+
 def _default_remeasure() -> None:
     """Re-run the measured benchmarks in a fresh process (clean jit caches)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (os.path.join(HERE, "..", "src"), env.get("PYTHONPATH")) if p
     )
-    for mod in ("benchmarks.kernel_micro", "benchmarks.serve_throughput"):
+    for mod in (
+        "benchmarks.kernel_micro",
+        "benchmarks.serve_throughput",
+        "benchmarks.sharded_scrub",
+    ):
         if mod.endswith("serve_throughput") and not os.path.exists(SERVE_BASELINE):
             continue
+        if mod.endswith("sharded_scrub") and not os.path.exists(MESH_CURRENT):
+            continue  # mesh gate is opt-in; don't start measuring it on retry
         subprocess.run(
             [sys.executable, "-m", mod],
             check=True,
@@ -176,24 +232,38 @@ def write_step_summary(results: list, path: str) -> None:
         f.write("\n".join(lines) + "\n")
 
 
+GATES = ("kernel", "serve", "mesh")
+
+
 def check(
     threshold: float = 0.20, retries: int = 0, remeasure=None,
-    summary_path: str | None = None,
+    summary_path: str | None = None, mesh_floor: float = 0.95,
+    only: tuple = GATES,
 ) -> int:
-    """Run all gates; on failure, re-measure and re-check up to ``retries``
-    times. ``remeasure`` is injectable for tests (defaults to re-running the
-    benchmark modules in a subprocess). The final attempt's per-benchmark
-    results are appended to ``summary_path`` as a markdown table when set."""
+    """Run the selected gates; on failure, re-measure and re-check up to
+    ``retries`` times. ``remeasure`` is injectable for tests (defaults to
+    re-running the benchmark modules in a subprocess). The final attempt's
+    per-benchmark results are appended to ``summary_path`` as a markdown
+    table when set. ``only`` restricts which gates run — lanes that produce
+    only one artifact (the mesh smoke job emits just sharded_scrub.json)
+    must not crash on the benchmarks they never measured."""
+    unknown = set(only) - set(GATES)
+    assert not unknown, (sorted(unknown), GATES)
     remeasure = _default_remeasure if remeasure is None else remeasure
     retries = max(0, int(retries))  # a negative flag must not skip the gate
     rc, results = 1, []
     for attempt in range(retries + 1):
         results = []
-        # Run both gates even when the first fails: the summary table should
-        # show every benchmark's state, not stop at the first trip.
-        rc_kernel = _check_kernel(threshold, results)
-        rc_serve = _check_serve(threshold, results)
-        rc = rc_kernel or rc_serve
+        # Run every selected gate even when the first fails: the summary
+        # table should show every benchmark's state, not stop at the first
+        # trip.
+        rc = 0
+        if "kernel" in only:
+            rc = _check_kernel(threshold, results) or rc
+        if "serve" in only:
+            rc = _check_serve(threshold, results) or rc
+        if "mesh" in only:
+            rc = _check_mesh(mesh_floor, results) or rc
         if rc == 0:
             break
         if attempt < retries:
@@ -212,13 +282,35 @@ def main() -> None:
     ap.add_argument("--threshold", type=float, default=0.20)
     ap.add_argument("--retries", type=int, default=0)
     ap.add_argument(
+        "--mesh-floor",
+        type=float,
+        default=0.95,
+        help="min words/s ratio allowed per device-count step up "
+        "(sharded_scrub.json; 0.95 tolerates noise, fails real shrinkage)",
+    )
+    ap.add_argument(
+        "--only",
+        action="append",
+        choices=GATES,
+        default=None,
+        help="restrict to one gate (repeatable); default runs all",
+    )
+    ap.add_argument(
         "--summary",
         default=os.environ.get("GITHUB_STEP_SUMMARY"),
         help="append a pass/fail markdown table here "
         "(default: $GITHUB_STEP_SUMMARY when set)",
     )
     args = ap.parse_args()
-    sys.exit(check(args.threshold, retries=args.retries, summary_path=args.summary))
+    sys.exit(
+        check(
+            args.threshold,
+            retries=args.retries,
+            summary_path=args.summary,
+            mesh_floor=args.mesh_floor,
+            only=tuple(args.only) if args.only else GATES,
+        )
+    )
 
 
 if __name__ == "__main__":

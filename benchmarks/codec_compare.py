@@ -19,17 +19,32 @@ artifact; the `acceptance` rows record whether DEC-TED and interleaved
 SECDED beat plain SECDED's correctable coverage at each platform's deepest
 voltage step — the design-space result this subsystem exists to show.
 
+A second table covers the **scenario matrix** (DESIGN.md §14): the same
+codec sweep under every named environment (consumer / avionics / space),
+each with its flux multiplier and correlated-burst shape, at a
+rate-matched voltage per platform (scenario.scenario_voltage — comparable
+fault density across environments despite 1x..50000x flux). Its
+`scenario_acceptance` rows record whether the 4-way interleaved code beats
+plain SECDED's correctable coverage under bursts — per environment, the
+result the burst model exists to show.
+
 ``--smoke --codec NAME`` runs one codec through the generalized fused
 inject+scrub and scrub-on-read kernels on a tiny arena and verifies both
 against the codec's numpy oracle — the CI codec-matrix job.
+``--scenario-smoke --env NAME`` does the same under one environment's
+burst-shaped masks: DeviceFaultField burst masks at the scenario voltage
+through the fused kernel, DED lane checked against the codec's numpy
+decode oracle plus a mask-replay check — the CI scenario-matrix job.
 
 Usage: python -m benchmarks.codec_compare [--words N] [--seed S]
        python -m benchmarks.codec_compare --smoke --codec dected79
+       python -m benchmarks.codec_compare --scenario-smoke --env avionics
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 
 import numpy as np
@@ -38,7 +53,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import csv_line, emit, timed
 from repro import codes
-from repro.core import sweep, voltage
+from repro.core import scenario, sweep, voltage
 from repro.kernels import ops, paged_gather
 
 
@@ -84,6 +99,55 @@ def scrub_throughput(codec_names, pages=16, words_per_page=4096, seed=0):
     return rows
 
 
+SCENARIO_CODECS = ("secded72", "ileave88")
+
+
+def scenario_grid(env):
+    """One rate-matched (platform, voltage) point per platform.
+
+    The environments span 1x..50000x flux; sweeping them at the *same*
+    voltage steps saturates space at P_MAX while consumer barely faults.
+    scenario_voltage bisects each platform's env-scaled curve to a common
+    target fault density, so the codec comparison isolates the burst shape.
+    """
+    return [
+        (prof, scenario.scenario_voltage(prof, env))
+        for prof in voltage.PLATFORMS.values()
+    ]
+
+
+def scenario_rows(words: int, seed: int = 0) -> list[dict]:
+    """Codec coverage under every environment's burst shape + acceptance."""
+    out = []
+    for name, env in scenario.ENVIRONMENTS.items():
+        cov = sweep.sweep_codec_schemes(
+            SCENARIO_CODECS, scenario_grid(env), words, seed=seed, env=env
+        )
+        for r in cov:
+            r["kernel"] = "scenario_coverage"
+        out.extend(cov)
+        # Acceptance per environment: interleaving must win under bursts on
+        # every platform — adjacent flips land one per subcode (codes/
+        # interleaved.py), so ileave88 corrects the doubles SECDED only
+        # detects. Aggregated across the env's rate-matched grid points.
+        cover = {
+            c: sum(r["corrected"] for r in cov if r["codec"] == c)
+            / max(sum(r["faulty_words"] for r in cov if r["codec"] == c), 1)
+            for c in SCENARIO_CODECS
+        }
+        out.append(
+            {
+                "kernel": "scenario_acceptance",
+                "environment": name,
+                "burst": dataclasses.asdict(env.burst),
+                "rate_multiplier": env.rate_multiplier,
+                "correctable": cover,
+                "ileave_beats_secded": cover["ileave88"] > cover["secded72"],
+            }
+        )
+    return out
+
+
 def acceptance_rows(coverage_rows):
     """Per-platform: do the stronger codes beat SECDED at the deepest step?"""
     out = []
@@ -113,7 +177,12 @@ def run(words: int = 1 << 18, seed: int = 0) -> list[dict]:
     cov = sweep.sweep_codec_schemes(names, scheme_grid(), words, seed=seed)
     for r in cov:
         r["kernel"] = "codec_coverage"
-    rows = cov + acceptance_rows(cov) + scrub_throughput(names, seed=seed)
+    rows = (
+        cov
+        + acceptance_rows(cov)
+        + scenario_rows(words, seed=seed)
+        + scrub_throughput(names, seed=seed)
+    )
     emit(rows, "codec_compare")
     return rows
 
@@ -158,14 +227,72 @@ def smoke(codec: str, words: int = 1 << 12, seed: int = 0) -> int:
     return 0 if ok else 1
 
 
+def scenario_smoke(env_name: str, words: int = 1 << 13, seed: int = 0) -> int:
+    """One environment's burst masks through the fused kernel vs the oracle.
+
+    For each scenario codec: draw the env-scaled DeviceFaultField burst
+    masks at the platform's rate-matched scenario voltage, push a random
+    clean memory through ops.inject_scrub, and check the kernel's DED lane
+    against the codec's numpy decode oracle on the faulted planes — plus a
+    replay check (same field, same voltage -> bit-identical masks), the
+    determinism contract CI pins per environment.
+    """
+    from repro.core.faultsim import DeviceFaultField
+
+    env = scenario.ENVIRONMENTS[env_name]
+    prof = voltage.PLATFORMS["vc707"]
+    v = scenario.scenario_voltage(prof, env)
+    rng = np.random.default_rng(seed)
+    lo = jnp.asarray(rng.integers(0, 2**32, words, dtype=np.uint32))
+    hi = jnp.asarray(rng.integers(0, 2**32, words, dtype=np.uint32))
+    ok = True
+    for cname in SCENARIO_CODECS:
+        c = codes.get(cname)
+        field = DeviceFaultField(
+            env.scale_profile(prof), words, seed=seed,
+            n_check=c.n_check, burst=env.burst,
+        )
+        mlo, mhi, mpar = field.masks(v)
+        rlo, rhi, rpar = field.masks(v)
+        replay = (
+            bool(jnp.all(mlo == rlo))
+            and bool(jnp.all(mhi == rhi))
+            and bool(jnp.all(mpar == rpar))
+        )
+        par = ops.encode(lo, hi, codec=cname)
+        flo, fhi, fpar, cnt = ops.inject_scrub(
+            lo, hi, par, mlo, mhi, mpar, codec=cname
+        )
+        _, _, nst = c.decode_np(
+            np.asarray(lo ^ mlo), np.asarray(hi ^ mhi),
+            np.asarray(par ^ mpar.astype(par.dtype)),
+        )
+        cnt = np.asarray(cnt)
+        match = cnt[2] == int((nst == 2).sum())
+        ok &= replay and match
+        print(
+            f"scenario-smoke {env_name}/{cname}: v={v} "
+            f"faulty={int(jnp.count_nonzero(mlo | mhi))} "
+            f"detected={int(cnt[2])} corrected={int(cnt[1])} "
+            f"replay={'OK' if replay else 'MISMATCH'} "
+            f"oracle={'OK' if match else 'MISMATCH'}"
+        )
+    return 0 if ok else 1
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--words", type=int, default=1 << 18)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--codec", default=None, help="smoke mode: codec to exercise")
+    ap.add_argument("--scenario-smoke", action="store_true")
+    ap.add_argument("--env", default=None, help="scenario smoke: environment name")
     # parse_known_args: benchmarks.run passes its section name through argv
     args, _ = ap.parse_known_args(argv)
+    if args.scenario_smoke:
+        targets = [args.env] if args.env else sorted(scenario.ENVIRONMENTS)
+        sys.exit(max(scenario_smoke(t, seed=args.seed) for t in targets))
     if args.smoke:
         targets = [args.codec] if args.codec else list(codes.names())
         sys.exit(max(smoke(t) for t in targets))
@@ -185,6 +312,14 @@ def main(argv=None) -> None:
                     f"codec/acceptance_{r['platform']}", 0.0,
                     f"v={r['voltage']:.2f};"
                     f"dected_beats_secded={r['dected_beats_secded']};"
+                    f"ileave_beats_secded={r['ileave_beats_secded']}",
+                )
+            )
+        elif r["kernel"] == "scenario_acceptance":
+            print(
+                csv_line(
+                    f"codec/scenario_{r['environment']}", 0.0,
+                    f"flux={r['rate_multiplier']:.0f}x;"
                     f"ileave_beats_secded={r['ileave_beats_secded']}",
                 )
             )

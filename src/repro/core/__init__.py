@@ -8,9 +8,20 @@ Built-in-ECC-under-undervolting for ML memory systems:
   * `controller`       — DED-canary runtime undervolting controller
   * `telemetry`        — CORRECTED / DETECTED / SILENT fault accounting
   * `quantize`         — int8 + 64-bit word packing (BRAM word geometry)
+  * `scenario`         — burst-fault shapes, environment matrix, aging drift
 """
 
-from repro.core import controller, ecc, faultsim, hsiao, memory, quantize, telemetry, voltage
+from repro.core import (
+    controller,
+    ecc,
+    faultsim,
+    hsiao,
+    memory,
+    quantize,
+    scenario,
+    telemetry,
+    voltage,
+)
 from repro.core.controller import (
     RAIL_POLICIES,
     EscalationPolicy,
@@ -20,13 +31,15 @@ from repro.core.controller import (
 )
 from repro.core.faultsim import FaultField, FlipMasks
 from repro.core.memory import EccMemoryDomain
+from repro.core.scenario import ENVIRONMENTS, BurstProfile, EnvironmentProfile
 from repro.core.telemetry import DomainFaultStats, FaultStats, ShardFaultStats
 from repro.core.voltage import PLATFORMS, PlatformProfile
 
 __all__ = [
     "controller", "ecc", "faultsim", "hsiao", "memory", "quantize",
-    "telemetry", "voltage", "EscalationPolicy", "MeshRailController",
-    "MultiRailController", "RAIL_POLICIES", "UndervoltController",
-    "FaultField", "FlipMasks", "EccMemoryDomain", "DomainFaultStats",
-    "FaultStats", "ShardFaultStats", "PLATFORMS", "PlatformProfile",
+    "scenario", "telemetry", "voltage", "EscalationPolicy",
+    "MeshRailController", "MultiRailController", "RAIL_POLICIES",
+    "UndervoltController", "FaultField", "FlipMasks", "EccMemoryDomain",
+    "DomainFaultStats", "FaultStats", "ShardFaultStats", "PLATFORMS",
+    "PlatformProfile", "ENVIRONMENTS", "BurstProfile", "EnvironmentProfile",
 ]

@@ -72,11 +72,13 @@ class UndervoltController:
         escalation: EscalationPolicy | None = None,
         codec: str | None = None,
         shard: int = -1,
+        adaptive: bool = False,
     ):
         self.platform = platform
         self.step_v = step_v
         self.backoff_steps = backoff_steps
         self.paranoid = paranoid
+        self.adaptive = adaptive
         self.shard = int(shard)
         # Warm start: the guardband is fault-free by definition (paper §III),
         # so a search may legally begin anywhere in [v_min, v_nom].
@@ -107,7 +109,19 @@ class UndervoltController:
         )
         ded_rate = stats.detected / max(stats.words, 1)
         if self.locked:
-            action = "hold"
+            if self.adaptive and trip:
+                # A locked rail is only safe while the flux that locked it
+                # holds. Under environment/aging drift (DESIGN.md §14) the
+                # DED canary can re-trip at the locked point — retreat
+                # another backoff step (stay locked; the walk never resumes
+                # downward on its own).
+                self.voltage = min(
+                    self.platform.v_nom,
+                    self.voltage + self.backoff_steps * self.step_v,
+                )
+                action = "drift+backoff"
+            else:
+                action = "hold"
         elif trip and stronger is not None and stats.detected > 0 and (
             ded_rate > self.escalation.ded_rate
         ):
@@ -166,6 +180,7 @@ class MultiRailController:
         escalation: EscalationPolicy | None = None,
         codecs: dict | None = None,
         shard: int = -1,
+        adaptive: bool = False,
     ):
         profiles = profiles or {}
         codecs = codecs or {}
@@ -180,6 +195,7 @@ class MultiRailController:
             start_v=start_v,
             escalation=escalation,
             shard=shard,
+            adaptive=adaptive,
         )
         self.rails = {
             d: UndervoltController(

@@ -18,6 +18,14 @@ row_sigma≈1.1 the model lands in the measured band (see tests/test_faultsim.py
 
 Fault semantics are read-time bit flips (XOR), so the observed-fault-rate
 calibration against the paper's counters is exact.
+
+Correlated bursts (DESIGN.md §14): an optional ``BurstProfile``
+(core/scenario.py) promotes base i.i.d. faulty bits into multi-bit upsets —
+adjacent-bitplane extension, random same-word companions, adjacent-word
+column clusters — from *separate* voltage-independent draws, so FIP still
+holds and the burst stream stays counter-based and replayable. The default
+(no burst profile) skips the expansion entirely: the historical i.i.d.
+stream is reproduced bit-for-bit at every level that consumes these masks.
 """
 
 from __future__ import annotations
@@ -27,6 +35,7 @@ import functools
 
 import numpy as np
 
+from repro.core.scenario import BurstProfile, expand_bursts
 from repro.core.voltage import PlatformProfile
 
 P_MAX = 0.5  # per-bit fault probability ceiling (clip for extreme weak rows)
@@ -83,6 +92,7 @@ class FaultField:
         seed: int = 0,
         chunk_words: int = 1 << 18,
         n_check: int = N_CHECK_DEFAULT,
+        burst: BurstProfile | None = None,
     ):
         self.platform = platform
         self.n_words = int(n_words)
@@ -92,6 +102,9 @@ class FaultField:
         # default (8, SECDED) reproduces the historical 72-bitplane stream
         # bit-for-bit; other widths draw their own (64 + n_check, m) field.
         self.n_check = int(n_check)
+        # Correlated multi-bit-upset shape (DESIGN.md §14); None or a
+        # disabled profile leaves the draw sequence untouched.
+        self.burst = burst if (burst is not None and burst.enabled) else None
 
     # -- internals ----------------------------------------------------------
     def _chunk_rng(self, chunk_idx: int) -> np.random.Generator:
@@ -112,6 +125,25 @@ class FaultField:
         u = rng.random((N_DATA_BITS + self.n_check, m), dtype=np.float32)
         p_word = np.clip(rate * f_row, 0.0, P_MAX)[None, :]  # (1, m)
         bits = u < p_word  # (64 + n_check, m) bool
+        if self.burst is not None:
+            # Burst expansion draws come *after* the base draw from the same
+            # counter stream and are voltage-independent (anchor classes are
+            # properties of positions, not of which anchors fired), so both
+            # FIP and replayability survive; with no burst profile none of
+            # these draws happen and the stream is the historical one.
+            nb = N_DATA_BITS + self.n_check
+            cu = (
+                rng.random((nb, m), dtype=np.float32)
+                if self.burst.needs_class_draw
+                else None
+            )
+            wu = (
+                rng.random((nb, m), dtype=np.float32)
+                if self.burst.word_adjacent > 0.0
+                else None
+            )
+            eb = rng.integers(0, nb, m) if self.burst.random_double > 0.0 else None
+            bits = expand_bursts(bits, self.burst, cu, wu, eb, xp=np)
         pdt = _check_dtype(self.n_check)
         lo = np.zeros(m, np.uint32)
         hi = np.zeros(m, np.uint32)
@@ -143,7 +175,8 @@ class FaultField:
     def device_field(self) -> "DeviceFaultField":
         """Device-resident counterpart over the same geometry (fresh stream)."""
         return DeviceFaultField(
-            self.platform, self.n_words, seed=self.seed, n_check=self.n_check
+            self.platform, self.n_words, seed=self.seed, n_check=self.n_check,
+            burst=self.burst,
         )
 
     def sweep_histogram(self, voltages) -> list[dict]:
@@ -168,7 +201,10 @@ class FaultField:
 # ---------------------------------------------------------------------------
 # Device-resident fault field (DESIGN.md §8/§9)
 # ---------------------------------------------------------------------------
-def _device_chunk_masks(key, m: int, rate, row_sigma, n_check: int = N_CHECK_DEFAULT):
+def _device_chunk_masks(
+    key, m: int, rate, row_sigma, n_check: int = N_CHECK_DEFAULT,
+    burst: BurstProfile | None = None,
+):
     """jax implementation of the failure-threshold draw for one ``m``-word chunk.
 
     Same statistical model as FaultField._chunk_masks (lognormal row weakness
@@ -181,6 +217,13 @@ def _device_chunk_masks(key, m: int, rate, row_sigma, n_check: int = N_CHECK_DEF
     check-bitplane count (default 8 keeps the historical SECDED stream);
     the per-word weakness draw is shared across widths, so scheme sweeps
     compare codecs on the same weak cells.
+
+    ``burst`` (static) expands the i.i.d. anchors into correlated multi-bit
+    upsets (core/scenario.expand_bursts). Its auxiliary draws come from
+    constant-folded side keys — the base (krow, kbits) split is untouched —
+    and depend only on (key, m), never on voltage, so FIP and the vmapped
+    sweeps' batch hoisting both survive; ``burst=None`` (or a disabled
+    profile) takes the historical code path exactly.
     """
     import jax
     import jax.numpy as jnp
@@ -192,6 +235,26 @@ def _device_chunk_masks(key, m: int, rate, row_sigma, n_check: int = N_CHECK_DEF
     thresh = (p_word * 4294967296.0).astype(jnp.uint32)  # (m,)
     bits = jax.random.bits(kbits, (N_DATA_BITS + n_check, m), jnp.uint32)
     faulty = bits < thresh[None, :]  # (64 + n_check, m) bool
+    if burst is not None and burst.enabled:
+        from repro.core.scenario import expand_bursts as _expand
+
+        nb = N_DATA_BITS + n_check
+        cu = (
+            jax.random.uniform(jax.random.fold_in(key, 0x6B51), (nb, m), jnp.float32)
+            if burst.needs_class_draw
+            else None
+        )
+        wu = (
+            jax.random.uniform(jax.random.fold_in(key, 0x6B52), (nb, m), jnp.float32)
+            if burst.word_adjacent > 0.0
+            else None
+        )
+        eb = (
+            jax.random.randint(jax.random.fold_in(key, 0x6B53), (m,), 0, nb)
+            if burst.random_double > 0.0
+            else None
+        )
+        faulty = _expand(faulty, burst, cu, wu, eb, xp=jnp)
     lo = jnp.zeros((m,), jnp.uint32)
     hi = jnp.zeros((m,), jnp.uint32)
     par = jnp.zeros((m,), jnp.uint32)
@@ -208,7 +271,7 @@ def _device_chunk_masks(key, m: int, rate, row_sigma, n_check: int = N_CHECK_DEF
 def _device_chunk_masks_jit():
     import jax
 
-    return jax.jit(_device_chunk_masks, static_argnames=("m", "n_check"))
+    return jax.jit(_device_chunk_masks, static_argnames=("m", "n_check", "burst"))
 
 
 class DeviceFaultField:
@@ -231,6 +294,7 @@ class DeviceFaultField:
         seed: int = 0,
         chunk_words: int = 1 << 18,
         n_check: int = N_CHECK_DEFAULT,
+        burst: BurstProfile | None = None,
     ):
         import jax
 
@@ -239,6 +303,7 @@ class DeviceFaultField:
         self.seed = int(seed)
         self.chunk_words = int(chunk_words)
         self.n_check = int(n_check)
+        self.burst = burst if (burst is not None and burst.enabled) else None
         self._key = jax.random.PRNGKey(self.seed ^ 0xECC)
 
     def masks(self, v: float):
@@ -270,7 +335,7 @@ class DeviceFaultField:
             rate = rates[start : start + m] if per_word else rates
             lo, hi, par = fn(
                 jax.random.fold_in(self._key, ci), m, rate, sigma,
-                n_check=self.n_check,
+                n_check=self.n_check, burst=self.burst,
             )
             los.append(lo)
             his.append(hi)

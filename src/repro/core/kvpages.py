@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import codes
+from repro.core import scenario
 from repro.core.faultsim import _device_chunk_masks_jit
 from repro.core.telemetry import FaultStats
 from repro.core.voltage import PlatformProfile
@@ -237,8 +238,17 @@ class KVPageArena:
         ecc: bool = True,
         codec: str = "secded72",
         shard: int = 0,
+        env=None,
     ):
         self.geom = geom
+        # Environment scenario (DESIGN.md §14): the burst shape and the
+        # aging-drift clock live here; the flux multiplier is expected to
+        # arrive *in the profile* (scenario.EnvironmentProfile.scale_profile
+        # — the engine's store-derived kv profile is already scaled), so a
+        # store-fed arena never double-scales.
+        self.env = scenario.resolve(env)
+        burst = self.env.burst if self.env else None
+        self._burst = burst if (burst is not None and burst.enabled) else None
         self.profile = profile
         self.n_pages = int(n_pages)
         self.ecc = bool(ecc)
@@ -296,16 +306,24 @@ class KVPageArena:
         live memory keeps accumulating faults while undervolted, it does not
         re-materialise them per voltage like the read-only weight arena.
         Inside the guardband the rate is exactly 0 and this is a no-op.
+        With an environment set, the interval counter doubles as the aging
+        clock — this chip's rate drifts by its deterministic per-shard
+        multiplier as the soak progresses — and the masks carry the
+        environment's correlated burst shape.
         """
         self._interval += 1
         rate = self.profile.fault_rate(self.voltage)
         if rate <= 0.0:
             return
+        rate *= scenario.aging_multiplier(
+            self.shard, self._interval, self.env, self.seed
+        )
         key = jax.random.fold_in(self._key, self._interval)
         self.faulted = True
         mlo, mhi, mpar = _device_chunk_masks_jit()(
             key, self._total_words, jnp.float32(rate),
             jnp.float32(self.profile.row_sigma), n_check=self.codec.n_check,
+            burst=self._burst,
         )
         self.lo = _xor_into(self.lo, mlo)
         self.hi = _xor_into(self.hi, mhi)

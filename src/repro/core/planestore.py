@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import codes
+from repro.core import scenario
 from repro.core.faultsim import DeviceFaultField, FaultField
 from repro.core.telemetry import DomainFaultStats, FaultStats
 from repro.core.voltage import PlatformProfile
@@ -121,6 +122,7 @@ class PlaneStore:
         profiles=None,
         codecs=None,
         mesh=None,
+        env=None,
     ):
         assert mask_source in ("host", "device"), mask_source
         assert len(leaves) == len(set(keys)), "leaf keys must be unique"
@@ -128,6 +130,17 @@ class PlaneStore:
         self.seed = int(seed)
         self.mask_source = mask_source
         self.mesh = mesh
+        # Environment scenario (DESIGN.md §14): name or EnvironmentProfile.
+        # Flux multiplier enters through domain_profile (so every rate
+        # consumer sees the scaled curve), the burst shape through the fault
+        # fields, aging drift through set_rails_sharded's per-shard rate
+        # multipliers. env=None is the historical store bit-for-bit.
+        self.env = scenario.resolve(env)
+        self._soak = 0  # sharded scrub intervals stepped (the drift clock)
+        # A disabled burst shape normalizes to None so the fault fields (and
+        # the make_rail_step cache) take the historical path exactly.
+        burst = self.env.burst if self.env else None
+        self._burst = burst if (burst is not None and burst.enabled) else None
         if mesh is not None:
             # Mesh-sharded arena (DESIGN.md §13): masks must be generated
             # inside shard_map from per-shard streams — the host oracle has
@@ -249,7 +262,13 @@ class PlaneStore:
                     dom_ids=dom,
                     dom_ids_np=dom_np,
                     device_field=DeviceFaultField(
-                        self.platform, off, seed=dseed, n_check=codec.n_check
+                        self.env.scale_profile(self.platform)
+                        if self.env
+                        else self.platform,
+                        off,
+                        seed=dseed,
+                        n_check=codec.n_check,
+                        burst=self._burst,
                     ),
                 )
             )
@@ -267,6 +286,7 @@ class PlaneStore:
                     s.size,
                     seed=leaf_seed(self.seed, s.key),
                     n_check=g.codec.n_check,
+                    burst=self._burst,
                 )
 
     # -- mesh sharding (DESIGN.md §13) ---------------------------------------
@@ -392,7 +412,24 @@ class PlaneStore:
             )
         profiles = {d: self.domain_profile(d) for d in self.domains}
         sigma = next(iter({p.row_sigma for p in profiles.values()}))
-        rates = meshrel.schedule_rates(schedule, self.domains, profiles, n_shards)
+        # One scrub interval per rail step: the aging clock. At env=None or
+        # drift_sigma=0 every multiplier is exactly 1.0 and the table is the
+        # historical one bit-for-bit.
+        self._soak += 1
+        mult = (
+            np.array(
+                [
+                    scenario.aging_multiplier(s, self._soak, self.env, self.seed)
+                    for s in range(n_shards)
+                ],
+                np.float32,
+            )
+            if self.env is not None
+            else None
+        )
+        rates = meshrel.schedule_rates(
+            schedule, self.domains, profiles, n_shards, shard_multipliers=mult
+        )
         total = np.zeros((n_shards, len(self.domains), 8), np.int64)
         planes = {}
         host = jax.devices()[0]
@@ -401,6 +438,7 @@ class PlaneStore:
             step = meshrel.make_rail_step(
                 self.mesh, sg.local_words, len(self.domains), g.name,
                 sg.seed, float(sigma), reencode=not ecc,
+                burst=self._burst,
             )
             flo, fhi, fpar, per_shard, _agg = step(
                 sg.lo, sg.hi, sg.check, sg.dom, jnp.asarray(rates)
@@ -441,7 +479,11 @@ class PlaneStore:
 
     # -- domains -------------------------------------------------------------
     def domain_profile(self, domain: str) -> PlatformProfile:
-        return self._profiles.get(domain, self.platform)
+        """The domain's fault curve, env-flux-scaled when an environment is
+        set — every rate consumer (host fields, device rate vectors, the
+        sharded rate tables, the engine's controllers) sees one curve."""
+        prof = self._profiles.get(domain, self.platform)
+        return self.env.scale_profile(prof) if self.env else prof
 
     def register_domain_words(
         self, domain: str, words: int, codec: str = DEFAULT_CODEC,

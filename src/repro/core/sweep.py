@@ -59,25 +59,41 @@ def _classify_tallies(mlo, mhi, mpar):
     return outcome_tallies(False, status, flips), flips
 
 
-def _point_counters(key, rate, sigma, m):
+def _point_counters(key, rate, sigma, m, burst=None):
     import jax.numpy as jnp
 
-    tallies, flips = _classify_tallies(*_device_chunk_masks(key, m, rate, sigma))
+    tallies, flips = _classify_tallies(
+        *_device_chunk_masks(key, m, rate, sigma, burst=burst)
+    )
     cnt = [jnp.sum(t.astype(jnp.int32)) for t in tallies]
     cnt.append(jnp.sum(flips))
     return jnp.stack(cnt)
 
 
 @functools.lru_cache(maxsize=None)
-def _grid_chunk_fn():
+def _grid_chunk_fn(burst=None):
     """jit(vmap) over the (rate, sigma) point vectors; key and chunk size are
-    shared across the batch (one fault field, many rails)."""
+    shared across the batch (one fault field, many rails). ``burst`` is a
+    hashable scenario.BurstProfile closed over as a compile-time constant —
+    its auxiliary draws depend only on the key, so XLA hoists them out of
+    the batch exactly like the base field."""
     import jax
 
     return jax.jit(
-        jax.vmap(_point_counters, in_axes=(None, 0, 0, None)),
+        jax.vmap(
+            functools.partial(_point_counters, burst=burst),
+            in_axes=(None, 0, 0, None),
+        ),
         static_argnums=(3,),
     )
+
+
+def _env_burst(env):
+    """The environment's burst shape, normalized so a disabled profile hits
+    the historical (burst-free) compile cache entry."""
+    if env is None or not env.burst.enabled:
+        return None
+    return env.burst
 
 
 def _domain_point_counters(key, rates_w, sigma, m, dom_ids, n_domains):
@@ -114,14 +130,16 @@ class SweepPoint:
 
 
 def sweep_platform_grid(
-    grid, n_words: int, seed: int = 0, chunk_words: int = 1 << 18
+    grid, n_words: int, seed: int = 0, chunk_words: int = 1 << 18, env=None
 ) -> list[SweepPoint]:
     """Evaluate a flat (PlatformProfile, voltage) grid in one vmapped call.
 
     ``grid``: iterable of (profile, voltage) pairs — e.g. all three paper
     platforms x their critical-region voltage steps. Returns one SweepPoint
     per pair, in order. All points share the fault-field stream keyed by
-    ``seed`` (the DeviceFaultField stream for the same geometry).
+    ``seed`` (the DeviceFaultField stream for the same geometry). ``env``
+    (scenario.EnvironmentProfile) scales every rate by its flux multiplier
+    and applies its burst shape; None is the historical sweep bit-for-bit.
     """
     import jax
 
@@ -131,8 +149,10 @@ def sweep_platform_grid(
     rates = np.array(
         [p.fault_rate(float(v)) for p, v in grid], np.float32
     )
+    if env is not None:
+        rates *= np.float32(env.rate_multiplier)
     sigmas = np.array([p.row_sigma for p, _ in grid], np.float32)
-    fn = _grid_chunk_fn()
+    fn = _grid_chunk_fn(_env_burst(env))
     key = jax.random.PRNGKey(seed ^ 0xECC)
     total = np.zeros((len(grid), 8), np.int64)
     for ci, start in enumerate(range(0, n_words, chunk_words)):
@@ -151,6 +171,8 @@ def sweep_platform_grid_sharded(
     n_shards: int,
     seed: int = 0,
     chunk_words: int = 1 << 18,
+    env=None,
+    age: float = 0.0,
 ) -> list[list[SweepPoint]]:
     """Per-shard (platform, voltage) grids: one sweep per mesh chip.
 
@@ -160,25 +182,36 @@ def sweep_platform_grid_sharded(
     shard_map'd rail step derives from ``lax.axis_index``. Returns
     ``n_shards`` lists of SweepPoints; the per-shard first-DED voltages give
     the chip-to-chip V_min spread (arXiv:2005.04737) without touching a
-    controller.
+    controller. ``env``/``age`` add the scenario axis: every shard's rates
+    are scaled by the environment flux multiplier *and* its own aging-drift
+    multiplier at soak age ``age`` (scenario.aging_multiplier), so the
+    per-chip spread grows with the soak; at env=None or drift 0 every
+    multiplier is 1.0 and the sweep is the historical one bit-for-bit.
     """
     import jax
+
+    from repro.core import scenario
 
     grid = list(grid)
     if not grid or n_shards <= 0:
         return [[] for _ in range(max(n_shards, 0))]
     rates = np.array([p.fault_rate(float(v)) for p, v in grid], np.float32)
+    if env is not None:
+        rates *= np.float32(env.rate_multiplier)
     sigmas = np.array([p.row_sigma for p, _ in grid], np.float32)
-    fn = _grid_chunk_fn()
+    fn = _grid_chunk_fn(_env_burst(env))
     base = jax.random.PRNGKey(seed ^ 0xECC)
     out = []
     for s in range(n_shards):
         key = base if s == 0 else jax.random.fold_in(base, s)
+        mult = np.float32(scenario.aging_multiplier(s, age, env, seed))
         total = np.zeros((len(grid), 8), np.int64)
         for ci, start in enumerate(range(0, n_words, chunk_words)):
             m = min(chunk_words, n_words - start)
             _dispatches["n"] += 1
-            total += np.asarray(fn(jax.random.fold_in(key, ci), rates, sigmas, m))
+            total += np.asarray(
+                fn(jax.random.fold_in(key, ci), rates * mult, sigmas, m)
+            )
         out.append(
             [
                 SweepPoint(p.name, float(v), FaultStats.from_counters(total[i], n_words, shard=s))
@@ -188,7 +221,10 @@ def sweep_platform_grid_sharded(
     return out
 
 
-def shard_vmin_spread(profile, voltages, n_words: int, n_shards: int, seed: int = 0):
+def shard_vmin_spread(
+    profile, voltages, n_words: int, n_shards: int, seed: int = 0,
+    env=None, age: float = 0.0,
+):
     """First-DED voltage per shard on a descending voltage walk.
 
     The mesh analogue of the paper's V_min measurement: walk ``voltages``
@@ -197,9 +233,14 @@ def shard_vmin_spread(profile, voltages, n_words: int, n_shards: int, seed: int 
     rail policy converges to. Returns a list of n_shards voltages; ``None``
     for a shard that DEDs already at the grid's top voltage (the grid holds
     no safe point for that chip — callers must widen it, not lock there).
+    ``env``/``age`` thread the scenario axis through (see
+    ``sweep_platform_grid_sharded``): under aging drift the per-chip V_mins
+    fan out as the soak progresses.
     """
     grid = [(profile, float(v)) for v in voltages]
-    per_shard = sweep_platform_grid_sharded(grid, n_words, n_shards, seed=seed)
+    per_shard = sweep_platform_grid_sharded(
+        grid, n_words, n_shards, seed=seed, env=env, age=age
+    )
     out = []
     for points in per_shard:
         vmin = None
@@ -277,7 +318,7 @@ def sweep_rail_schedules(
 # ---------------------------------------------------------------------------
 # Codec scheme comparison (DESIGN.md §12)
 # ---------------------------------------------------------------------------
-def _codec_point_counters(key, rate, sigma, m, codec_name):
+def _codec_point_counters(key, rate, sigma, m, codec_name, burst=None):
     """(8,) counters for one chunk under one codec, on a zero memory.
 
     The flip masks *are* the faulty codeword; the per-word weakness draw is
@@ -294,7 +335,9 @@ def _codec_point_counters(key, rate, sigma, m, codec_name):
     from repro.kernels.inject_scrub import _popcount32, outcome_tallies
 
     c = codes.get(codec_name)
-    mlo, mhi, mpar = _device_chunk_masks(key, m, rate, sigma, n_check=c.n_check)
+    mlo, mhi, mpar = _device_chunk_masks(
+        key, m, rate, sigma, n_check=c.n_check, burst=burst
+    )
     synd = c.encode_jnp(mlo, mhi) ^ mpar.astype(jnp.uint32)
     flip_lo, flip_hi, _, status = c.classify_jnp(synd)
     flips = _popcount32(mlo) + _popcount32(mhi) + _popcount32(mpar.astype(jnp.uint32))
@@ -308,12 +351,14 @@ def _codec_point_counters(key, rate, sigma, m, codec_name):
 
 
 @functools.lru_cache(maxsize=None)
-def _codec_chunk_fn(codec_name: str):
+def _codec_chunk_fn(codec_name: str, burst=None):
     import jax
 
     return jax.jit(
         jax.vmap(
-            functools.partial(_codec_point_counters, codec_name=codec_name),
+            functools.partial(
+                _codec_point_counters, codec_name=codec_name, burst=burst
+            ),
             in_axes=(None, 0, 0, None),
         ),
         static_argnums=(3,),
@@ -321,7 +366,8 @@ def _codec_chunk_fn(codec_name: str):
 
 
 def sweep_codec_schemes(
-    codec_names, grid, n_words: int, seed: int = 0, chunk_words: int = 1 << 18
+    codec_names, grid, n_words: int, seed: int = 0, chunk_words: int = 1 << 18,
+    env=None,
 ) -> list[dict]:
     """Coverage vs check-bit overhead for every (codec, platform, voltage).
 
@@ -329,7 +375,10 @@ def sweep_codec_schemes(
     exactly like ``sweep_platform_grid``. Returns one row dict per
     (codec, grid point) with the codec's geometry, the aggregated
     FaultStats counters, and the coverage fractions — the scheme-comparison
-    table benchmarks/codec_compare.py emits (DESIGN.md §12).
+    table benchmarks/codec_compare.py emits (DESIGN.md §12). ``env``
+    (scenario.EnvironmentProfile) adds the scenario axis — flux-scaled rates
+    and the environment's burst shape — and tags each row with the
+    environment name; None is the historical sweep bit-for-bit.
     """
     import jax
 
@@ -338,12 +387,14 @@ def sweep_codec_schemes(
     if not grid:
         return rows
     rates = np.array([p.fault_rate(float(v)) for p, v in grid], np.float32)
+    if env is not None:
+        rates *= np.float32(env.rate_multiplier)
     sigmas = np.array([p.row_sigma for p, _ in grid], np.float32)
     for cname in codec_names:
         from repro import codes
 
         codec = codes.get(cname)
-        fn = _codec_chunk_fn(cname)
+        fn = _codec_chunk_fn(cname, _env_burst(env))
         key = jax.random.PRNGKey(seed ^ 0xECC)
         total = np.zeros((len(grid), 8), np.int64)
         for ci, start in enumerate(range(0, n_words, chunk_words)):
@@ -353,8 +404,10 @@ def sweep_codec_schemes(
         for i, (p, v) in enumerate(grid):
             st = FaultStats.from_counters(total[i], n_words)
             cov = st.coverage()
+            row_env = {} if env is None else {"environment": env.name}
             rows.append(
                 {
+                    **row_env,
                     "codec": cname,
                     "check_bits": codec.n_check,
                     "overhead": codec.overhead,

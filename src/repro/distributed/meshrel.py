@@ -71,16 +71,18 @@ def pad_to_shards(n: int, n_shards: int) -> int:
     return -(-n // n_shards) * n_shards
 
 
-def _chunked_shard_masks(key, local_n, rates_w, sigma, n_check, chunk_words):
+def _chunked_shard_masks(key, local_n, rates_w, sigma, n_check, chunk_words, burst=None):
     """Per-shard flip masks over ``local_n`` flat words, chunked exactly like
     ``DeviceFaultField.masks_for_rates`` (fold_in per chunk index) so the
-    1-shard mesh reproduces the unsharded device stream bit-for-bit."""
+    1-shard mesh reproduces the unsharded device stream bit-for-bit —
+    including under a ``burst`` profile, whose auxiliary draws fold off the
+    same per-chunk key (DESIGN.md §14)."""
     los, his, pars = [], [], []
     for ci, start in enumerate(range(0, local_n, chunk_words)):
         m = min(chunk_words, local_n - start)
         lo, hi, par = _device_chunk_masks(
             jax.random.fold_in(key, ci), m, rates_w[start : start + m],
-            sigma, n_check=n_check,
+            sigma, n_check=n_check, burst=burst,
         )
         los.append(lo)
         his.append(hi)
@@ -103,6 +105,7 @@ def make_rail_step(
     row_sigma: float,
     reencode: bool = False,
     chunk_words: int = 1 << 18,
+    burst=None,
 ):
     """Build the shard_map'd fused inject+scrub step for one codec group.
 
@@ -117,6 +120,10 @@ def make_rail_step(
     (n_shards, n_domains + 1) per-(shard, domain) fault-rate table (spill
     column 0.0). Every shard draws its masks from its own stream
     (collectives.shard_key); the counter psum is the step's only collective.
+    ``burst`` (a hashable scenario.BurstProfile, static under the cache)
+    turns the per-shard draws into correlated multi-bit upsets; environment
+    flux and per-shard aging drift arrive through the rate table itself
+    (schedule_rates), so the compiled step is reused across a whole soak.
     """
     axes = reliability_axes(mesh)
     codec_obj = codes.get(codec)
@@ -128,7 +135,8 @@ def make_rail_step(
         key = collectives.shard_key(base_key, axes)
         rates_w = rates[0][dom]  # (local_words,) per-word fault rate
         mlo, mhi, mpar = _chunked_shard_masks(
-            key, local_words, rates_w, sigma, codec_obj.n_check, chunk_words
+            key, local_words, rates_w, sigma, codec_obj.n_check, chunk_words,
+            burst=burst,
         )
         flo, fhi, fpar, cnt = kops.inject_scrub_domains(
             lo, hi, check, mlo, mhi, mpar, dom, n_domains,
@@ -205,14 +213,17 @@ def make_kv_scrub_step(
 # Host-side helpers for the per-(shard, domain) rail schedule
 # ---------------------------------------------------------------------------
 def schedule_rates(
-    schedule, domains, profiles, n_shards: int
+    schedule, domains, profiles, n_shards: int, shard_multipliers=None
 ) -> np.ndarray:
     """(n_shards, n_domains + 1) fault-rate table for a rail schedule.
 
     ``schedule``: one {domain: voltage} dict (uniform across shards) or a
     sequence of ``n_shards`` of them (per-shard rails). ``profiles`` maps
     domain -> PlatformProfile. The trailing spill column is rate 0 — pad
-    words never fault and never count.
+    words never fault and never count. ``shard_multipliers`` (length
+    n_shards, optional) scales each chip's whole rate row — the per-shard
+    aging-drift hook (core/scenario.aging_multiplier); None or all-ones is
+    bit-identical to the unscaled table.
     """
     if isinstance(schedule, dict):
         schedule = [schedule] * n_shards
@@ -224,4 +235,9 @@ def schedule_rates(
         assert not missing, f"shard {s} rails missing domains: {sorted(missing)}"
         for i, d in enumerate(domains):
             rates[s, i] = profiles[d].fault_rate(float(volts[d]))
+    if shard_multipliers is not None:
+        mult = np.asarray(shard_multipliers, np.float32)
+        assert mult.shape == (n_shards,), (mult.shape, n_shards)
+        # the spill column is 0.0 and stays 0.0 under any multiplier
+        rates *= mult[:, None]
     return rates

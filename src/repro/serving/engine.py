@@ -31,6 +31,7 @@ from repro.core import (
     MeshRailController,
     MultiRailController,
     UndervoltController,
+    scenario,
     voltage as vmod,
 )
 from repro.core.faultsim import FaultField
@@ -90,10 +91,26 @@ class ReliabilityConfig:
     # "uniform" locks one schedule at the worst shard's first DED;
     # "per_shard" walks every chip to its own V_min.
     rail_policy: str = "uniform"
+    # Environment scenario (DESIGN.md §14): None (historical i.i.d. stream,
+    # bit-for-bit), a name from scenario.ENVIRONMENTS ("consumer" /
+    # "avionics" / "space"), or an EnvironmentProfile. Scales every domain's
+    # fault flux, shapes the masks into correlated multi-bit bursts, and
+    # drifts each mesh shard's rate over the soak.
+    environment: Any = None
+    # Override the environment's aging-drift sigma (scenario.resolve); a bare
+    # drift with environment=None gets the neutral 1x-flux burst-free env.
+    drift: float | None = None
+    # Locked rails re-trip under drift: retreat another backoff step instead
+    # of holding (core/controller.py `adaptive`).
+    adaptive_rails: bool = False
 
     @property
     def embed_protected(self) -> bool:
         return self.multi_rail if self.protect_embed is None else self.protect_embed
+
+    @property
+    def environment_profile(self):
+        return scenario.resolve(self.environment, drift=self.drift)
 
     @property
     def escalation_policy(self) -> EscalationPolicy | None:
@@ -287,6 +304,7 @@ class ServingEngine:
                 profiles=rail_profiles,
                 codecs=store_codecs,
                 mesh=mesh,
+                env=rel.environment_profile,
             )
             self.voltage = rel.voltage or self.platform.v_nom
             if rel.multi_rail:
@@ -302,6 +320,7 @@ class ServingEngine:
                     codecs={
                         d: self._store.codec_of(d) for d in self._store.domains
                     },
+                    adaptive=rel.adaptive_rails,
                 )
                 if mesh is not None:
                     self.controller = MeshRailController(
@@ -534,8 +553,11 @@ class ServingEngine:
                 walk_kv=walk_kv,
             )
         profile = self.platform or vmod.PLATFORMS["vc707"]
+        envp = self.rel.environment_profile if self.rel is not None else None
         if self.rel is not None and self.rel.multi_rail:
-            profile = self._store.domain_profile("kv")
+            profile = self._store.domain_profile("kv")  # env-scaled flux
+        elif envp is not None:
+            profile = envp.scale_profile(profile)
         geom = KVGeometry.from_config(self.cfg, page_tokens)
         if n_pages is None:
             n_pages = n_lanes * geom.pages_for(self.max_len)
@@ -559,6 +581,7 @@ class ServingEngine:
             seed=self.rel.seed if self.rel else 0,
             ecc=self.rel.ecc if self.rel else True,
             codec=kv_codec,
+            env=envp,
         )
         if kv_voltage is None:
             if self.rails is not None and "kv" in self.rails:
@@ -658,6 +681,7 @@ class ServingEngine:
                 ecc=self.rel.ecc,
                 codec=kv_codec,
                 shard=s,
+                env=self.rel.environment_profile,
             )
             if kv_voltage is not None:
                 arena.set_voltage(float(kv_voltage))

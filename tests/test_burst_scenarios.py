@@ -1,0 +1,340 @@
+"""Correlated bursts, the environment matrix, and aging drift (DESIGN.md §14).
+
+Four property groups:
+  * **default-off bit-identity** — a disabled BurstProfile / neutral
+    environment must reproduce the historical i.i.d. stream bit-for-bit at
+    the fault-field, mesh-step, and KV-arena level (the seed contract every
+    earlier PR's replay tests depend on);
+  * **replayability** — same key/counter -> identical burst masks, and the
+    single xp-generic expansion is bit-identical between its numpy-oracle
+    and jax paths on shared draws;
+  * **distribution** — the per-word burst-size histogram matches the
+    configured anchor-class probabilities within sampling tolerance;
+  * **scenario acceptance** — interleaved SECDED strictly beats plain SECDED
+    correctable coverage under every environment's burst shape, and
+    per-shard aging drift makes `per_shard` rail V_mins diverge while
+    `uniform` locks the fleet at the worst shard.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.core import scenario, sweep
+from repro.core.controller import MeshRailController, UndervoltController
+from repro.core.faultsim import DeviceFaultField, FaultField
+from repro.core.kvpages import KVGeometry, KVPageArena
+from repro.core.scenario import BurstProfile, expand_bursts
+from repro.core.telemetry import DomainFaultStats, FaultStats, ShardFaultStats
+from repro.core.voltage import PLATFORMS
+from repro.distributed import meshrel
+
+from conftest import tiny_cfg
+
+PROF = PLATFORMS["vc707"]
+MBU = scenario.MBU_DISTRIBUTION
+
+
+# ---------------------------------------------------------------------------
+# default-off bit-identity (the seed contract)
+# ---------------------------------------------------------------------------
+def test_disabled_burst_is_bit_identical_host_and_device():
+    """burst=None and a disabled BurstProfile() are the same constructor,
+    and both reproduce the historical stream bit-for-bit on each path."""
+    n, v = 1 << 14, 0.57
+    base = FaultField(PROF, n, seed=3)
+    off = FaultField(PROF, n, seed=3, burst=BurstProfile())
+    assert off.burst is None  # normalized: shares jit/lru cache entries
+    mb, mo = base.masks(v), off.masks(v)
+    assert np.array_equal(mb.lo, mo.lo)
+    assert np.array_equal(mb.hi, mo.hi)
+    assert np.array_equal(mb.parity, mo.parity)
+
+    rates = np.full(n, PROF.fault_rate(v), np.float32)
+    dv = base.device_field().masks_for_rates(rates)
+    do = off.device_field().masks_for_rates(rates)
+    for a, b in zip(dv, do):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_neutral_environment_kv_arena_bit_identical():
+    """env=resolve(None, drift=0.0) (neutral: 1x flux, no burst, no drift)
+    must be bit-identical to env=None on the KV fault stream."""
+    geom = KVGeometry.from_config(tiny_cfg(), page_tokens=4)
+    arenas = [
+        KVPageArena(geom, PROF, n_pages=3, seed=7, env=e)
+        for e in (None, scenario.resolve(None, drift=0.0))
+    ]
+    for a in arenas:
+        a.set_voltage(0.55)
+        a.tick()
+    a, b = arenas
+    assert np.array_equal(np.asarray(a.lo), np.asarray(b.lo))
+    assert np.array_equal(np.asarray(a.hi), np.asarray(b.hi))
+    assert np.array_equal(np.asarray(a.parity), np.asarray(b.parity))
+
+
+def test_mesh_chunked_masks_default_matches_device_field():
+    """The shard-0 mesh mask stream with burst unset stays bit-identical to
+    the unsharded DeviceFaultField — the PR-5 anchor, untouched by the
+    burst plumbing."""
+    n, v = 3000, 0.55
+    field = DeviceFaultField(PROF, n, seed=9, chunk_words=1024)
+    rates = jnp.full((n,), PROF.fault_rate(v), jnp.float32)
+    ref = field.masks_for_rates(rates)
+    got = meshrel._chunked_shard_masks(
+        jax.random.PRNGKey(9 ^ 0xECC), n, rates, jnp.float32(PROF.row_sigma),
+        8, 1024,
+    )
+    for a, b in zip(ref, got):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# replayability
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_burst_masks_replayable(seed):
+    """Same (seed, chunk counter, rate) -> bit-identical burst masks, and
+    the burst set is a superset of the base anchors (monotone expansion:
+    FIP's ordering survives)."""
+    n = 2048
+    rates = np.full(n, PROF.fault_rate(0.55), np.float32)
+    base = DeviceFaultField(PROF, n, seed=seed).masks_for_rates(rates)
+    f = DeviceFaultField(PROF, n, seed=seed, burst=MBU)
+    m1 = f.masks_for_rates(rates)
+    m2 = f.masks_for_rates(rates)
+    for a, b in zip(m1, m2):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(base, m1):  # anchors survive: OR-expansion, never XOR
+        a, b = np.asarray(a), np.asarray(b)
+        assert np.array_equal(a & b, a)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_expand_bursts_numpy_jax_bit_identical(seed):
+    """One implementation, two array namespaces: on shared draws the host
+    oracle and the device path agree bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    nb, m = 72, 1024
+    faulty = rng.random((nb, m)) < 0.002
+    cu = rng.random((nb, m)).astype(np.float32)
+    wu = rng.random((nb, m)).astype(np.float32)
+    eb = rng.integers(0, nb, m)
+    outn = expand_bursts(faulty, MBU, cu, wu, eb, xp=np)
+    outj = expand_bursts(
+        jnp.asarray(faulty), MBU, jnp.asarray(cu), jnp.asarray(wu),
+        jnp.asarray(eb), xp=jnp,
+    )
+    assert np.array_equal(outn, np.asarray(outj))
+    # disabled profile is the identity, not a zero-probability draw
+    assert expand_bursts(faulty, BurstProfile(), xp=np) is faulty
+
+
+# ---------------------------------------------------------------------------
+# burst-size distribution
+# ---------------------------------------------------------------------------
+def test_burst_histogram_matches_configured_distribution():
+    """Sparse anchors (<= 1 per word, mostly) expanded under the MoRS-style
+    distribution: the fraction of single-anchor words that end up with 2 and
+    3 flipped bits must match the configured class probabilities within
+    sampling tolerance (edge truncation costs ~1/72 of promotions)."""
+    burst = BurstProfile(double_adjacent=0.12, triple_adjacent=0.02,
+                         random_double=0.01)
+    rng = np.random.default_rng(0)
+    nb, m = 72, 1 << 16
+    faulty = rng.random((nb, m)) < 3e-4  # ~1415 anchors, ~0.02/word
+    cu = rng.random((nb, m)).astype(np.float32)
+    eb = rng.integers(0, nb, m)
+    out = expand_bursts(faulty, burst, cu, None, eb, xp=np)
+
+    base_cnt = faulty.sum(axis=0)
+    out_cnt = out.sum(axis=0)
+    single = base_cnt == 1  # isolate words whose histogram is one anchor's
+    n1 = int(single.sum())
+    assert n1 > 800  # enough samples for the tolerances below
+    sizes = out_cnt[single]
+    frac2 = float((sizes == 2).sum()) / n1
+    frac3 = float((sizes == 3).sum()) / n1
+    # doubles: double_adjacent + random_double = 0.13 (minus edge loss)
+    assert 0.08 < frac2 < 0.18, frac2
+    # triples: triple_adjacent = 0.02
+    assert 0.005 < frac3 < 0.045, frac3
+    # promoted bit budget overall: E[extra] = 0.12*1 + 0.02*2 + 0.01*1 = 0.17
+    extra = int(out.sum() - faulty.sum())
+    anchors = int(faulty.sum())
+    assert 0.12 * anchors < extra < 0.22 * anchors, (extra, anchors)
+
+
+def test_word_adjacent_spills_into_next_word():
+    burst = BurstProfile(word_adjacent=1.0)  # every anchor repeats next word
+    faulty = np.zeros((72, 8), bool)
+    faulty[5, 2] = True
+    faulty[9, 7] = True  # last word: truncated, nowhere to spill
+    wu = np.zeros((72, 8), np.float32)
+    out = expand_bursts(faulty, burst, None, wu, None, xp=np)
+    assert out[5, 2] and out[5, 3]  # same bitplane, next word
+    assert out[9, 7] and out.sum() == 3  # edge truncation, no wraparound
+
+
+# ---------------------------------------------------------------------------
+# scenario acceptance: interleaving must win under bursts
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("env_name", sorted(scenario.ENVIRONMENTS))
+def test_ileave_beats_secded_under_bursts(env_name):
+    """Under every environment's burst shape, 4-way interleaved SECDED
+    corrects strictly more than plain SECDED: adjacent flips land one per
+    subcode. This is the design-space result the burst model exists to
+    show; it is an acceptance criterion, not just a benchmark row."""
+    env = scenario.ENVIRONMENTS[env_name]
+    v = scenario.scenario_voltage(PROF, env)
+    rows = sweep.sweep_codec_schemes(
+        ("secded72", "ileave88"), [(PROF, v)], 1 << 16, seed=0, env=env
+    )
+    by = {r["codec"]: r for r in rows}
+    assert by["secded72"]["environment"] == env_name
+    sec, ilv = by["secded72"], by["ileave88"]
+    assert sec["faulty_words"] > 50, "scenario voltage drew too few faults"
+    assert ilv["coverage_correctable"] > sec["coverage_correctable"]
+    # and the bursts are why: SECDED flags the doubles it cannot fix
+    assert ilv["detected"] < sec["detected"]
+
+
+def test_scenario_rows_without_env_are_historical():
+    """env=None keeps sweep_codec_schemes bit-for-bit: no environment key,
+    same counters as before the scenario axis existed."""
+    rows = sweep.sweep_codec_schemes(("secded72",), [(PROF, 0.55)], 4096, seed=0)
+    assert "environment" not in rows[0]
+
+
+# ---------------------------------------------------------------------------
+# aging drift: per-shard divergence vs the uniform worst-shard lock
+# ---------------------------------------------------------------------------
+def test_drift_diverges_per_shard_vmins_and_collapses_at_zero():
+    drift_env = scenario.resolve(None, drift=0.5)  # neutral flux, drift only
+    voltages = np.round(np.arange(0.60, 0.539, -0.005), 3)
+    aged = sweep.shard_vmin_spread(
+        PROF, voltages, 1 << 14, 8, seed=5, env=drift_env, age=300.0
+    )
+    assert len(aged) == 8
+    # chips fan out lognormally (e^{1.5 z_s} rate spread at age 300): the
+    # per-shard lock points cannot all coincide
+    assert len({v for v in aged if v is not None}) >= 2, aged
+    # drift=0 collapse: threading the neutral env at age 0/sigma 0 is
+    # bit-identical to not threading an env at all
+    base = sweep.shard_vmin_spread(PROF, voltages, 1 << 14, 8, seed=5)
+    zero = sweep.shard_vmin_spread(
+        PROF, voltages, 1 << 14, 8, seed=5,
+        env=scenario.resolve(None, drift=0.0), age=300.0,
+    )
+    assert zero == base
+    # weakest aged chip faults earlier (higher lock) than the no-drift walk
+    # of the same silicon or at least never later on every chip at once
+    assert any(a != b for a, b in zip(aged, base))
+
+
+def test_soak_per_shard_diverges_uniform_locks_worst_shard():
+    """8-shard soak driven by per-(shard, voltage) sweep telemetry under
+    drift: `per_shard` rails walk to distinct V_mins; `uniform` locks the
+    whole fleet at the worst shard's first DED."""
+    drift_env = scenario.resolve(None, drift=0.5)
+    voltages = [round(0.60 - 0.005 * i, 3) for i in range(13)]
+    grid = [(PROF, v) for v in voltages]
+    per_shard_points = sweep.sweep_platform_grid_sharded(
+        grid, 1 << 14, 8, seed=5, env=drift_env, age=300.0
+    )
+    telem = [  # telem[s][v] -> detected count of chip s at voltage v
+        {v: p.stats for v, p in zip(voltages, pts)}
+        for pts in per_shard_points
+    ]
+
+    def stats_at(volts_by_shard):
+        def near(v):  # controller steps are 0.005-aligned by construction
+            return min(telem[0], key=lambda g: abs(g - v))
+
+        return ShardFaultStats(
+            [
+                DomainFaultStats(
+                    {
+                        "mlp": FaultStats(
+                            words=1 << 14,
+                            detected=telem[s][near(volts_by_shard[s])].detected,
+                            shard=s,
+                        )
+                    },
+                    shard=s,
+                )
+                for s in range(8)
+            ]
+        )
+
+    kw = dict(step_v=0.005, start_v=0.60)
+    per = MeshRailController(PROF, ("mlp",), 8, policy="per_shard", **kw)
+    uni = MeshRailController(PROF, ("mlp",), 8, policy="uniform", **kw)
+    for _ in range(40):
+        per.update(stats_at([v["mlp"] for v in per.voltages]))
+        uni.update(stats_at([v["mlp"] for v in uni.voltages]))
+        if per.locked and uni.locked:
+            break
+    assert per.locked and uni.locked
+    per_vmins = [v["mlp"] for v in per.voltages]
+    uni_vmins = [v["mlp"] for v in uni.voltages]
+    # per-shard rails fan out with the drifted silicon...
+    assert len(set(per_vmins)) >= 2, per_vmins
+    # ...the uniform fleet runs one voltage, pinned by its worst chip
+    assert len(set(uni_vmins)) == 1
+    assert uni_vmins[0] >= max(per_vmins) - 1e-9, (uni_vmins[0], per_vmins)
+
+
+def test_adaptive_rail_retreats_when_drift_retrips_locked_canary():
+    """Default rails hold once locked; adaptive rails retreat another
+    backoff step when the canary re-trips under rising flux (aging drift,
+    environment change) — and still never resume descending on their own."""
+    quiet = FaultStats(words=1000)
+    trip = FaultStats(words=1000, detected=3)
+    fixed = UndervoltController(PROF, start_v=PROF.v_min)
+    adaptive = UndervoltController(PROF, start_v=PROF.v_min, adaptive=True)
+    for c in (fixed, adaptive):
+        c.update(quiet)
+        c.update(trip)  # first DED: back off + lock
+        assert c.locked
+    v_lock = adaptive.voltage
+    assert fixed.update(trip) == v_lock  # historical: locked means hold
+    assert fixed.history[-1].action == "hold"
+    assert adaptive.update(trip) == pytest.approx(v_lock + 0.01)
+    assert adaptive.history[-1].action == "drift+backoff"
+    assert adaptive.locked  # retreat, not a resumed walk
+    assert adaptive.update(quiet) == pytest.approx(v_lock + 0.01)
+    assert adaptive.history[-1].action == "hold"
+
+
+def test_kv_arena_burst_stream_replayable_and_denser():
+    """Two arenas under the same environment draw bit-identical burst
+    streams; the avionics flux+burst stream flips strictly more bits than
+    the bare profile at the same voltage."""
+    geom = KVGeometry.from_config(tiny_cfg(), page_tokens=4)
+    env = scenario.ENVIRONMENTS["avionics"]
+    prof = env.scale_profile(PROF)  # engine convention: flux in the profile
+    mk = lambda e, p: KVPageArena(geom, p, n_pages=3, seed=7, env=e)
+    a, b = mk(env, prof), mk(env, prof)
+    v = scenario.scenario_voltage(PROF, env)
+    for arena in (a, b):
+        arena.set_voltage(v)
+        arena.tick()
+    assert np.array_equal(np.asarray(a.lo), np.asarray(b.lo))
+    assert np.array_equal(np.asarray(a.hi), np.asarray(b.hi))
+    assert np.array_equal(np.asarray(a.parity), np.asarray(b.parity))
+
+    bare = mk(None, PROF)
+    bare.set_voltage(v)
+    bare.tick()
+    flips = lambda x: int(
+        np.unpackbits(np.asarray(x.lo).view(np.uint8)).sum()
+        + np.unpackbits(np.asarray(x.hi).view(np.uint8)).sum()
+    )
+    assert flips(a) > flips(bare)

@@ -22,6 +22,14 @@ def _serve_rows(ratio):
     return [{"kernel": "serve_throughput", "cont_over_fixed": ratio}]
 
 
+def _mesh_rows(words_per_s_by_devices):
+    return [
+        {"kernel": "sharded_scrub", "devices": d, "us_per_call": 1.0,
+         "words_per_s": wps}
+        for d, wps in words_per_s_by_devices.items()
+    ]
+
+
 @pytest.fixture
 def gate(tmp_path, monkeypatch):
     """Point the gate at throwaway baseline/current files; returns writers."""
@@ -30,6 +38,7 @@ def gate(tmp_path, monkeypatch):
         "CURRENT": tmp_path / "cur_kernel.json",
         "SERVE_BASELINE": tmp_path / "base_serve.json",
         "SERVE_CURRENT": tmp_path / "cur_serve.json",
+        "MESH_CURRENT": tmp_path / "cur_mesh.json",
     }
     for attr, p in paths.items():
         monkeypatch.setattr(cr, attr, str(p))
@@ -115,6 +124,50 @@ def test_step_summary_table_reports_every_gate(gate, tmp_path):
     assert cr.check(threshold=0.20, summary_path=str(summary)) == 0
     assert summary.read_text().count("### Benchmark regression gate") == 2
     assert "| inject_scrub fused_over_pair | ✅ pass |" in summary.read_text()
+
+
+def test_mesh_gate_fails_on_shrinking_scaling(gate):
+    """The exact regression BENCH_mesh.json recorded — d8 throughput below
+    d4 — must fail loudly, not sit silently in a JSON artifact."""
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.0}))
+    gate(
+        "MESH_CURRENT",
+        _mesh_rows({1: 6.527e6, 2: 8.844e6, 4: 1.071e7, 8: 8.747e6}),
+    )
+    assert cr.check(threshold=0.20) == 1  # d4 -> d8 is x0.82 < floor 0.95
+    # monotone (or mildly noisy) scaling passes
+    gate(
+        "MESH_CURRENT",
+        _mesh_rows({1: 6.5e6, 2: 8.8e6, 4: 1.07e7, 8: 1.05e7}),
+    )
+    assert cr.check(threshold=0.20) == 0  # x0.98 dip tolerated by the floor
+    # the floor is a flag, not a constant
+    assert cr.check(threshold=0.20, mesh_floor=0.99) == 1
+
+
+def test_mesh_gate_skipped_without_run_and_errors_on_one_row(gate, tmp_path):
+    summary = tmp_path / "summary.md"
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.0}))
+    assert cr.check(threshold=0.20, summary_path=str(summary)) == 0
+    assert "| sharded_scrub scaling | ➖ skipped | no current run |" in (
+        summary.read_text()
+    )
+    gate("MESH_CURRENT", _mesh_rows({1: 6.5e6}))
+    assert cr.check(threshold=0.20) == 2  # one device count gates nothing
+
+
+def test_only_restricts_gates(gate):
+    """`--only mesh` lanes produce just sharded_scrub.json; the kernel gate
+    must not crash on the artifacts they never measured."""
+    gate("MESH_CURRENT", _mesh_rows({1: 1.0e6, 8: 7.5e6}))
+    # no kernel baseline/current files exist in this lane at all
+    assert cr.check(threshold=0.20, only=("mesh",)) == 0
+    gate("MESH_CURRENT", _mesh_rows({1: 1.0e6, 8: 0.5e6}))
+    assert cr.check(threshold=0.20, only=("mesh",)) == 1
+    with pytest.raises(AssertionError):
+        cr.check(only=("mesh", "turbo"))
 
 
 def test_summary_skipped_serve_row(gate, tmp_path):
