@@ -21,6 +21,14 @@ are useless across runners, which differ 3-5x):
     ``--mesh-floor`` of the previous count's throughput. No baseline file
     needed: like the cont-over-fixed >= 1.0 clause this is an absolute
     acceptance property of the in-process measurement.
+  * accuracy curve shape (accuracy_campaign.json, when a current run
+    exists): every nominal-voltage row must score exactly zero divergence
+    (the guardband is fault-free by construction — any nonzero score is a
+    harness bug), and when both parity65 and ileave88 rows are present the
+    interleaved code's zero-divergence floor must reach strictly deeper
+    than the detect-only code's (the paper-shaped codec ordering). These
+    are deterministic properties of the fixed-seed campaign, not timing
+    ratios, so there is no threshold knob.
 
 ``--retries N`` re-measures and re-checks up to N times on failure: the
 ratios cancel machine speed but a badly descheduled CI runner can still
@@ -51,6 +59,7 @@ CURRENT = os.path.join(HERE, "out", "kernel_micro.json")
 SERVE_BASELINE = os.path.join(HERE, "baseline", "serve_throughput.json")
 SERVE_CURRENT = os.path.join(HERE, "out", "serve_throughput.json")
 MESH_CURRENT = os.path.join(HERE, "out", "sharded_scrub.json")
+ACC_CURRENT = os.path.join(HERE, "out", "accuracy_campaign.json")
 
 
 def _gated_rows(rows: list[dict]) -> dict:
@@ -187,6 +196,72 @@ def _check_mesh(mesh_floor: float, results: list | None = None) -> int:
     return rc
 
 
+def _zero_floor(rows: list[dict], codec: str) -> float | None:
+    """Deepest (lowest) voltage at which ``codec`` still scores exactly zero
+    divergence, or None when the codec never holds a clean point."""
+    zero = [
+        float(r["voltage"]) for r in rows
+        if r.get("codec") == codec and r.get("divergence") == 0.0
+    ]
+    return min(zero) if zero else None
+
+
+def _check_accuracy(results: list | None = None) -> int:
+    """Shape gate on the accuracy campaign (no baseline file, no threshold).
+
+    Two absolute acceptance properties of accuracy_campaign.json:
+      1. nominal rows diverge exactly 0.0 — faults cannot exist above v_min,
+         so any score there means the clean reference itself is broken;
+      2. ileave88's zero-divergence floor < parity65's when both codecs were
+         campaigned — the burst-correcting code must hold the clean output
+         strictly deeper than the detect-only code.
+    """
+    results = [] if results is None else results
+    if not os.path.exists(ACC_CURRENT):
+        results.append(("accuracy campaign shape", "skipped", "no current run"))
+        return 0  # accuracy gate is opt-in via running benchmarks.accuracy_campaign
+    with open(ACC_CURRENT) as f:
+        rows = [r for r in json.load(f) if "divergence" in r]
+    if not rows:
+        print("FAIL: accuracy_campaign.json has no scored rows", file=sys.stderr)
+        results.append(("accuracy campaign shape", "error", "no scored rows"))
+        return 2
+    rc = 0
+    bad_nominal = [
+        r for r in rows if r.get("nominal") and r["divergence"] != 0.0
+    ]
+    if bad_nominal:
+        worst = max(bad_nominal, key=lambda r: r["divergence"])
+        print(
+            f"FAIL: {len(bad_nominal)} nominal rows diverged from the clean "
+            f"run (worst: {worst['codec']}@{worst['voltage']}V = "
+            f"{worst['divergence']:.4f})",
+            file=sys.stderr,
+        )
+        rc = 1
+    floors = {c: _zero_floor(rows, c) for c in ("parity65", "ileave88")}
+    ordered = None
+    if all(f is not None for f in floors.values()):
+        ordered = floors["ileave88"] < floors["parity65"]
+        print(
+            f"accuracy zero-divergence floors: parity65 {floors['parity65']}V, "
+            f"ileave88 {floors['ileave88']}V (interleaved must reach deeper)"
+        )
+        if not ordered:
+            print(
+                "FAIL: ileave88 does not hold zero divergence deeper than "
+                "parity65",
+                file=sys.stderr,
+            )
+            rc = 1
+    detail = (
+        f"{len(rows)} rows; nominal clean: {not bad_nominal}"
+        + (f"; ileave88<parity65 floor: {ordered}" if ordered is not None else "")
+    )
+    results.append(("accuracy campaign shape", "fail" if rc else "pass", detail))
+    return rc
+
+
 def _default_remeasure() -> None:
     """Re-run the measured benchmarks in a fresh process (clean jit caches)."""
     env = dict(os.environ)
@@ -232,7 +307,7 @@ def write_step_summary(results: list, path: str) -> None:
         f.write("\n".join(lines) + "\n")
 
 
-GATES = ("kernel", "serve", "mesh")
+GATES = ("kernel", "serve", "mesh", "accuracy")
 
 
 def check(
@@ -264,6 +339,8 @@ def check(
             rc = _check_serve(threshold, results) or rc
         if "mesh" in only:
             rc = _check_mesh(mesh_floor, results) or rc
+        if "accuracy" in only:
+            rc = _check_accuracy(results) or rc
         if rc == 0:
             break
         if attempt < retries:

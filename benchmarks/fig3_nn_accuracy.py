@@ -6,6 +6,12 @@ paper's 2.56%), stores int8 weights SECDED-encoded, then sweeps V_CCBRAM
 through the critical region measuring classification error and modeled
 power. The `fuse=True` read path exercises the Pallas decode-matmul kernel
 in interpret mode.
+
+Divergence rows: each point also carries ``divergence_vs_clean`` — the
+shared campaign scorer (core/campaign.label_divergence, the classifier form
+of the LM campaign's token divergence) against the fault-free predictions —
+and the scorer version, so this figure and BENCH_accuracy.json measure
+quality loss in the same units (DESIGN.md §15).
 """
 
 from __future__ import annotations
@@ -13,7 +19,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import csv_line, emit, timed
-from repro.core import voltage
+from repro.core import campaign, voltage
 from repro.core.nn_accel import EccMLP
 from repro.data import mnist
 
@@ -29,25 +35,35 @@ def run() -> list[dict]:
 
     rows = []
     mlp.set_voltage(prof.v_nom, ecc=True)
-    err0, us0 = timed(mlp.error_rate, xte, yte, repeat=1)
+    pred0, us0 = timed(mlp.predict, xte, repeat=1)
+    err0 = float((pred0 != yte).mean())
     rows.append(
         {"voltage": prof.v_nom, "err_free": err0, "us": us0,
-         "power_w": mlp.power_w()}
+         "power_w": mlp.power_w(),
+         "scorer_version": campaign.SCORER_VERSION}
     )
     vs = np.round(np.arange(prof.v_crash, prof.v_min + 1e-9, 0.01), 3)
     for v in vs[::-1]:
         mlp.set_voltage(float(v), ecc=True)
-        err_ecc, us = timed(mlp.error_rate, xte, yte, repeat=1)
+        pred_ecc, us = timed(mlp.predict, xte, repeat=1)
+        err_ecc = float((pred_ecc != yte).mean())
         cov = mlp.stats.coverage()
         p_ecc = mlp.power_w()
         mlp.set_voltage(float(v), ecc=False)
-        err_raw = mlp.error_rate(xte, yte)
+        pred_raw = mlp.predict(xte)
+        err_raw = float((pred_raw != yte).mean())
         rows.append(
             {
                 "voltage": float(v),
                 "err_ecc": err_ecc,
                 "err_no_ecc": err_raw,
                 "err_free": err0,
+                # quality loss in the campaign's units: prediction churn vs
+                # the clean run, not error vs labels (a faulty model can get
+                # lucky on labels; it cannot get lucky on the clean output)
+                "divergence_vs_clean": campaign.label_divergence(pred0, pred_ecc),
+                "divergence_no_ecc": campaign.label_divergence(pred0, pred_raw),
+                "scorer_version": campaign.SCORER_VERSION,
                 "faulty_words": mlp.stats.faulty_words,
                 "coverage_correctable": cov["correctable"],
                 "power_w": p_ecc,
@@ -66,7 +82,7 @@ def main():
             csv_line(
                 f"fig3/vc707@{r['voltage']:.2f}V", r["us"],
                 f"err_ecc={100 * r['err_ecc']:.2f}%;err_no_ecc={100 * r['err_no_ecc']:.2f}%;"
-                f"power={r['power_w']:.2f}W",
+                f"divergence={r['divergence_vs_clean']:.4f};power={r['power_w']:.2f}W",
             )
         )
     last = rows[-1]

@@ -13,6 +13,7 @@ a regression is a one-line diff against the previous commit's file).
   kernels Pallas kernel micro + fused-vs-naive roofline model
   codecs  ECC scheme comparison: coverage vs overhead vs scrub throughput
   mesh    sharded-scrub throughput vs host-device count (DESIGN.md §13)
+  accuracy LM output divergence vs voltage per codec (DESIGN.md §15)
   roofline dry-run roofline table (reads benchmarks/out/dryrun.json)
 """
 
@@ -26,6 +27,7 @@ import sys
 import time
 
 from benchmarks import (
+    accuracy_campaign,
     codec_compare,
     fig1_fault_rate,
     fig2_fault_types,
@@ -44,6 +46,7 @@ SECTIONS = [
     ("kernels", kernel_micro),
     ("codecs", codec_compare),
     ("mesh", sharded_scrub),
+    ("accuracy", accuracy_campaign),
     ("roofline", roofline),
 ]
 

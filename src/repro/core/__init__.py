@@ -9,9 +9,11 @@ Built-in-ECC-under-undervolting for ML memory systems:
   * `telemetry`        — CORRECTED / DETECTED / SILENT fault accounting
   * `quantize`         — int8 + 64-bit word packing (BRAM word geometry)
   * `scenario`         — burst-fault shapes, environment matrix, aging drift
+  * `campaign`         — accuracy-under-undervolt divergence scoring + harness
 """
 
 from repro.core import (
+    campaign,
     controller,
     ecc,
     faultsim,
@@ -22,6 +24,7 @@ from repro.core import (
     telemetry,
     voltage,
 )
+from repro.core.campaign import CampaignSpec, DivergenceReport, run_campaign
 from repro.core.controller import (
     RAIL_POLICIES,
     EscalationPolicy,
@@ -36,8 +39,9 @@ from repro.core.telemetry import DomainFaultStats, FaultStats, ShardFaultStats
 from repro.core.voltage import PLATFORMS, PlatformProfile
 
 __all__ = [
-    "controller", "ecc", "faultsim", "hsiao", "memory", "quantize",
-    "scenario", "telemetry", "voltage", "EscalationPolicy",
+    "campaign", "controller", "ecc", "faultsim", "hsiao", "memory",
+    "quantize", "scenario", "telemetry", "voltage", "CampaignSpec",
+    "DivergenceReport", "run_campaign", "EscalationPolicy",
     "MeshRailController", "MultiRailController", "RAIL_POLICIES",
     "UndervoltController", "FaultField", "FlipMasks", "EccMemoryDomain",
     "DomainFaultStats", "FaultStats", "ShardFaultStats", "PLATFORMS",

@@ -1,0 +1,347 @@
+"""Accuracy-under-undervolt campaign: divergence scoring + harness (§15).
+
+The paper's headline result — ~40% BRAM power saving below the guardband with
+negligible NN accuracy loss thanks to built-in ECC — is measured everywhere
+else in this repo by proxy (DED counters). This module measures the quantity
+users actually care about: *output divergence* of a served LM between the
+clean nominal run and the fault-injected undervolted run, per codec, per
+voltage, per environment scenario (the accuracy-vs-voltage curve).
+
+Scorers (all exactly zero for clean-vs-clean, monotone in injected damage in
+expectation):
+
+  * greedy-match prefix length — per prompt, how many greedy-decoded tokens
+    match the clean rollout before the first mismatch; ``token_divergence``
+    collapses a batch to ``1 - mean(match_len)/n`` in [0, 1].
+  * logit KL — mean KL(clean ‖ faulty) in nats over teacher-forced,
+    position-aligned logits (``models.lm.sequence_logits`` on the *same*
+    token sequence through both parameter sets; comparing logits along each
+    model's own rollout is ill-defined after the first mismatch).
+  * perplexity delta — each parameter set's perplexity of the *clean*
+    continuation; the faulty model's excess is the quality loss.
+
+The harness (``run_campaign``) drives a single-rail inline ``ServingEngine``
+per (environment, codec): decode the reference at nominal (the guardband is
+fault-free by construction, so nominal == clean), then walk the campaign
+voltage grid, re-injecting faults and re-scoring at each step. The eval set
+is synthetic fixed-seed prompts — the model is randomly initialised, so the
+campaign measures *output stability under faults*, not task accuracy; that
+is exactly the paper's experiment (their BRAM test patterns are synthetic
+too) transplanted to LM serving.
+
+Scores are computed against the engine's own quantized clean output (the
+int8 ECC planes), not the raw float params: quantization noise cancels, so
+a nonzero score is injected-fault damage and nothing else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import scenario, sweep
+from repro.core import voltage as vmod
+
+# Bump when any scorer's definition changes: BENCH_accuracy rows and
+# fig3's aligned rows carry this so trajectories across commits are only
+# compared within a scorer generation.
+SCORER_VERSION = 1
+
+# Canary prompt length (ServingEngine.canary_divergence); short enough that
+# a canary round costs one prefill + a dozen decode steps.
+CANARY_PROMPT_LEN = 8
+
+
+# ---------------------------------------------------------------------------
+# Scorers
+# ---------------------------------------------------------------------------
+def greedy_match_len(ref: np.ndarray, test: np.ndarray) -> np.ndarray:
+    """Per-row matched-prefix length of two (B, T) token grids.
+
+    Row i scores t iff ``ref[i, :t] == test[i, :t]`` and either t == T or
+    ``ref[i, t] != test[i, t]`` — the number of greedy tokens survived
+    before the first divergence.
+    """
+    ref = np.asarray(ref)
+    test = np.asarray(test)
+    assert ref.shape == test.shape and ref.ndim == 2, (ref.shape, test.shape)
+    neq = ref != test
+    return np.where(
+        neq.any(axis=1), neq.argmax(axis=1), ref.shape[1]
+    ).astype(np.int64)
+
+
+def token_divergence(ref: np.ndarray, test: np.ndarray) -> float:
+    """``1 - mean(matched prefix fraction)`` in [0, 1]; exactly 0.0 iff
+    every row of ``test`` is bit-identical to ``ref``."""
+    ref = np.asarray(ref)
+    n = ref.shape[1]
+    if n == 0:
+        return 0.0
+    match = greedy_match_len(ref, test)
+    return float(1.0 - match.mean() / n)
+
+
+def label_divergence(ref: np.ndarray, test: np.ndarray) -> float:
+    """Fraction of predictions differing from the clean run's (classifier
+    form of ``token_divergence``; fig3's MLP rows use it so the LM campaign
+    and the paper's accelerator figure share one divergence definition).
+    Exactly 0.0 iff every prediction matches."""
+    ref = np.asarray(ref)
+    test = np.asarray(test)
+    assert ref.shape == test.shape, (ref.shape, test.shape)
+    if ref.size == 0:
+        return 0.0
+    return float((ref != test).mean())
+
+
+def _log_softmax(logits: np.ndarray) -> np.ndarray:
+    x = np.asarray(logits, np.float64)
+    x = x - x.max(axis=-1, keepdims=True)
+    return x - np.log(np.exp(x).sum(axis=-1, keepdims=True))
+
+
+def logit_kl(ref_logits: np.ndarray, test_logits: np.ndarray) -> float:
+    """Mean KL(ref ‖ test) in nats over all (batch, position) cells.
+
+    Inputs are position-aligned (..., V) logits from the teacher-forced
+    paired eval (``lm.sequence_logits`` on the same token sequence).
+    Identical logits score exactly 0.0.
+    """
+    ref_logits = np.asarray(ref_logits)
+    assert ref_logits.shape == np.asarray(test_logits).shape
+    logp = _log_softmax(ref_logits)
+    logq = _log_softmax(test_logits)
+    kl = (np.exp(logp) * (logp - logq)).sum(axis=-1)
+    return float(kl.mean())
+
+
+def token_nll(logits: np.ndarray, tokens: np.ndarray) -> float:
+    """Mean negative log-likelihood (nats/token) of ``tokens`` (B, T) under
+    position-aligned ``logits`` (B, T, V)."""
+    logits = np.asarray(logits)
+    tokens = np.asarray(tokens)
+    assert logits.shape[:2] == tokens.shape, (logits.shape, tokens.shape)
+    logp = _log_softmax(logits)
+    gold = np.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+    return float(-gold.mean())
+
+
+def perplexity(logits: np.ndarray, tokens: np.ndarray) -> float:
+    return float(np.exp(token_nll(logits, tokens)))
+
+
+@dataclasses.dataclass(frozen=True)
+class DivergenceReport:
+    """One (voltage, codec) point's divergence vs the clean nominal run."""
+
+    n_prompts: int
+    n_tokens: int
+    match_len: float  # mean greedy matched-prefix length (tokens)
+    match_frac: float  # match_len / n_tokens
+    divergence: float  # 1 - match_frac (the curve's y-axis and the SLO unit)
+    kl: float  # mean KL(clean || faulty), nats (teacher-forced)
+    ppl_clean: float  # clean params' perplexity of the clean continuation
+    ppl_faulty: float  # faulty params' perplexity of the same continuation
+    ppl_delta: float  # ppl_faulty - ppl_clean (>= ~0; 0 when bit-identical)
+    scorer_version: int = SCORER_VERSION
+
+
+def score(
+    ref_tokens: np.ndarray,
+    test_tokens: np.ndarray,
+    ref_logits: np.ndarray | None = None,
+    test_logits: np.ndarray | None = None,
+    eval_tokens: np.ndarray | None = None,
+) -> DivergenceReport:
+    """Bundle every scorer over one clean/faulty rollout pair.
+
+    ``ref_tokens``/``test_tokens``: (B, T) greedy continuations from the
+    clean and faulty engines. ``ref_logits``/``test_logits``: optional
+    (B, S, V) teacher-forced logits over ``eval_tokens`` (B, S) — the clean
+    continuation both parameter sets are forced through; omit all three to
+    skip the KL/perplexity axes (they report 0.0).
+    """
+    ref_tokens = np.asarray(ref_tokens)
+    n = ref_tokens.shape[1]
+    match = greedy_match_len(ref_tokens, test_tokens)
+    kl = ppl_c = ppl_f = 0.0
+    if ref_logits is not None:
+        assert test_logits is not None and eval_tokens is not None
+        kl = logit_kl(ref_logits, test_logits)
+        ppl_c = perplexity(ref_logits, eval_tokens)
+        ppl_f = perplexity(test_logits, eval_tokens)
+    return DivergenceReport(
+        n_prompts=int(ref_tokens.shape[0]),
+        n_tokens=int(n),
+        match_len=float(match.mean()),
+        match_frac=float(match.mean() / max(n, 1)),
+        divergence=token_divergence(ref_tokens, test_tokens),
+        kl=kl,
+        ppl_clean=ppl_c,
+        ppl_faulty=ppl_f,
+        ppl_delta=ppl_f - ppl_c,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Eval set + model configs
+# ---------------------------------------------------------------------------
+def eval_prompts(
+    vocab: int, n_prompts: int, prompt_len: int, seed: int = 0
+) -> np.ndarray:
+    """Fixed synthetic eval set: (n_prompts, prompt_len) int32 in [0, vocab).
+
+    Deterministic in ``seed`` so the canary reference, the campaign rows,
+    and a reproducing run all decode the same prompts.
+    """
+    rng = np.random.default_rng(seed)
+    return rng.integers(
+        0, vocab, size=(n_prompts, prompt_len), dtype=np.int64
+    ).astype(np.int32)
+
+
+def campaign_model(name: str):
+    """Resolve a campaign model name to a ModelConfig.
+
+    ``tiny`` is the CI-sized config (qwen2-7b's layer recipe at smoke
+    dimensions); ``<arch>-smoke`` shrinks any registered arch; a bare arch
+    name is the production-shaped config (nightly/offline scale).
+    """
+    from repro import configs
+
+    if name == "tiny":
+        return dataclasses.replace(
+            configs.get_smoke_config("qwen2-7b"), name="tiny"
+        )
+    if name.endswith("-smoke"):
+        return configs.get_smoke_config(name[: -len("-smoke")])
+    return configs.get_config(name)
+
+
+# ---------------------------------------------------------------------------
+# Campaign harness
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    """One accuracy campaign: model x codecs x voltages x environments."""
+
+    model: str = "tiny"
+    platform: str = "vc707"
+    codecs: tuple = ("parity65", "secded72", "ileave88")
+    voltages: tuple | None = None  # None -> sweep.campaign_voltage_grid
+    environments: tuple = (None,)  # scenario names / profiles / None
+    n_prompts: int = 4
+    prompt_len: int = 8
+    n_tokens: int = 24
+    seed: int = 0
+    max_len: int = 64
+    # words for the sweep-proxy columns joined onto each row (0 disables);
+    # the proxy shows what the DED counters would have said at the same
+    # grid point, which is the gap this campaign exists to close
+    proxy_words: int = 1 << 16
+
+    def voltage_grid(self) -> tuple:
+        profile = vmod.PLATFORMS[self.platform]
+        if self.voltages is not None:
+            return tuple(float(v) for v in self.voltages)
+        return sweep.campaign_voltage_grid(profile)
+
+
+def run_campaign(spec: CampaignSpec) -> list[dict]:
+    """Run the campaign; one row dict per (environment, codec, voltage).
+
+    Per (environment, codec) an inline single-rail ServingEngine is built at
+    nominal, the clean reference rollout + teacher-forced logits are cached,
+    and each grid voltage re-injects faults (``set_voltage``) and re-scores.
+    Rows join the DivergenceReport with the engine's scrub telemetry, the
+    vmapped sweep's counter proxy at the same point, and the modeled BRAM
+    power saving — everything the accuracy-vs-voltage figure needs.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm
+    from repro.serving.engine import ReliabilityConfig, ServingEngine
+
+    cfg = campaign_model(spec.model)
+    profile = vmod.PLATFORMS[spec.platform]
+    voltages = spec.voltage_grid()
+    prompts = eval_prompts(
+        cfg.vocab, spec.n_prompts, spec.prompt_len, seed=spec.seed
+    )
+    params = lm.init_params(cfg, jax.random.PRNGKey(spec.seed))
+    logits_fn = jax.jit(lambda p, t: lm.sequence_logits(p, t, cfg))
+
+    rows: list[dict] = []
+    for env in spec.environments:
+        envp = scenario.resolve(env)
+        env_name = envp.name if envp is not None else None
+        for codec in spec.codecs:
+            proxy: dict[float, dict] = {}
+            if spec.proxy_words:
+                grid = [(profile, float(v)) for v in voltages]
+                for r in sweep.sweep_codec_schemes(
+                    [codec], grid, spec.proxy_words, seed=spec.seed, env=envp
+                ):
+                    proxy[round(r["voltage"], 4)] = r
+            rel = ReliabilityConfig(
+                platform=spec.platform,
+                mode="inline",
+                codecs=codec,
+                environment=envp,
+                seed=spec.seed,
+            )
+            eng = ServingEngine(cfg, params, rel=rel, max_len=spec.max_len)
+            # nominal: guardband voltages inject zero faults, so this rollout
+            # IS the clean (quantized) reference every score is against
+            ref_tokens = eng.generate(prompts, spec.n_tokens)
+            eval_tokens = np.concatenate([prompts, ref_tokens], axis=1)
+            full = jnp.asarray(eval_tokens)
+            # teacher-forced logits predicting positions prompt_len..end
+            sl = slice(spec.prompt_len - 1, -1)
+            ref_logits = np.asarray(logits_fn(eng.params, full))[:, sl]
+            cont = eval_tokens[:, spec.prompt_len :]
+            for v in voltages:
+                t0 = time.perf_counter()
+                eng.set_voltage(float(v))
+                test_tokens = eng.generate(prompts, spec.n_tokens)
+                test_logits = np.asarray(logits_fn(eng.params, full))[:, sl]
+                us = (time.perf_counter() - t0) * 1e6
+                rep = score(
+                    ref_tokens, test_tokens, ref_logits, test_logits, cont
+                )
+                st = eng._last_scrub
+                row = {
+                    "model": spec.model,
+                    "arch": cfg.name,
+                    "platform": profile.name,
+                    "codec": codec,
+                    "environment": env_name,
+                    "voltage": float(v),
+                    "nominal": float(v) >= profile.v_min,
+                    **dataclasses.asdict(rep),
+                    "words": st.words,
+                    "faulty_words": st.faulty_words,
+                    "corrected": st.corrected,
+                    "detected": st.detected,
+                    "silent": st.silent,
+                    "bram_saving_vs_nominal": vmod.power_saving(
+                        profile.v_nom, float(v), ecc=True
+                    ),
+                    "seed": spec.seed,
+                    "us": us,
+                }
+                pr = proxy.get(round(float(v), 4))
+                if pr is not None:
+                    row.update(
+                        proxy_words=pr["words"],
+                        proxy_faulty_words=pr["faulty_words"],
+                        proxy_corrected=pr["corrected"],
+                        proxy_detected=pr["detected"],
+                        proxy_silent=pr["silent"],
+                    )
+                rows.append(row)
+    return rows

@@ -16,6 +16,15 @@ that tripped the canary are exactly the double-bit class the stronger code
 corrects. The ladder is finite; once exhausted, the next trip retreats and
 locks as before. The redundancy cost of the stronger code is folded into the
 power model (voltage.multi_rail_bram_power with per-domain check bits).
+
+Accuracy canary (DESIGN.md §15): DED counters measure detectable corruption,
+not output quality — DNNs tolerate many faults the counters overweight
+(arXiv:2001.00053), and detect-only codes under re-encoding fault models can
+corrupt state without raising DED at all. Controllers therefore accept an
+optional per-interval ``divergence`` score (canary-prompt output divergence
+vs the clean nominal rollout, [0, 1]); when it exceeds the configured
+``divergence_slo`` the rail trips exactly like a DED canary — escalate if a
+ladder step remains, else back off and lock — even with zero DED events.
 """
 
 from __future__ import annotations
@@ -57,6 +66,7 @@ class ControllerRecord:
     action: str
     codec: str = DEFAULT_CODEC
     shard: int = -1  # mesh shard whose canary was judged (-1: unsharded)
+    divergence: float = 0.0  # canary-prompt divergence this interval
 
 
 class UndervoltController:
@@ -73,12 +83,14 @@ class UndervoltController:
         codec: str | None = None,
         shard: int = -1,
         adaptive: bool = False,
+        divergence_slo: float | None = None,
     ):
         self.platform = platform
         self.step_v = step_v
         self.backoff_steps = backoff_steps
         self.paranoid = paranoid
         self.adaptive = adaptive
+        self.divergence_slo = divergence_slo
         self.shard = int(shard)
         # Warm start: the guardband is fault-free by definition (paper §III),
         # so a search may legally begin anywhere in [v_min, v_nom].
@@ -101,9 +113,23 @@ class UndervoltController:
         change, self._pending_codec = self._pending_codec, None
         return change
 
-    def update(self, stats: FaultStats) -> float:
-        """Feed one read-interval's telemetry; returns the next rail voltage."""
-        trip = stats.detected > 0 or (self.paranoid and stats.silent > 0)
+    def update(
+        self, stats: FaultStats, divergence: float | None = None
+    ) -> float:
+        """Feed one read-interval's telemetry; returns the next rail voltage.
+
+        ``divergence``: optional canary-prompt output-divergence score for
+        this interval ([0, 1], 0 = bit-identical to the clean nominal run).
+        Scores above ``divergence_slo`` trip the rail even when the DED
+        counters are clean (accuracy canary, DESIGN.md §15).
+        """
+        acc_trip = (
+            divergence is not None
+            and self.divergence_slo is not None
+            and divergence > self.divergence_slo
+        )
+        ded_trip = stats.detected > 0 or (self.paranoid and stats.silent > 0)
+        trip = ded_trip or acc_trip
         stronger = (
             self.escalation.next_codec(self.codec) if self.escalation else None
         )
@@ -122,12 +148,15 @@ class UndervoltController:
                 action = "drift+backoff"
             else:
                 action = "hold"
-        elif trip and stronger is not None and stats.detected > 0 and (
-            ded_rate > self.escalation.ded_rate
+        elif trip and stronger is not None and (
+            acc_trip
+            or (stats.detected > 0 and ded_rate > self.escalation.ded_rate)
         ):
             # Step the *code* up instead of retreating the rail: the DED
             # class that tripped is what the stronger code corrects. Voltage
             # holds; the walk resumes under the new scheme next interval.
+            # An SLO-violating divergence score escalates unconditionally —
+            # the policy trades check-bit overhead against output quality.
             self.codec = stronger
             self._pending_codec = stronger
             action = "escalate"
@@ -137,7 +166,7 @@ class UndervoltController:
                 self.voltage + self.backoff_steps * self.step_v,
             )
             self.locked = True
-            action = "trip+backoff"
+            action = "acc+backoff" if acc_trip and not ded_trip else "trip+backoff"
         else:
             nxt = self.voltage - self.step_v
             if nxt < self.platform.v_crash:
@@ -151,6 +180,7 @@ class UndervoltController:
             ControllerRecord(
                 self.voltage, stats.corrected, stats.detected, stats.silent,
                 action, self.codec, self.shard,
+                0.0 if divergence is None else float(divergence),
             )
         )
         return self.voltage
@@ -181,6 +211,7 @@ class MultiRailController:
         codecs: dict | None = None,
         shard: int = -1,
         adaptive: bool = False,
+        divergence_slo: float | None = None,
     ):
         profiles = profiles or {}
         codecs = codecs or {}
@@ -196,6 +227,7 @@ class MultiRailController:
             escalation=escalation,
             shard=shard,
             adaptive=adaptive,
+            divergence_slo=divergence_slo,
         )
         self.rails = {
             d: UndervoltController(
@@ -249,17 +281,25 @@ class MultiRailController:
                 out[d] = change
         return out
 
-    def update(self, stats) -> dict:
+    def update(self, stats, divergence=None) -> dict:
         """Feed one scrub interval's per-domain telemetry.
 
         ``stats``: DomainFaultStats or {domain: FaultStats}; domains without
-        telemetry this interval hold (no blind descent). Returns the next
+        telemetry this interval hold (no blind descent). ``divergence``: a
+        scalar canary score broadcast to every rail (the canary rollout
+        exercises the whole model, so attribution to a single domain is
+        unknowable — protect-accuracy semantics retreat them all), or a
+        {domain: score} dict when the caller can attribute. Returns the next
         {domain: voltage} schedule.
         """
         by_domain = getattr(stats, "by_domain", stats)
+        div_of = (
+            divergence.get if isinstance(divergence, dict)
+            else (lambda d, _v=divergence: _v)
+        )
         for d, ctrl in self.rails.items():
             if d in by_domain:
-                ctrl.update(by_domain[d])
+                ctrl.update(by_domain[d], divergence=div_of(d))
         return self.voltages
 
 
@@ -361,22 +401,32 @@ class MeshRailController:
         )
         return self.shards[0].pop_codec_changes()
 
-    def update(self, stats) -> list:
+    def update(self, stats, divergence=None) -> list:
         """Feed one interval's mesh telemetry; returns the next per-shard
         schedule.
 
         ``stats``: a ShardFaultStats (per-shard rows), a list of
         DomainFaultStats (one per shard), or — uniform policy only — a
         single DomainFaultStats already reduced across shards.
+        ``divergence``: scalar canary score broadcast to every shard's
+        controller (replica shards serve the same weights, so a quality
+        violation anywhere is a fleet-wide retreat signal), or a length-
+        n_shards list of per-shard scores under the per_shard policy.
         """
         by_shard = getattr(stats, "by_shard", stats)
         if self.policy == "uniform":
+            if isinstance(divergence, (list, tuple)):
+                divergence = max(
+                    (d for d in divergence if d is not None), default=None
+                )
             if hasattr(by_shard, "by_domain"):  # already reduced
-                self.shards[0].update(by_shard)
+                self.shards[0].update(by_shard, divergence=divergence)
             else:
                 from repro.core.telemetry import DomainFaultStats
 
-                self.shards[0].update(DomainFaultStats.summed(by_shard))
+                self.shards[0].update(
+                    DomainFaultStats.summed(by_shard), divergence=divergence
+                )
         else:
             assert not hasattr(by_shard, "by_domain"), (
                 "per_shard policy needs per-shard telemetry rows"
@@ -384,6 +434,8 @@ class MeshRailController:
             assert len(by_shard) == self.n_shards, (
                 len(by_shard), self.n_shards,
             )
+            if not isinstance(divergence, (list, tuple)):
+                divergence = [divergence] * self.n_shards
             for s, st in enumerate(by_shard):
-                self.shards[s].update(st)
+                self.shards[s].update(st, divergence=divergence[s])
         return self.voltages

@@ -430,6 +430,26 @@ def sweep_codec_schemes(
 # ---------------------------------------------------------------------------
 # CLI (nightly CI lane): the paper's platform x voltage grid as JSON
 # ---------------------------------------------------------------------------
+def campaign_voltage_grid(
+    profile: PlatformProfile, step: float = 0.02
+) -> tuple:
+    """The accuracy campaign's voltage axis for one platform (DESIGN.md §15).
+
+    Nominal (the clean anchor every divergence score is measured against),
+    the guardband edge ``v_min`` (last fault-free point by construction),
+    then every ``step`` volts through the critical region down to the crash
+    rail — the region where the paper's accuracy-vs-voltage curve earns its
+    shape. Descending order, so campaign rows read like the rail walk.
+    """
+    grid = [profile.v_nom, profile.v_min]
+    v = profile.v_min - step
+    while v > profile.v_crash + 1e-9:
+        grid.append(round(v, 3))
+        v -= step
+    grid.append(profile.v_crash)
+    return tuple(grid)
+
+
 def paper_grid():
     """All three paper platforms x their critical-region voltage steps."""
     from repro.core import voltage

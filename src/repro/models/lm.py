@@ -577,6 +577,26 @@ def train_loss(params, batch, cfg: ModelConfig, remat="full"):
     return loss, {"ce": ce, "aux": aux}
 
 
+def sequence_logits(params, tokens, cfg: ModelConfig, *, img=None):
+    """Teacher-forced per-position logits for a fixed token sequence.
+
+    The paired clean-vs-faulty eval path (core/campaign.py, DESIGN.md §15):
+    feeding the *same* ``tokens`` (B, S) through clean and fault-injected
+    params gives position-aligned (B, S, V) f32 logits whose KL / NLL deltas
+    are well-defined — unlike comparing logits along each model's own greedy
+    rollout, which diverges after the first mismatched token. Runs the full
+    causal train-mode forward (no cache), so ECC-protected ``EccWeight``
+    leaves decode through the scrub-on-read matmul path exactly as serving
+    does. Not implemented for multi-codebook (audio) heads.
+    """
+    assert not cfg.n_codebooks, "sequence_logits: single-codebook LMs only"
+    hidden, _, _ = forward(params, tokens, cfg, img=img, mode="train")
+    un = _unembed_matrix(params, cfg)
+    return jnp.einsum(
+        "bsd,dv->bsv", hidden.astype(jnp.float32), un.astype(jnp.float32)
+    )
+
+
 def prefill(params, tokens, cfg: ModelConfig, cache, *, img=None):
     """Process a prompt, fill the cache. Returns (last-token logits, cache)."""
     hidden, new_cache, _ = forward(

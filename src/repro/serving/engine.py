@@ -103,6 +103,20 @@ class ReliabilityConfig:
     # Locked rails re-trip under drift: retreat another backoff step instead
     # of holding (core/controller.py `adaptive`).
     adaptive_rails: bool = False
+    # Accuracy canary (DESIGN.md §15): >0 reserves this many fixed canary
+    # prompts; each autotune round greedy-decodes them against a cached
+    # clean-nominal reference rollout and feeds the divergence score
+    # (1 - mean matched-prefix fraction, [0, 1]) to the controller alongside
+    # the DED counters. Inline mode only.
+    canary_prompts: int = 0
+    # decoded continuation length per canary prompt (prompt length is
+    # core/campaign.CANARY_PROMPT_LEN)
+    canary_tokens: int = 12
+    # Divergence SLO for the rails: canary scores above this trip the rail
+    # (escalate if a ladder step remains, else back off + lock) even when
+    # the DED counters are clean. None: canary scores are recorded in the
+    # controller history but never trip.
+    divergence_slo: float | None = None
 
     @property
     def embed_protected(self) -> bool:
@@ -228,10 +242,12 @@ class ServingEngine:
                 step_v=rel.controller_step_v,
                 paranoid=rel.paranoid,
                 start_v=rel.controller_start_v,
+                divergence_slo=rel.divergence_slo,
             )
             if rel and not rel.multi_rail
             else None  # multi-rail controller is built once the arena exists
         )
+        self._canary_ref = None  # clean-nominal canary rollout, built lazily
         self.rails = None  # {domain: voltage} when multi_rail; [dict] per shard on a mesh
         self.rail_stats = DomainFaultStats()  # cumulative per-domain telemetry
         self.shard_stats = ShardFaultStats()  # cumulative per-shard rows (mesh)
@@ -321,6 +337,7 @@ class ServingEngine:
                         d: self._store.codec_of(d) for d in self._store.domains
                     },
                     adaptive=rel.adaptive_rails,
+                    divergence_slo=rel.divergence_slo,
                 )
                 if mesh is not None:
                     self.controller = MeshRailController(
@@ -482,29 +499,76 @@ class ServingEngine:
         self._last_scrub = agg
 
     # -- serving --------------------------------------------------------------
-    def generate(self, prompts: np.ndarray, n_tokens: int, *, use_scan: bool = True):
+    def generate(
+        self,
+        prompts: np.ndarray,
+        n_tokens: int,
+        *,
+        use_scan: bool = True,
+        params=None,
+    ):
         """Greedy-decode a batch. prompts: (B, S0) int32. Returns (B, n).
 
         use_scan=True rolls the decode loop into one lax.scan program (one
         dispatch for the whole rollout; compiled once per n_tokens value);
         use_scan=False is the historical per-token Python loop, kept as the
-        reference the scan path is tested against.
+        reference the scan path is tested against. ``params`` overrides the
+        engine's (possibly fault-injected) weights for this rollout — the
+        accuracy canary uses it to decode the clean reference through the
+        same jitted programs.
         """
+        p = self.params if params is None else params
         b, s0 = prompts.shape
         cache = lm.init_cache(self.cfg, b, self.max_len)
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts), cache)
+        logits, cache = self._prefill(p, jnp.asarray(prompts), cache)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         if not use_scan:
             outs = [tok]
             for i in range(n_tokens - 1):
-                logits, cache = self._decode(self.params, tok, cache, s0 + i)
+                logits, cache = self._decode(p, tok, cache, s0 + i)
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
                 outs.append(tok)
             return np.concatenate([np.asarray(o) for o in outs], axis=1)
         toks, _ = self._decode_loop(
-            self.params, tok, cache, jnp.int32(s0), n_tokens - 1
+            p, tok, cache, jnp.int32(s0), n_tokens - 1
         )
         return np.concatenate([np.asarray(tok), np.asarray(toks)], axis=1)
+
+    # -- accuracy canary (DESIGN.md §15) ---------------------------------------
+    def canary_divergence(self) -> float | None:
+        """Greedy-decode the canary prompts at the current rails and score
+        them against the cached clean-nominal rollout.
+
+        Returns ``1 - mean(matched prefix fraction)`` in [0, 1] (exactly 0.0
+        when every canary continuation is bit-identical to the clean run), or
+        None when the canary is disabled (``rel.canary_prompts == 0``). The
+        reference is decoded once, lazily, from the *clean* plane templates
+        through the same quantized ECC read path — so quantization noise
+        cancels and only injected faults can score.
+        """
+        if self.rel is None or not self.rel.canary_prompts:
+            return None
+        assert self.rel.mode == "inline", (
+            "the accuracy canary decodes against the clean inline plane "
+            "templates; mode='domain' has no arena to diff"
+        )
+        from repro.core import campaign
+
+        prompts = campaign.eval_prompts(
+            self.cfg.vocab,
+            self.rel.canary_prompts,
+            campaign.CANARY_PROMPT_LEN,
+            seed=self.rel.seed ^ 0xACC,
+        )
+        if self._canary_ref is None:
+            clean = self._reassemble_params(
+                [self._inline_template[i] for i, _ in self._ecc_slots]
+            )
+            self._canary_ref = self.generate(
+                prompts, self.rel.canary_tokens, params=clean
+            )
+        cur = self.generate(prompts, self.rel.canary_tokens)
+        return campaign.token_divergence(self._canary_ref, cur)
 
     # -- continuous batching over the paged SECDED KV cache --------------------
     def serve(
@@ -757,7 +821,9 @@ class ServingEngine:
             round_stats = (
                 self._last_scrub if self.rel.mode == "inline" else self._domain_scrub()
             )
-            v = self.controller.update(round_stats)
+            v = self.controller.update(
+                round_stats, divergence=self.canary_divergence()
+            )
             if self.controller.locked:
                 # re-apply the backed-off (safe) voltage before serving
                 self.set_voltage(self.controller.voltage)
@@ -774,7 +840,12 @@ class ServingEngine:
         # not from the weight scrub, and must not stall this loop.
         arena_rails = self._store.domains
         for _ in range(max_rounds):
-            volts = self.controller.update(self._last_scrub)
+            # Scalar canary score broadcast to every rail: the canary rollout
+            # exercises the whole model, so a violation retreats all rails
+            # (protect-accuracy semantics; see MultiRailController.update).
+            volts = self.controller.update(
+                self._last_scrub, divergence=self.canary_divergence()
+            )
             # A rail that escalated its codec re-protects its domain before
             # the schedule is applied: the next interval's telemetry must be
             # judged under the stronger code (DESIGN.md §12). Only arena
@@ -799,7 +870,9 @@ class ServingEngine:
         self.set_rails(self.controller.voltages)
         arena_rails = self._store.domains
         for _ in range(max_rounds):
-            schedule = self.controller.update(self._last_scrub)
+            schedule = self.controller.update(
+                self._last_scrub, divergence=self.canary_divergence()
+            )
             if self.controller.policy == "uniform":
                 # Escalations apply store-wide (one codec per domain across
                 # the mesh); per_shard policy forbids ladders at init.

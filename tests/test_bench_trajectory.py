@@ -40,3 +40,9 @@ def test_write_trajectory_at_root(tmp_path):
 
 def test_mesh_section_registered():
     assert "mesh" in dict(SECTIONS)
+
+
+def test_accuracy_section_registered():
+    """`python -m benchmarks.run accuracy` must stay wired to the campaign
+    (the nightly lane and BENCH_accuracy.json depend on the section name)."""
+    assert "accuracy" in dict(SECTIONS)

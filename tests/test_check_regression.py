@@ -30,6 +30,21 @@ def _mesh_rows(words_per_s_by_devices):
     ]
 
 
+def _acc_rows(floors, nominal_div=0.0):
+    """Campaign rows: per codec, zero divergence down to its floor voltage,
+    0.5 below; one shared nominal row per codec at 1.0 V."""
+    rows = []
+    grid = (1.0, 0.61, 0.59, 0.57, 0.55, 0.54)
+    for codec, floor in floors.items():
+        for v in grid:
+            rows.append({
+                "codec": codec, "voltage": v, "nominal": v >= 0.61,
+                "divergence": (nominal_div if v >= 0.61 else
+                               0.0 if v >= floor else 0.5),
+            })
+    return rows
+
+
 @pytest.fixture
 def gate(tmp_path, monkeypatch):
     """Point the gate at throwaway baseline/current files; returns writers."""
@@ -39,6 +54,7 @@ def gate(tmp_path, monkeypatch):
         "SERVE_BASELINE": tmp_path / "base_serve.json",
         "SERVE_CURRENT": tmp_path / "cur_serve.json",
         "MESH_CURRENT": tmp_path / "cur_mesh.json",
+        "ACC_CURRENT": tmp_path / "cur_accuracy.json",
     }
     for attr, p in paths.items():
         monkeypatch.setattr(cr, attr, str(p))
@@ -168,6 +184,53 @@ def test_only_restricts_gates(gate):
     assert cr.check(threshold=0.20, only=("mesh",)) == 1
     with pytest.raises(AssertionError):
         cr.check(only=("mesh", "turbo"))
+
+
+def test_accuracy_gate_shape(gate):
+    """The accuracy suite gates on curve *shape*: clean nominal rows and the
+    interleaved code's zero-divergence floor strictly below parity65's."""
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.0}))
+    # paper-shaped: parity65 loses the clean output at 0.59 V, ileave88
+    # holds it to 0.55 V
+    gate("ACC_CURRENT", _acc_rows({"parity65": 0.59, "ileave88": 0.55}))
+    assert cr.check(threshold=0.20) == 0
+    # inverted codec ordering is a harness/codec regression
+    gate("ACC_CURRENT", _acc_rows({"parity65": 0.55, "ileave88": 0.59}))
+    assert cr.check(threshold=0.20) == 1
+    # equal floors fail too: "strictly deeper" is the acceptance property
+    gate("ACC_CURRENT", _acc_rows({"parity65": 0.57, "ileave88": 0.57}))
+    assert cr.check(threshold=0.20) == 1
+
+
+def test_accuracy_gate_nominal_must_be_clean(gate):
+    """Nonzero divergence above v_min means the clean reference itself is
+    broken (the guardband is fault-free by construction) — always a fail,
+    whatever the codec floors look like."""
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.0}))
+    gate(
+        "ACC_CURRENT",
+        _acc_rows({"parity65": 0.59, "ileave88": 0.55}, nominal_div=0.1),
+    )
+    assert cr.check(threshold=0.20) == 1
+
+
+def test_accuracy_gate_skipped_without_run(gate, tmp_path):
+    """Like the mesh gate, accuracy is opt-in via its artifact: lanes that
+    never ran the campaign must not fail on it. A single-codec campaign
+    (the ci.yml smoke) passes on the nominal-clean clause alone."""
+    summary = tmp_path / "summary.md"
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.0}))
+    assert cr.check(threshold=0.20, summary_path=str(summary)) == 0
+    assert "| accuracy campaign shape | ➖ skipped | no current run |" in (
+        summary.read_text()
+    )
+    gate("ACC_CURRENT", _acc_rows({"secded72": 0.57}))
+    assert cr.check(threshold=0.20, only=("accuracy",)) == 0
+    gate("ACC_CURRENT", [])
+    assert cr.check(threshold=0.20, only=("accuracy",)) == 2
 
 
 def test_summary_skipped_serve_row(gate, tmp_path):
