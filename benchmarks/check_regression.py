@@ -112,13 +112,17 @@ def _check_kernel(threshold: float, results: list | None = None) -> int:
     return 0
 
 
-def _serve_ratio(path: str) -> float | None:
+def _serve_metric(path: str, kernel: str, field: str) -> float | None:
     with open(path) as f:
         rows = json.load(f)
     for r in rows:
-        if r.get("kernel") == "serve_throughput":
-            return float(r["cont_over_fixed"])
+        if r.get("kernel") == kernel and field in r:
+            return float(r[field])
     return None
+
+
+def _serve_ratio(path: str) -> float | None:
+    return _serve_metric(path, "serve_throughput", "cont_over_fixed")
 
 
 def _check_serve(threshold: float, results: list | None = None) -> int:
@@ -136,6 +140,7 @@ def _check_serve(threshold: float, results: list | None = None) -> int:
         print("FAIL: serve_throughput rows missing", file=sys.stderr)
         results.append(("serve_throughput cont_over_fixed", "error", "rows missing"))
         return 2
+    rc = 0
     floor = max(1.0, ref * (1.0 - threshold))
     print(
         f"serve_throughput: cont_over_fixed {now:.3f} "
@@ -149,8 +154,53 @@ def _check_serve(threshold: float, results: list | None = None) -> int:
             file=sys.stderr,
         )
         results.append(("serve_throughput cont_over_fixed", "fail", detail))
+        rc = 1
+    else:
+        results.append(("serve_throughput cont_over_fixed", "pass", detail))
+    rc = _check_shared_prefix(threshold, results) or rc
+    return rc
+
+
+def _check_shared_prefix(threshold: float, results: list) -> int:
+    """Prefix-sharing floor (DESIGN.md §16): shared_over_private > 1.0
+    absolutely — the copy-on-write trie must never cost throughput on the
+    shared-heavy stream — plus the usual baseline-relative clause once a
+    baseline row exists. Baselines written before the metric existed skip
+    the relative clause instead of erroring (the absolute floor still
+    gates)."""
+    sref = _serve_metric(SERVE_BASELINE, "serve_shared_prefix", "shared_over_private")
+    snow = _serve_metric(SERVE_CURRENT, "serve_shared_prefix", "shared_over_private")
+    if snow is None:
+        if sref is None:
+            results.append(
+                ("serve shared_over_private", "skipped", "no shared-prefix rows")
+            )
+            return 0
+        print(
+            "FAIL: baseline has a shared-prefix row but the current run "
+            "does not measure it",
+            file=sys.stderr,
+        )
+        results.append(("serve shared_over_private", "error", "no current row"))
+        return 2
+    floor = 1.0 if sref is None else max(1.0, sref * (1.0 - threshold))
+    base_note = "absolute" if sref is None else f"baseline {sref:.3f}"
+    print(
+        f"serve_shared_prefix: shared_over_private {snow:.3f} "
+        f"({base_note}, floor {floor:.3f})"
+    )
+    detail = f"{snow:.3f} ({base_note}, floor {floor:.3f})"
+    # the absolute clause is strict (> 1.0); the relative clause allows == floor
+    failed = (snow <= floor) if sref is None else (snow < floor)
+    if failed:
+        print(
+            f"FAIL: prefix sharing no longer beats private pages "
+            f"(ratio {snow:.3f}, floor {floor:.3f})",
+            file=sys.stderr,
+        )
+        results.append(("serve shared_over_private", "fail", detail))
         return 1
-    results.append(("serve_throughput cont_over_fixed", "pass", detail))
+    results.append(("serve shared_over_private", "pass", detail))
     return 0
 
 

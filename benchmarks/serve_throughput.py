@@ -22,6 +22,14 @@ overhead exactly like the fused/pair kernel ratio; both are gated by
 benchmarks/check_regression.py against the checked-in baseline. Samples are
 interleaved and the minimum taken (scheduler noise is strictly additive).
 
+The second experiment measures prefix sharing (DESIGN.md §16): the same
+serve loop over a stream whose prompts share a long common prefix, with the
+copy-on-write trie on vs off. ``shared_over_private`` is the tokens/s ratio
+(> 1.0 gated absolutely: sharing must never cost throughput on a
+shared-heavy stream). The win is structural — shared pages prefill through
+the model once and are scrubbed once per interval instead of once per
+reader — and the outputs stay bit-identical (tested, not benchmarked).
+
 Usage: PYTHONPATH=src python -m benchmarks.serve_throughput
 """
 
@@ -39,6 +47,14 @@ MAX_LEN = 72
 SCRUB_INTERVAL = 16
 # one long generation per wave of four: budgets 48 / 5, prompts 8 tokens
 STREAM = [(8, 48 if i % 4 == 0 else 5) for i in range(16)]
+# prefix-sharing stream: a 48-token common prompt prefix (6 full pages at
+# page_tokens=8) + 4 private suffix tokens, 12 new tokens each. The first
+# wave of N_LANES seeds the trie (registration happens after commit, so
+# same-wave requests cannot share); every later wave hits all 6 pages.
+SHARED_PREFIX = 48
+SHARED_SUFFIX = 4
+SHARED_NEW = 12
+N_SHARED = 16
 
 
 def _setup():
@@ -46,7 +62,7 @@ def _setup():
 
     from repro.configs import get_smoke_config
     from repro.models import lm
-    from repro.serving.engine import ServingEngine
+    from repro.serving import ServingEngine
 
     # serving-shaped config: big enough that per-step compute, not Python
     # dispatch, is the cost being scheduled (the smoke config is dispatch-
@@ -61,7 +77,17 @@ def _setup():
         (rng.integers(0, cfg.vocab, size=(s0,)).astype(np.int32), n)
         for s0, n in STREAM
     ]
-    return ServingEngine(cfg, params, rel=None, max_len=MAX_LEN), reqs
+    prefix = rng.integers(0, cfg.vocab, size=(SHARED_PREFIX,)).astype(np.int32)
+    shared_reqs = [
+        (
+            np.concatenate(
+                [prefix, rng.integers(0, cfg.vocab, size=(SHARED_SUFFIX,)).astype(np.int32)]
+            ),
+            SHARED_NEW,
+        )
+        for _ in range(N_SHARED)
+    ]
+    return ServingEngine(cfg, params, rel=None, max_len=MAX_LEN), reqs, shared_reqs
 
 
 def _run_fixed(eng, reqs) -> None:
@@ -78,15 +104,23 @@ def _run_fixed(eng, reqs) -> None:
 
 
 def run(samples: int = 3) -> list[dict]:
-    eng, reqs = _setup()
+    eng, reqs, shared_reqs = _setup()
     useful_tokens = sum(n for _, n in reqs)
     run_cont = lambda: eng.serve(
         reqs, n_lanes=N_LANES, scrub_interval=SCRUB_INTERVAL
     )
+    run_shared = lambda on: eng.serve(
+        shared_reqs,
+        n_lanes=N_LANES,
+        scrub_interval=SCRUB_INTERVAL,
+        share_prefix=on,
+    )
 
     _run_fixed(eng, reqs)  # warmup / compile
     rep = run_cont()
+    run_shared(False), run_shared(True)  # warm both trie states' shapes
     tf, tc = [], []
+    tp, ts = [], []
     for _ in range(samples):
         t0 = time.perf_counter()
         _run_fixed(eng, reqs)
@@ -94,9 +128,18 @@ def run(samples: int = 3) -> list[dict]:
         t0 = time.perf_counter()
         rep = run_cont()
         tc.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_shared(False)
+        tp.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        srep = run_shared(True)
+        ts.append(time.perf_counter() - t0)
 
     tps_fixed = useful_tokens / min(tf)
     tps_cont = useful_tokens / min(tc)
+    shared_tokens = sum(n for _, n in shared_reqs)
+    tps_private = shared_tokens / min(tp)
+    tps_shared = shared_tokens / min(ts)
     rows = [
         {
             "kernel": "serve_throughput",
@@ -109,7 +152,19 @@ def run(samples: int = 3) -> list[dict]:
             "tokens_s_fixed": tps_fixed,
             "tokens_s_cont": tps_cont,
             "cont_over_fixed": tps_cont / tps_fixed,
-        }
+        },
+        {
+            "kernel": "serve_shared_prefix",
+            "n_requests": len(shared_reqs),
+            "n_lanes": N_LANES,
+            "useful_tokens": shared_tokens,
+            "scrub_interval": SCRUB_INTERVAL,
+            "prefix_tokens": SHARED_PREFIX,
+            "prefix_hit_tokens": srep.prefix_hit_tokens,
+            "tokens_s_private": tps_private,
+            "tokens_s_shared": tps_shared,
+            "shared_over_private": tps_shared / tps_private,
+        },
     ]
     emit(rows, "serve_throughput")
     return rows
@@ -126,6 +181,17 @@ def main():
             f"tokens_s_cont={r['tokens_s_cont']:.1f};"
             f"tokens_s_fixed={r['tokens_s_fixed']:.1f};"
             f"preemptions={r['preemptions']}",
+        )
+    )
+    s = rows[1]
+    print(
+        csv_line(
+            f"serve/shared_prefix_{s['n_requests']}req_{s['prefix_tokens']}tok",
+            1e6 / s["tokens_s_shared"],
+            f"shared_over_private={s['shared_over_private']:.2f};"
+            f"tokens_s_shared={s['tokens_s_shared']:.1f};"
+            f"tokens_s_private={s['tokens_s_private']:.1f};"
+            f"prefix_hit_tokens={s['prefix_hit_tokens']}",
         )
     )
 

@@ -16,7 +16,13 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import lm
-from repro.serving.engine import ReliabilityConfig, ServingEngine
+from repro.serving import (
+    FaultModelConfig,
+    ProtectionConfig,
+    RailsConfig,
+    ReliabilityConfig,
+    ServingEngine,
+)
 
 import jax
 
@@ -67,7 +73,7 @@ def main():
         cfg, params,
         rel=ReliabilityConfig(
             platform="vc707", ecc=True, voltage=1.0, mode="inline",
-            multi_rail=True, controller_start_v=0.62,
+            rails=RailsConfig(multi_rail=True, start_v=0.62),
         ),
         max_len=64,
     )
@@ -130,9 +136,12 @@ def main():
         cfg, params,
         rel=ReliabilityConfig(
             platform="vc707", ecc=True, voltage=1.0, mode="inline",
-            multi_rail=True, controller_start_v=0.62, mask_source="device",
-            codecs={"mlp": "dected79"},
-            escalation=("secded72", "ileave88", "dected79"),
+            fault_model=FaultModelConfig(mask_source="device"),
+            rails=RailsConfig(multi_rail=True, start_v=0.62),
+            protection=ProtectionConfig(
+                codecs={"mlp": "dected79"},
+                escalation=("secded72", "ileave88", "dected79"),
+            ),
         ),
         max_len=64,
     )
@@ -155,6 +164,69 @@ def main():
     print(f"token agreement at locked rails: {100 * (out == ref_out).mean():.1f}%")
 
 
+def share_demo():
+    """Prefix sharing + speculative decode (DESIGN.md §16). Run with::
+
+        PYTHONPATH=src python examples/serve_lm_ecc.py --share-demo
+    """
+    cfg = get_smoke_config("qwen3-0.6b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    eng = ServingEngine(cfg, params, rel=None, max_len=64)
+
+    # A shared-heavy stream: 8 requests whose prompts share a 24-token prefix
+    # (3 full pages at page_tokens=8) plus a private 4-token suffix. The
+    # first wave of 2 lanes prefills and registers the prefix pages in the
+    # trie; every later admission looks them up, bumps their refcount, and
+    # prefills only the suffix — the shared pages are physically scrubbed
+    # once per interval no matter how many lanes read them.
+    prefix = rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32)
+    stream = [
+        (
+            np.concatenate(
+                [prefix, rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32)]
+            ),
+            8,
+        )
+        for _ in range(8)
+    ]
+    print("prefix-sharing copy-on-write KV pages:")
+    private = eng.serve(stream, n_lanes=2, scrub_interval=4)
+    shared = eng.serve(stream, n_lanes=2, scrub_interval=4, share_prefix=True)
+    identical = all(
+        np.array_equal(private.outputs[r], shared.outputs[r])
+        for r in private.outputs
+    )
+    print(
+        f"  served {len(shared.outputs)} requests, "
+        f"{shared.prefix_hit_tokens} prompt tokens prefilled from the trie; "
+        f"outputs bit-identical to private serve: {identical}"
+    )
+    assert identical, "shared serve must be bit-identical to private at nominal"
+
+    # Speculative decode: a draft model proposes K tokens per dispatch and
+    # the target verifies the whole block in one chunked forward; page
+    # commits happen only for accepted tokens. With the target as its own
+    # draft every block is fully accepted; emitted tokens are exactly the
+    # greedy rollout either way.
+    spec = eng.serve(
+        stream, n_lanes=2, scrub_interval=4, share_prefix=True,
+        speculative=4, draft_params=params, draft_cfg=cfg,
+    )
+    identical = all(
+        np.array_equal(private.outputs[r], spec.outputs[r])
+        for r in private.outputs
+    )
+    print(
+        f"speculative decode (K=4, self-draft): {spec.spec_emitted} tokens "
+        f"over {spec.spec_dispatches} verify dispatches "
+        f"({spec.spec_emitted / max(spec.spec_dispatches, 1):.1f} accepted/block); "
+        f"exactly the greedy rollout: {identical}"
+    )
+    assert identical, "speculative serve must emit exactly the greedy rollout"
+
+
 def mesh_demo():
     """Mesh-sharded serving (DESIGN.md §13): every data-parallel replica is
     its own chip — own fault population, own rails. Run with forced host
@@ -175,8 +247,10 @@ def mesh_demo():
         cfg, params,
         rel=ReliabilityConfig(
             platform="vc707", ecc=True, voltage=1.0, mode="inline",
-            multi_rail=True, mask_source="device", rail_policy="per_shard",
-            controller_start_v=0.60,
+            fault_model=FaultModelConfig(mask_source="device"),
+            rails=RailsConfig(
+                multi_rail=True, policy="per_shard", start_v=0.60
+            ),
         ),
         max_len=64, mesh=mesh,
     )
@@ -205,5 +279,7 @@ if __name__ == "__main__":
 
     if "--mesh-demo" in sys.argv:
         mesh_demo()
+    elif "--share-demo" in sys.argv:
+        share_demo()
     else:
         main()

@@ -264,7 +264,12 @@ def run_campaign(spec: CampaignSpec) -> list[dict]:
     import jax.numpy as jnp
 
     from repro.models import lm
-    from repro.serving.engine import ReliabilityConfig, ServingEngine
+    from repro.serving import (
+        FaultModelConfig,
+        ProtectionConfig,
+        ReliabilityConfig,
+        ServingEngine,
+    )
 
     cfg = campaign_model(spec.model)
     profile = vmod.PLATFORMS[spec.platform]
@@ -290,8 +295,8 @@ def run_campaign(spec: CampaignSpec) -> list[dict]:
             rel = ReliabilityConfig(
                 platform=spec.platform,
                 mode="inline",
-                codecs=codec,
-                environment=envp,
+                protection=ProtectionConfig(codecs=codec),
+                fault_model=FaultModelConfig(environment=envp),
                 seed=spec.seed,
             )
             eng = ServingEngine(cfg, params, rel=rel, max_len=spec.max_len)

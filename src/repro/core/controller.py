@@ -44,6 +44,13 @@ class EscalationPolicy:
     a trip at or below the threshold retreats the rail instead (the event is
     rare enough that paying the stronger code's check bits is not worth it).
     The default 0.0 escalates on any DED event while ladder steps remain.
+
+    Under prefix sharing (DESIGN.md §16) the rate a rail is judged on is
+    *reader-weighted* (see :func:`reader_weighted_stats`): a DED on a page
+    with N readers counts N times against the physically scrubbed word
+    count, so shared-heavy traffic crosses ``ded_rate`` earlier than the
+    same physical fault population on private pages — escalation prices the
+    correlated blast radius, not just the raw event rate.
     """
 
     ladder: tuple = (DEFAULT_CODEC, "dected79")
@@ -55,6 +62,22 @@ class EscalationPolicy:
             return None
         i = self.ladder.index(current)
         return self.ladder[i + 1] if i + 1 < len(self.ladder) else None
+
+
+def reader_weighted_stats(weighted: FaultStats, physical: FaultStats) -> FaultStats:
+    """Fold reader-weighted counters over the physical word population.
+
+    ``weighted`` carries per-reader attributed counters (a shared page's
+    events once per reader); ``physical`` carries the deduplicated scrub
+    truth (each page once — what arena.stats and the power accounting see).
+    The returned stats are what a sharing-aware rail should be judged on:
+    weighted event counts over *physical* words, so ``detected/words`` (the
+    ``EscalationPolicy.ded_rate`` numerator) amplifies with page fan-out.
+    With no sharing the two views coincide and this is the identity.
+    """
+    return FaultStats.from_counters(
+        weighted.counters(), words=physical.words, shard=physical.shard
+    )
 
 
 @dataclasses.dataclass

@@ -55,6 +55,41 @@ from repro.kernels import paged_gather
 PAGE_TOKENS = 8  # default page size (tokens); 2^k keeps slot math cheap
 
 
+def dedup_page_table(table, scratch_page: int):
+    """Deduplicate a page-id table for a single scrub pass (DESIGN.md §16).
+
+    Under prefix sharing the same physical page appears in several readers'
+    tables; scrubbing it once per reader would double-charge its counters
+    and waste the scrub bandwidth the sharing exists to save (see
+    kernels/paged_gather.py on the duplicate-row contract). Returns
+    ``(upad, rows, n_unique)``:
+
+      * ``upad``    — the unique non-scratch page ids ascending, padded with
+        ``scratch_page`` to the next power of two (bounds the jit retrace
+        set exactly like the scheduler's lane tables); when ``table``
+        contains scratch entries at least one scratch slot is guaranteed so
+        they never alias a real page's row.
+      * ``rows``    — int32 of ``table``'s shape mapping every entry to its
+        row in ``upad`` (scratch entries map to a scratch slot).
+      * ``n_unique``— count of real (non-scratch) pages: ``upad[:n_unique]``
+        rows of the scrub counters are the physical-telemetry rows.
+    """
+    table = np.asarray(table, np.int32)
+    flat = table.reshape(-1)
+    real = flat[flat != scratch_page]
+    uniq = np.unique(real)
+    n_u = len(uniq)
+    has_scratch = len(real) != len(flat)
+    target = 1 << max(n_u + int(has_scratch) - 1, 0).bit_length()
+    upad = np.concatenate(
+        [uniq, np.full(max(target, 1) - n_u, scratch_page, np.int32)]
+    ).astype(np.int32)
+    rows = np.where(
+        flat == scratch_page, n_u, np.searchsorted(uniq, flat)
+    ).astype(np.int32)
+    return upad, rows.reshape(table.shape), n_u
+
+
 @dataclasses.dataclass(frozen=True)
 class KVGeometry:
     """Word-level geometry of one model's paged KV cache."""
@@ -92,10 +127,15 @@ class KVGeometry:
 
 
 class PageAllocator:
-    """Free-list page allocator with single-owner bookkeeping.
+    """Free-list page allocator with refcounted-owner bookkeeping.
 
-    Owners are opaque hashables (request ids). The double-alloc / foreign-free
-    asserts are the invariants the hypothesis tests drive.
+    Owners are opaque hashables (request ids, or the prefix trie's sentinel).
+    A page starts single-owner via ``alloc``; additional readers attach with
+    ``share`` (prefix sharing, DESIGN.md §16) and each reader drops only its
+    own reference with ``free`` — the page goes dirty only when the *last*
+    reference drops, so no page is ever recycled out from under a reader.
+    The double-alloc / foreign-free asserts are the invariants the
+    hypothesis tests drive.
 
     Freed pages land on a *dirty* list, not the free list: they still hold
     the previous owner's words and re-enter circulation via ``recycle()``.
@@ -111,7 +151,7 @@ class PageAllocator:
         self.n_pages = int(n_pages)
         self._free = list(range(self.n_pages - 1, -1, -1))  # pop() -> page 0 first
         self._dirty: list[int] = []
-        self._owner: dict[int, object] = {}
+        self._owners: dict[int, set] = {}
 
     @property
     def free_pages(self) -> int:
@@ -127,24 +167,56 @@ class PageAllocator:
         return self.n_pages - self.free_pages
 
     def owner_of(self, page: int):
-        return self._owner.get(page)
+        """Sole owner of a single-reader page; a frozenset for shared pages;
+        None for unallocated pages."""
+        owners = self._owners.get(page)
+        if not owners:
+            return None
+        if len(owners) == 1:
+            return next(iter(owners))
+        return frozenset(owners)
+
+    def refcount(self, page: int) -> int:
+        return len(self._owners.get(page, ()))
+
+    def is_shared(self, page: int) -> bool:
+        return self.refcount(page) > 1
+
+    def shared_pages(self) -> list[int]:
+        """Live pages with more than one reader, ascending."""
+        return sorted(p for p, o in self._owners.items() if len(o) > 1)
 
     def alloc(self, owner) -> int | None:
         """One *clean* page for ``owner``; None if the clean list is empty
-        (the caller recycles the dirty list or preempts)."""
+        (the caller recycles the dirty list, evicts trie leaves, or
+        preempts)."""
         if not self._free:
             return None
         page = self._free.pop()
-        assert page not in self._owner, f"page {page} double-allocated"
-        self._owner[page] = owner
+        assert page not in self._owners, f"page {page} double-allocated"
+        self._owners[page] = {owner}
         return page
 
+    def share(self, page: int, owner) -> None:
+        """Attach ``owner`` as an additional reader of a live page."""
+        owners = self._owners.get(page)
+        assert owners, f"page {page} shared while unallocated"
+        assert owner not in owners, f"page {page} already referenced by {owner!r}"
+        owners.add(owner)
+
     def free(self, pages, owner) -> None:
+        """Drop ``owner``'s reference on each page; a page goes dirty only
+        when its last reference drops (never freed with refcount > 0)."""
         for page in pages:
-            assert self._owner.get(page) == owner, (
-                f"page {page} freed by {owner!r} but owned by {self._owner.get(page)!r}"
+            owners = self._owners.get(page)
+            assert owners is not None and owner in owners, (
+                f"page {page} freed by {owner!r} but owned by "
+                f"{self.owner_of(page)!r}"
             )
-            del self._owner[page]
+            owners.discard(owner)
+            if owners:
+                continue  # surviving readers keep the page live
+            del self._owners[page]
             self._dirty.append(page)
 
     def recycle(self) -> list:
@@ -153,6 +225,169 @@ class PageAllocator:
         batch, self._dirty = self._dirty, []
         self._free.extend(batch)
         return batch
+
+
+class _TrieNode:
+    __slots__ = ("key", "page", "parent", "children", "stamp")
+
+    def __init__(self, key, page, parent):
+        self.key = key        # tuple of page_tokens token ids (None at root)
+        self.page = page      # physical page id (None at root)
+        self.parent = parent
+        self.children: dict[tuple, "_TrieNode"] = {}
+        self.stamp = 0        # LRU clock of the last lookup/insert touch
+
+
+class PrefixTrie:
+    """Radix tree over *full-page* token prefixes (DESIGN.md §16).
+
+    Each edge is one page's worth of token ids (``page_tokens`` of them), so
+    a node at depth d names a d·page_tokens-token prefix and carries the one
+    physical page storing that chunk's KV rows. The trie itself holds a
+    reference on every registered page (sentinel owner), so a prefix stays
+    cached after its last reader retires; capacity pressure evicts
+    sole-referenced leaves in LRU order before the scheduler resorts to
+    preemption. Only *complete* pages are ever registered — a request's
+    partial tail page is private by construction, which is what makes
+    divergence copy-on-write: the shared prefix is immutable, every writer
+    appends into pages it exclusively owns.
+    """
+
+    OWNER = "<prefix-trie>"
+
+    def __init__(self, alloc: PageAllocator, page_tokens: int):
+        self.alloc = alloc
+        self.page_tokens = int(page_tokens)
+        self._root = _TrieNode(None, None, None)
+        self._by_page: dict[int, _TrieNode] = {}
+        self._clock = 0
+
+    def __len__(self) -> int:
+        return len(self._by_page)
+
+    def _chunks(self, tokens) -> list[tuple]:
+        pt = self.page_tokens
+        toks = [int(t) for t in tokens]
+        return [
+            tuple(toks[i : i + pt]) for i in range(0, len(toks) - pt + 1, pt)
+        ]
+
+    def lookup(self, tokens) -> list[int]:
+        """Pages of the longest cached full-page prefix of ``tokens``,
+        capped at len(tokens)-1 so at least one suffix token is always left
+        to prefill (the decode step needs a current token)."""
+        if len(tokens) < 2:
+            return []
+        max_pages = (len(tokens) - 1) // self.page_tokens
+        node, pages = self._root, []
+        self._clock += 1
+        for key in self._chunks(tokens)[:max_pages]:
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.stamp = self._clock
+            pages.append(child.page)
+            node = child
+        return pages
+
+    def insert(self, tokens, pages) -> None:
+        """Register ``pages`` as the full-page chunks of ``tokens``.
+
+        ``pages`` must cover exactly the leading len(pages) full-page chunks
+        (the caller passes a request's committed prompt pages). Chunks
+        already present are stamped; new chunks take a trie reference via
+        ``alloc.share`` so the page outlives its writer.
+        """
+        chunks = self._chunks(tokens)
+        assert len(pages) <= len(chunks), "pages beyond full-page prefix"
+        node = self._root
+        self._clock += 1
+        for key, page in zip(chunks, pages):
+            child = node.children.get(key)
+            if child is None:
+                self.alloc.share(page, self.OWNER)
+                child = _TrieNode(key, int(page), node)
+                node.children[key] = child
+                self._by_page[child.page] = child
+            child.stamp = self._clock
+            node = child
+
+    def _drop(self, node: _TrieNode) -> None:
+        del node.parent.children[node.key]
+        del self._by_page[node.page]
+        self.alloc.free([node.page], self.OWNER)
+
+    def evict_lru(self, n: int = 1) -> list[int]:
+        """Drop up to ``n`` sole-referenced leaves, least recently touched
+        first. Returns the pages released to the dirty list (the caller
+        recycles). Leaves still shared with running readers are skipped —
+        eviction never invalidates a reader."""
+        freed = []
+        while len(freed) < n:
+            victims = [
+                nd for nd in self._by_page.values()
+                if not nd.children and self.alloc.refcount(nd.page) == 1
+            ]
+            if not victims:
+                break
+            victim = min(victims, key=lambda nd: nd.stamp)
+            freed.append(victim.page)
+            self._drop(victim)
+        return freed
+
+    def pages(self) -> list[int]:
+        """Every page the trie currently holds a reference on (sorted)."""
+        return sorted(self._by_page)
+
+    def evict_pages(self, pages) -> list[int]:
+        """Forcibly drop the trie's reference on ``pages`` and every
+        descendant chunk (a child's prefix is unreachable without its
+        parent). Used when codec escalation refuses to re-protect shared
+        pages: the trie reference goes away, surviving readers keep the
+        page live until preemption recomputes them. Returns the pages whose
+        trie reference was dropped."""
+        dropped = []
+        for page in pages:
+            node = self._by_page.get(int(page))
+            if node is None:
+                continue
+            stack = [node]
+            while stack:
+                nd = stack.pop()
+                stack.extend(nd.children.values())
+                if nd.page in self._by_page:
+                    dropped.append(nd.page)
+                    self._drop(nd)
+        return dropped
+
+    def drain(self) -> list[int]:
+        """Release every trie reference (serve teardown): afterwards the
+        allocator's pages_free_at_end bookkeeping sees no cached prefixes."""
+        pages = list(self._by_page)
+        for page in pages:
+            node = self._by_page.get(page)
+            if node is not None and node.page in self._by_page:
+                del node.parent.children[node.key]
+                del self._by_page[node.page]
+                self.alloc.free([node.page], self.OWNER)
+        self._root.children.clear()
+        return pages
+
+
+class SharedPageDEDError(RuntimeError):
+    """Raised when ``KVPageArena.change_codec`` finds a latched
+    detected-uncorrectable word on a page with multiple readers: re-encoding
+    would seal the corruption as apparently-clean data for every reader at
+    once (the correlated-failure regime of DESIGN.md §14). Carries the
+    offending pages so the scheduler can evict/preempt and recompute."""
+
+    def __init__(self, pages, codec: str):
+        self.pages = tuple(int(p) for p in pages)
+        self.codec = str(codec)
+        super().__init__(
+            f"codec change to {self.codec!r} refused: latched DED on shared "
+            f"pages {list(self.pages)}"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -285,16 +520,40 @@ class KVPageArena:
     def set_voltage(self, v: float) -> None:
         self.voltage = float(v)
 
-    def change_codec(self, codec: str) -> None:
+    def change_codec(self, codec: str, shared_pages=None) -> None:
         """Re-protect the live arena under another registered code (the `kv`
         rail's escalation path): the check plane is re-encoded from the
         current page contents through the new encoder — exactly what a
         hardware re-protection sweep would write, so faults the *old* code
         had not yet corrected are re-sealed as (apparent) clean data. Call
         right after a scrub interval so correctable faults were flushed
-        first; the scheduler does."""
+        first; the scheduler does.
+
+        ``shared_pages`` (page ids with more than one reader) are scrubbed
+        under the *old* code immediately before the switch — a single-owner
+        page re-sealing a latent fault hurts one request, but a shared page
+        would silently re-protect another reader's corrupted data, so if the
+        flush scrub leaves a latched DED on any shared page the change is
+        refused with :class:`SharedPageDEDError` (arena untouched) and the
+        scheduler must evict/preempt those readers first.
+        """
         if codec == self.codec_name:
             return
+        ids = np.asarray(
+            [] if shared_pages is None else list(shared_pages), np.int32
+        )
+        if ids.size:
+            _, cnt = self.scrub_pages(ids)
+            self.stats.accumulate(
+                FaultStats.from_counters(
+                    cnt.sum(axis=0),
+                    words=int(ids.size) * self.geom.words_per_page,
+                    shard=self.shard,
+                )
+            )
+            detected = cnt[:, 2]  # COUNTER_FIELDS index of "detected"
+            if detected.any():
+                raise SharedPageDEDError(ids[detected > 0].tolist(), codec)
         self.codec_name = str(codec)
         self.codec = codes.get(self.codec_name)
         self.parity = kops.encode(self.lo, self.hi, codec=self.codec_name)

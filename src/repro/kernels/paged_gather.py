@@ -29,6 +29,17 @@ within-block row reduction, so the grid stays small — this is what keeps
 interpret-mode scrubs usable in CI), `W` column-blocked with accumulation
 over column steps; counter rows for a page are written by its row blocks
 only, so there are no cross-page races.
+
+Duplicate page rows (prefix sharing, DESIGN.md §16): the kernel itself is
+safe under duplicates — identical stored words decode to identical corrected
+planes, so the arena's scatter write-back of duplicate rows is idempotent —
+but the per-row counters would charge the same physical fault once per
+duplicate, and the page would be scrubbed once per reader. Callers that
+share pages must therefore scrub the *deduplicated* page set and fan the
+rows back out on the host (core/kvpages.dedup_page_table is the canonical
+helper; the serving scheduler uses it at admission and at every scrub
+interval) — physical work and arena-level telemetry stay per unique page,
+while reader-weighted attribution happens on the gathered row mapping.
 """
 
 from __future__ import annotations

@@ -246,6 +246,38 @@ def decode_attention(q, k_cache, v_cache, cur_len, *, window=0):
     return out.reshape(b, 1, h, dh)
 
 
+def chunk_attention(q, k_cache, v_cache, pos0, *, window=0):
+    """Multi-token attention against a KV cache (chunked prefill and the
+    speculative verify block, DESIGN.md §16).
+
+    q: (B, Sq, H, Dh) — Sq new tokens whose K/V were already written into the
+    cache; caches: (B, S_max, Hkv, Dh); pos0: () or (B,) int32 — the cache
+    position of the chunk's *first* token per lane. Token i of the chunk
+    attends kpos <= pos0 + i, so for Sq == 1 this is exactly
+    ``decode_attention(q, k, v, cur_len=pos0 + 1)``: the same grouped-query
+    einsum contracting the same axes per position, which is what keeps the
+    chunked path bit-identical to the step-by-step decode path.
+    """
+    b, sq, h, dh = q.shape
+    smax = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    qg = _group_q(q, hkv)  # (B, Sq, Hkv, R, Dh)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k_cache).astype(jnp.float32) / jnp.sqrt(
+        dh
+    ).astype(jnp.float32)
+    kpos = jnp.arange(smax)[None, None, None, None, :]
+    qpos = jnp.asarray(pos0).reshape(-1, 1, 1, 1, 1) + jnp.arange(sq).reshape(
+        1, 1, 1, sq, 1
+    )
+    valid = kpos <= qpos
+    if window:
+        valid = valid & (kpos > qpos - window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, v_cache)
+    return out.reshape(b, sq, h, dh)
+
+
 # ---------------------------------------------------------------------------
 # Projections / MLP
 # ---------------------------------------------------------------------------

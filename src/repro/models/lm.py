@@ -314,6 +314,12 @@ def _attn_block(x, p, cfg, *, mode, cache, pos, img=None, cross=False):
         # fixed-batch rollouts stay bit-identical.
         pos_v = jnp.asarray(pos)
         positions = jnp.full((b, 1), pos) if pos_v.ndim == 0 else pos_v[:, None]
+    elif mode == "chunk":
+        # Chunked prefill / speculative verify (DESIGN.md §16): s new tokens
+        # per lane starting at per-lane cache position pos0 = pos.
+        pos_v = jnp.asarray(pos)
+        base = pos_v if pos_v.ndim else jnp.full((b,), pos, jnp.int32)
+        positions = base[:, None] + jnp.arange(s)[None, :]
     else:
         positions = jnp.arange(s)[None, :]
     q = layers.apply_rope(q, positions, cfg.rope_theta)
@@ -346,6 +352,21 @@ def _attn_block(x, p, cfg, *, mode, cache, pos, img=None, cross=False):
             kd, vd = ck, cv
         cur = jnp.minimum(pos_v + 1, smax) if w else pos_v + 1
         out = layers.decode_attention(q, kd, vd, cur)
+    elif mode == "chunk":
+        # Same cache-write + attend-the-cache structure as decode, vmapped
+        # over lanes with an s-row window; restricted to the paged-KV config
+        # class (all-attn, no SWA ring, no quantized cache) the scheduler
+        # already requires via configs.shapes.supports_paged_kv.
+        assert not w and not cfg.kv_quant, (
+            "chunk mode requires a paged-KV-compatible config"
+        )
+        upd = jax.vmap(
+            lambda c, u, s_: jax.lax.dynamic_update_slice_in_dim(c, u, s_, 0)
+        )
+        ck = upd(cache["k"], k.astype(cache["k"].dtype), base)
+        cv = upd(cache["v"], v.astype(cache["v"].dtype), base)
+        new_cache = {"k": ck, "v": cv}
+        out = layers.chunk_attention(q, ck, cv, base)
     else:
         if mode == "prefill":
             smax = cache["k"].shape[1]
@@ -649,4 +670,38 @@ def decode_step(params, tokens, cfg: ModelConfig, cache, pos, *, img=None):
         logits = jnp.einsum("bd,kdv->bkv", last.astype(jnp.float32), un.astype(jnp.float32))
     else:
         logits = jnp.einsum("bd,dv->bv", last.astype(jnp.float32), un.astype(jnp.float32))
+    return logits, new_cache
+
+
+def chunk_step(params, tokens, cfg: ModelConfig, cache, pos0):
+    """Chunked prefill (DESIGN.md §16): process ``tokens`` (B, S) whose
+    cache positions start at per-lane ``pos0`` ((B,) or scalar int32),
+    writing their K/V into the cache. Returns (last-token logits (B, V),
+    new cache) — token-identical to feeding the S tokens through
+    ``decode_step`` one at a time (the per-position contractions are the
+    same; tested)."""
+    assert not cfg.n_codebooks, "chunk_step: single-codebook LMs only"
+    hidden, new_cache, _ = forward(
+        params, tokens, cfg, cache=cache, pos=pos0, mode="chunk"
+    )
+    last = hidden[:, -1]
+    un = _unembed_matrix(params, cfg)
+    logits = jnp.einsum(
+        "bd,dv->bv", last.astype(jnp.float32), un.astype(jnp.float32)
+    )
+    return logits, new_cache
+
+
+def chunk_logits(params, tokens, cfg: ModelConfig, cache, pos0):
+    """Like :func:`chunk_step` but returning the full (B, S, V) logits —
+    the speculative-decode verify block scores every drafted token against
+    the target model in one dispatch (DESIGN.md §16)."""
+    assert not cfg.n_codebooks, "chunk_logits: single-codebook LMs only"
+    hidden, new_cache, _ = forward(
+        params, tokens, cfg, cache=cache, pos=pos0, mode="chunk"
+    )
+    un = _unembed_matrix(params, cfg)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", hidden.astype(jnp.float32), un.astype(jnp.float32)
+    )
     return logits, new_cache

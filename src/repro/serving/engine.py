@@ -46,8 +46,146 @@ from repro.serving import scheduler as sched
 from repro.serving import steps as serve_steps
 
 
+class ReliabilityConfigError(ValueError, AssertionError):
+    """An invalid reliability-config combination.
+
+    Subclasses ``ValueError`` (the typed contract ``validate()`` documents)
+    *and* ``AssertionError`` (what the historical inline ``assert`` guards
+    raised, and what existing callers catch)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModelConfig:
+    """How faults are generated and applied (DESIGN.md §7/§14)."""
+
+    # "host": NumPy FaultField oracle (bit-identical to the per-leaf path);
+    # "device": counter-based jax.random masks, never materialised on host
+    mask_source: str = "host"
+    # inline mode: one fused inject+scrub launch over the whole-model plane
+    # arena (True) vs the historical per-leaf loop (False, reference path)
+    batched: bool = True
+    # Environment scenario: None (historical i.i.d. stream, bit-for-bit), a
+    # name from scenario.ENVIRONMENTS, or an EnvironmentProfile.
+    environment: Any = None
+    # Override the environment's aging-drift sigma (scenario.resolve).
+    drift: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RailsConfig:
+    """Voltage-rail topology and controller tuning (DESIGN.md §10/§13)."""
+
+    # partition the plane arena into memory domains, each with its own
+    # closed-loop rail (implies the batched inline path)
+    multi_rail: bool = False
+    # mesh engines: "uniform" locks one schedule at the worst shard's first
+    # DED; "per_shard" walks every chip to its own V_min
+    policy: str = "uniform"
+    # >0: per-domain fault-curve variation (lognormal sigma)
+    spread: float = 0.0
+    step_v: float = 0.01
+    # warm-start voltage for the canary search (None -> v_nom)
+    start_v: float | None = None
+    # locked rails re-trip under drift: retreat another backoff step
+    adaptive: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtectionConfig:
+    """What is protected and under which ECC schemes (DESIGN.md §12)."""
+
+    # a registered codec name for every domain, or a {domain: name} mapping
+    codecs: Any = None
+    # EscalationPolicy or tuple of codec names weakest -> strongest
+    escalation: Any = None
+    protect: tuple = ("weights",)
+    # include the embedding table in the protected arena (None -> multi_rail)
+    embed: bool | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CanaryConfig:
+    """DED/accuracy canary behavior (DESIGN.md §15)."""
+
+    # >0 reserves this many fixed canary prompts per autotune round
+    prompts: int = 0
+    # decoded continuation length per canary prompt
+    tokens: int = 12
+    # canary divergence scores above this trip the rail even when the DED
+    # counters are clean; None records but never trips
+    divergence_slo: float | None = None
+    # also treat SILENT (ground-truth-only) events as canary trips
+    paranoid: bool = False
+
+
+# flat legacy field -> (sub-config attribute) per group; the flat names stay
+# constructible (deprecation shim) and always mirror the resolved sub-configs
+_REL_GROUPS: dict = {
+    "fault_model": (
+        FaultModelConfig,
+        {
+            "mask_source": "mask_source",
+            "batched": "batched",
+            "environment": "environment",
+            "drift": "drift",
+        },
+    ),
+    "rails": (
+        RailsConfig,
+        {
+            "multi_rail": "multi_rail",
+            "rail_policy": "policy",
+            "rail_spread": "spread",
+            "controller_step_v": "step_v",
+            "controller_start_v": "start_v",
+            "adaptive_rails": "adaptive",
+        },
+    ),
+    "protection": (
+        ProtectionConfig,
+        {
+            "codecs": "codecs",
+            "escalation": "escalation",
+            "protect": "protect",
+            "protect_embed": "embed",
+        },
+    ),
+    "canary": (
+        CanaryConfig,
+        {
+            "canary_prompts": "prompts",
+            "canary_tokens": "tokens",
+            "divergence_slo": "divergence_slo",
+            "paranoid": "paranoid",
+        },
+    ),
+}
+
+_FLAT_KWARG_WARNED = False
+
+
 @dataclasses.dataclass(frozen=True)
 class ReliabilityConfig:
+    """Reliability knobs for a ServingEngine.
+
+    The canonical surface is the four grouped sub-configs —
+    ``fault_model`` (:class:`FaultModelConfig`), ``rails``
+    (:class:`RailsConfig`), ``protection`` (:class:`ProtectionConfig`) and
+    ``canary`` (:class:`CanaryConfig`) — plus the ungrouped scalars below.
+    The historical flat keywords (``mask_source``, ``multi_rail``,
+    ``canary_prompts``, ...) remain constructible as a deprecation shim with
+    identical semantics; after ``__post_init__`` the flat attributes and the
+    sub-configs always agree (a non-default flat value wins over its group,
+    which is what makes ``dataclasses.replace(rel, batched=False)``
+    round-trip), so readers may use either view. The one shim blind spot: a
+    flat keyword handed its *default* value is indistinguishable from
+    "unspecified" and loses to an explicit sub-config — round-trip through
+    the grouped fields when a sub-config is in play. ``validate()`` — called by
+    ``ServingEngine.__init__`` — raises :class:`ReliabilityConfigError`
+    (a ``ValueError``) on contradictory combinations instead of the old
+    scattered inline asserts.
+    """
+
     platform: str = "vc707"
     ecc: bool = True
     voltage: float | None = None  # None -> nominal
@@ -117,6 +255,116 @@ class ReliabilityConfig:
     # the DED counters are clean. None: canary scores are recorded in the
     # controller history but never trip.
     divergence_slo: float | None = None
+    # -- grouped sub-configs (the canonical surface; see class docstring) --
+    fault_model: FaultModelConfig | None = None
+    rails: RailsConfig | None = None
+    protection: ProtectionConfig | None = None
+    canary: CanaryConfig | None = None
+
+    def __post_init__(self):
+        global _FLAT_KWARG_WARNED
+        defaults = {f.name: f.default for f in dataclasses.fields(self)}
+        flat_used = []
+        for group, (cls_, fmap) in _REL_GROUPS.items():
+            sub = getattr(self, group)
+            vals = {}
+            for flat, name in fmap.items():
+                v = getattr(self, flat)
+                try:
+                    is_default = v == defaults[flat]
+                except Exception:
+                    is_default = v is defaults[flat]
+                if not is_default:
+                    # a non-default flat kwarg wins over its sub-config —
+                    # dataclasses.replace() re-passes every flat field, so
+                    # this rule is what makes replace(rel, x=y) round-trip
+                    vals[name] = v
+                    if sub is None or getattr(sub, name) != v:
+                        flat_used.append(flat)
+                elif sub is not None:
+                    vals[name] = getattr(sub, name)
+                else:
+                    vals[name] = v
+            # re-synthesize so flat attributes and sub-config always agree
+            for flat, name in fmap.items():
+                object.__setattr__(self, flat, vals[name])
+            object.__setattr__(self, group, cls_(**vals))
+        if flat_used and not _FLAT_KWARG_WARNED:
+            _FLAT_KWARG_WARNED = True
+            import warnings
+
+            warnings.warn(
+                "flat ReliabilityConfig keywords "
+                f"({', '.join(sorted(set(flat_used)))}) are deprecated; use "
+                "the grouped sub-configs (fault_model=FaultModelConfig(...), "
+                "rails=RailsConfig(...), protection=ProtectionConfig(...), "
+                "canary=CanaryConfig(...))",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+
+    def validate(self, *, mesh=None) -> "ReliabilityConfig":
+        """Reject contradictory combinations with a typed error.
+
+        Raises :class:`ReliabilityConfigError` (a ``ValueError``) and returns
+        ``self`` so ``rel.validate()`` chains. ``mesh`` enables the extra
+        mesh-engine constraints (DESIGN.md §13)."""
+
+        def _require(cond: bool, msg: str):
+            if not cond:
+                raise ReliabilityConfigError(msg)
+
+        _require(
+            self.mode in ("domain", "inline"),
+            f"mode must be 'domain' or 'inline', got {self.mode!r}",
+        )
+        _require(
+            self.platform in vmod.PLATFORMS,
+            f"unknown platform {self.platform!r}",
+        )
+        _require(
+            self.rail_policy in ("uniform", "per_shard"),
+            f"rail_policy must be 'uniform' or 'per_shard', got "
+            f"{self.rail_policy!r}",
+        )
+        if self.mode == "domain":
+            _require(
+                self.codecs in (None, "secded72"),
+                "domain mode stores raw bits behind the built-in SECDED; "
+                "codec selection needs mode='inline'",
+            )
+        else:
+            _require(
+                not self.multi_rail or self.batched,
+                "multi_rail drives the batched plane arena",
+            )
+            _require(
+                self.batched or self.codecs in (None, "secded72"),
+                "the per-leaf reference path is SECDED-only; codec "
+                "selection needs the batched arena",
+            )
+            _require(
+                self.multi_rail
+                or self.codecs is None
+                or isinstance(self.codecs, str),
+                "per-domain codec dicts need multi_rail=True",
+            )
+        if mesh is not None:
+            _require(
+                self.multi_rail and self.mode == "inline",
+                "mesh engines drive the multi-rail batched plane arena",
+            )
+            _require(
+                self.mask_source == "device",
+                "mesh engines need device masks (per-shard streams live "
+                "inside shard_map)",
+            )
+            _require(
+                self.rail_policy == "uniform" or self.escalation is None,
+                "per-shard codec escalation needs per-shard plane groups; "
+                "use rail_policy='uniform' with an escalation ladder",
+            )
+        return self
 
     @property
     def embed_protected(self) -> bool:
@@ -220,22 +468,18 @@ class ServingEngine:
         self.rel = rel
         self.max_len = max_len
         self.mesh = mesh
+        # One typed gate replaces the historical scattered inline asserts:
+        # every contradictory combination (mesh-sharded reliability included,
+        # DESIGN.md §13) raises ReliabilityConfigError before any state is
+        # built.
+        if rel is not None:
+            rel.validate(mesh=mesh)
+        elif mesh is not None:
+            raise ReliabilityConfigError(
+                "mesh engines drive the multi-rail batched plane arena "
+                "(a ReliabilityConfig is required)"
+            )
         self.platform = vmod.PLATFORMS[rel.platform] if rel else None
-        if mesh is not None:
-            # Mesh-sharded reliability (DESIGN.md §13): every reliability
-            # shard is its own chip with its own fault population and rails.
-            assert rel is not None and rel.multi_rail and rel.mode == "inline", (
-                "mesh engines drive the multi-rail batched plane arena"
-            )
-            assert rel.mask_source == "device", (
-                "mesh engines need device masks (per-shard streams live "
-                "inside shard_map)"
-            )
-            shapes.rail_policy(rel.rail_policy)
-            assert rel.rail_policy == "uniform" or rel.escalation is None, (
-                "per-shard codec escalation needs per-shard plane groups; "
-                "use rail_policy='uniform' with an escalation ladder"
-            )
         self.controller = (
             UndervoltController(
                 self.platform,
@@ -257,10 +501,6 @@ class ServingEngine:
             self.params = params
             self.domain = None
         elif rel.mode == "domain":
-            assert rel.codecs in (None, "secded72"), (
-                "domain mode stores raw bits behind the built-in SECDED; "
-                "codec selection needs mode='inline'"
-            )
             self.domain = EccMemoryDomain(
                 rel.platform, seed=rel.seed, ecc_enabled=rel.ecc,
                 voltage=rel.voltage or 1.0,
@@ -268,14 +508,7 @@ class ServingEngine:
             self.domain.write_pytree("w", params)
             self.params = params  # refreshed by set_voltage
             self.set_voltage(self.domain.voltage)
-        else:  # inline
-            assert not rel.multi_rail or rel.batched, (
-                "multi_rail drives the batched plane arena"
-            )
-            assert rel.batched or rel.codecs in (None, "secded72"), (
-                "the per-leaf reference path is SECDED-only; codec selection "
-                "needs the batched arena"
-            )
+        else:  # inline (validate() already rejected the contradictory combos)
             self.domain = None
             self.params, self._plane_sizes = protect_params_inline(
                 params, cfg, seed=rel.seed, include_embed=rel.embed_protected
@@ -306,9 +539,6 @@ class ServingEngine:
             if rel.multi_rail:
                 store_codecs = shapes.domain_codecs(rel.codecs)
             else:
-                assert rel.codecs is None or isinstance(rel.codecs, str), (
-                    "per-domain codec dicts need multi_rail=True"
-                )
                 store_codecs = rel.codecs
             self._store = PlaneStore(
                 [self._inline_template[i] for i, _ in self._ecc_slots],
@@ -582,14 +812,30 @@ class ServingEngine:
         max_block: int = 16,
         kv_voltage: float | None = None,
         walk_kv: bool = False,
+        share_prefix: bool = False,
+        speculative: int = 0,
+        draft_params=None,
+        draft_cfg: ModelConfig | None = None,
     ) -> sched.ServeReport:
-        """Serve a stream of variable-length requests (DESIGN.md §11).
+        """Serve a stream of variable-length requests (DESIGN.md §11/§16).
 
         ``requests``: iterable of (prompt (s0,) int32, max_new_tokens) pairs
-        or scheduler.Request objects. The KV cache lives in SECDED pages on
-        the `kv` voltage domain; every read scrubs. At nominal voltage the
-        output tokens are bit-identical to `generate` on the same batch
-        composition (tested).
+        or scheduler.Request/``ServeRequest`` objects. The KV cache lives in
+        SECDED pages on the `kv` voltage domain; every read scrubs. At
+        nominal voltage the output tokens are bit-identical to `generate` on
+        the same batch composition (tested).
+
+        ``share_prefix=True`` enables the copy-on-write prefix-sharing trie:
+        requests with identical full-page prompt prefixes share physical
+        pages (scrubbed once, chunk-prefilled only on the private suffix)
+        with reader-weighted DED telemetry (DESIGN.md §16). Bit-identical
+        outputs at nominal voltage, gated by the shared_over_private
+        throughput ratio in BENCH_serve.
+
+        ``speculative=K`` (K >= 2, with ``draft_params``/``draft_cfg``)
+        drafts K-1 tokens per dispatch with the draft model and verifies all
+        K positions in one chunked target forward; the emitted stream is
+        exactly the greedy rollout (accepted-prefix property, tested).
 
         ``walk_kv`` (multi-rail engines): attach a `kv` rail to the
         MultiRailController and let the per-interval scrub DED counters walk
@@ -605,6 +851,12 @@ class ServingEngine:
         assert shapes.supports_paged_kv(self.cfg), (
             f"{self.cfg.name}: paged KV unsupported (see shapes.supports_paged_kv)"
         )
+        if int(speculative) >= 2:
+            assert draft_params is not None and draft_cfg is not None, (
+                "speculative decode needs draft_params + draft_cfg"
+            )
+        else:
+            draft_params = draft_cfg = None
         if self.mesh is not None:
             return self._serve_mesh(
                 requests,
@@ -615,6 +867,10 @@ class ServingEngine:
                 max_block=max_block,
                 kv_voltage=kv_voltage,
                 walk_kv=walk_kv,
+                share_prefix=share_prefix,
+                speculative=speculative,
+                draft_params=draft_params,
+                draft_cfg=draft_cfg,
             )
         profile = self.platform or vmod.PLATFORMS["vc707"]
         envp = self.rel.environment_profile if self.rel is not None else None
@@ -668,7 +924,7 @@ class ServingEngine:
             # telemetry from a different operating point. (An explicit
             # kv_voltage only pins the rail when it is not being walked.)
             arena.set_voltage(kv_controller.voltage)
-        helpers = self._paged_helpers(geom, kv_codec)
+        helpers = self._paged_helpers(geom, kv_codec, draft_cfg=draft_cfg)
         report = sched.serve_stream(
             self.params,
             self.cfg,
@@ -680,7 +936,15 @@ class ServingEngine:
             scrub_interval=scrub_interval,
             max_block=max_block,
             kv_controller=kv_controller,
-            helpers_factory=lambda cname: self._paged_helpers(geom, cname),
+            # escalation rebuilds the spec helpers too: the draft cfg rides
+            # along so a mid-serve codec change keeps speculating
+            helpers_factory=lambda cname: self._paged_helpers(
+                geom, cname, draft_cfg=draft_cfg
+            ),
+            share_prefix=share_prefix,
+            speculative=speculative,
+            draft_params=draft_params,
+            draft_cfg=draft_cfg,
         )
         # Fold the cache telemetry + storage into the engine's books: the kv
         # domain now has real words (power weighting) and real counters.
@@ -706,6 +970,10 @@ class ServingEngine:
         max_block: int,
         kv_voltage: float | None,
         walk_kv: bool,
+        share_prefix: bool = False,
+        speculative: int = 0,
+        draft_params=None,
+        draft_cfg: ModelConfig | None = None,
     ) -> "sched.MeshServeReport":
         """Data-parallel continuous batching across the reliability shards.
 
@@ -760,7 +1028,7 @@ class ServingEngine:
             report = sched.serve_stream(
                 self.params,
                 self.cfg,
-                self._paged_helpers(geom, kv_codec),
+                self._paged_helpers(geom, kv_codec, draft_cfg=draft_cfg),
                 arena,
                 parts[s],
                 n_lanes=n_lanes,
@@ -768,7 +1036,13 @@ class ServingEngine:
                 scrub_interval=scrub_interval,
                 max_block=max_block,
                 kv_controller=rail,
-                helpers_factory=lambda cname: self._paged_helpers(geom, cname),
+                helpers_factory=lambda cname: self._paged_helpers(
+                    geom, cname, draft_cfg=draft_cfg
+                ),
+                share_prefix=share_prefix,
+                speculative=speculative,
+                draft_params=draft_params,
+                draft_cfg=draft_cfg,
             )
             reports.append(report)
             self._store.register_domain_words(
@@ -794,15 +1068,21 @@ class ServingEngine:
         self.kv_arena = self.kv_arenas[0]
         return mesh_report
 
-    def _paged_helpers(self, geom: KVGeometry, codec: str = "secded72") -> dict:
+    def _paged_helpers(
+        self,
+        geom: KVGeometry,
+        codec: str = "secded72",
+        draft_cfg: ModelConfig | None = None,
+    ) -> serve_steps.PagedHelpers:
         cache = getattr(self, "_paged_helper_cache", None)
         if cache is None:
             cache = self._paged_helper_cache = {}
-        if (geom, codec) not in cache:
-            cache[(geom, codec)] = serve_steps.make_paged_helpers(
-                self.cfg, geom, codec
+        key = (geom, codec, draft_cfg)
+        if key not in cache:
+            cache[key] = serve_steps.make_paged_helpers(
+                self.cfg, geom, codec, draft_cfg=draft_cfg
             )
-        return cache[(geom, codec)]
+        return cache[key]
 
     # -- runtime undervolting loop ---------------------------------------------
     def autotune_voltage(self, max_rounds: int = 60):

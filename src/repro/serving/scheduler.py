@@ -37,7 +37,15 @@ from collections import deque
 
 import numpy as np
 
-from repro.core.kvpages import KVGeometry, KVPageArena, PageAllocator
+from repro.core.kvpages import (
+    KVGeometry,
+    KVPageArena,
+    PageAllocator,
+    PrefixTrie,
+    SharedPageDEDError,
+    dedup_page_table,
+)
+from repro.core.controller import reader_weighted_stats
 from repro.core.telemetry import FaultStats
 
 
@@ -50,6 +58,12 @@ class Request:
     max_new_tokens: int
 
 
+#: Public name of the request protocol type (`repro.serving.ServeRequest`):
+#: the consolidated serving API exports the dataclass under the name the
+#: engine/scheduler docs use; `Request` remains for existing call sites.
+ServeRequest = Request
+
+
 @dataclasses.dataclass
 class RequestState:
     req: Request
@@ -60,6 +74,7 @@ class RequestState:
     tokens: list = dataclasses.field(default_factory=list)  # generated so far
     stats: FaultStats = dataclasses.field(default_factory=FaultStats)
     preemptions: int = 0
+    shared_tokens: int = 0  # leading tokens served from trie-shared pages
 
     @property
     def rid(self) -> int:
@@ -98,6 +113,9 @@ class ServeReport:
     kv_voltages: list  # kv rail trajectory (one entry per scrub interval)
     arena: KVPageArena
     pages_free_at_end: int  # == arena.n_pages unless the allocator leaked
+    prefix_hit_tokens: int = 0  # prompt tokens served from shared pages
+    spec_dispatches: int = 0  # speculative verify blocks executed
+    spec_emitted: int = 0  # tokens emitted by speculative blocks
 
 
 def normalize_requests(requests) -> list:
@@ -186,12 +204,14 @@ class ContinuousBatchingScheduler:
         alloc: PageAllocator,
         geom: KVGeometry,
         arena: KVPageArena | None = None,
+        trie: PrefixTrie | None = None,
     ):
         self.waiting = deque(RequestState(r) for r in requests)
         self.lanes: list = [None] * n_lanes
         self.alloc = alloc
         self.geom = geom
         self.arena = arena  # needed to wipe recycled pages before reuse
+        self.trie = trie  # prefix-sharing radix tree (None = private pages)
         self.finished: dict = {}
         self.preemptions = 0
         self._admit_counter = 0
@@ -199,11 +219,15 @@ class ContinuousBatchingScheduler:
 
     def _alloc(self, owner):
         """Page for ``owner``; recycles the dirty list when the clean free
-        list runs dry. Every allocation is recorded in ``fresh_pages`` — the
-        serve loop zero-wipes the batch before anything commits to it (once
-        the arena has faulted, even 'clean'-list pages hold stale words:
-        tick() injects into the whole arena, allocated or not)."""
+        list runs dry, then evicts sole-referenced trie leaves (LRU) before
+        giving up — cached prefixes yield to live requests, preemption is
+        the last resort. Every allocation is recorded in ``fresh_pages`` —
+        the serve loop zero-wipes the batch before anything commits to it
+        (once the arena has faulted, even 'clean'-list pages hold stale
+        words: tick() injects into the whole arena, allocated or not)."""
         page = self.alloc.alloc(owner)
+        if page is None and self.trie is not None and not self.alloc.dirty_pages:
+            self.trie.evict_lru(1)
         if page is None and self.alloc.dirty_pages:
             self.alloc.recycle()
             page = self.alloc.alloc(owner)
@@ -236,18 +260,37 @@ class ContinuousBatchingScheduler:
     def admit(self):
         """Admit waiting requests FCFS while lanes + pages allow; yields the
         admitted (lane, state, resume_seq) triples (pages pre-allocated to
-        cover the prefilled sequence plus the first decode token)."""
+        cover the prefilled sequence plus the first decode token).
+
+        With a prefix trie, the longest cached full-page prefix of the
+        sequence is *shared* (refcounted) instead of allocated: the state's
+        ``shared_tokens`` records how deep, ``pages`` starts with the shared
+        pages, and only the private suffix needs fresh allocations (trie
+        leaves are LRU-evicted under pressure before admission stalls).
+        """
         while self.waiting:
             lane = self._free_lane()
             if lane is None:
                 break
             st = self.waiting[0]
             seq = st.resume_seq
-            need = self.geom.pages_for(len(seq) + 1)
+            shared: list = []
+            if self.trie is not None:
+                shared = self.trie.lookup(seq)
+                for p in shared:
+                    self.alloc.share(p, st.rid)
+            need = self.geom.pages_for(len(seq) + 1) - len(shared)
+            if need > self.alloc.free_pages and self.trie is not None:
+                # cached-but-unreferenced prefixes yield to the admission
+                # (the just-shared pages are pinned by st.rid's reference)
+                self.trie.evict_lru(need - self.alloc.free_pages)
             if need > self.alloc.free_pages:
+                if shared:
+                    self.alloc.free(shared, st.rid)  # undo; retry next round
                 break
             self.waiting.popleft()
-            st.pages = [self._alloc(st.rid) for _ in range(need)]
+            st.pages = shared + [self._alloc(st.rid) for _ in range(need)]
+            st.shared_tokens = len(shared) * self.geom.page_tokens
             st.status, st.lane = "running", lane
             st.admit_seq = self._admit_counter
             self._admit_counter += 1
@@ -276,6 +319,7 @@ class ContinuousBatchingScheduler:
         self.alloc.free(st.pages, st.rid)
         self.lanes[st.lane] = None
         st.pages, st.lane, st.admit_seq = [], -1, -1
+        st.shared_tokens = 0
         st.status = "waiting"
         st.preemptions += 1
         self.preemptions += 1
@@ -285,6 +329,7 @@ class ContinuousBatchingScheduler:
         self.alloc.free(st.pages, st.rid)
         self.lanes[st.lane] = None
         st.pages, st.lane = [], -1
+        st.shared_tokens = 0
         st.status = "finished"
         self.finished[st.rid] = st
 
@@ -292,7 +337,7 @@ class ContinuousBatchingScheduler:
 def serve_stream(
     params,
     cfg,
-    helpers: dict,
+    helpers,
     arena: KVPageArena,
     requests,
     *,
@@ -303,20 +348,26 @@ def serve_stream(
     kv_controller=None,
     init_cache_fn=None,
     helpers_factory=None,
+    share_prefix: bool = False,
+    speculative: int = 0,
+    draft_params=None,
+    draft_cfg=None,
 ) -> ServeReport:
     """Drive a request stream to completion over the paged cache.
 
-    ``helpers`` comes from serving/steps.make_paged_helpers; ``kv_controller``
+    ``helpers`` comes from serving/steps.make_paged_helpers (any
+    ``DecodeBlockHelpers``-shaped mapping works); ``kv_controller``
     is an optional UndervoltController fed the per-interval scrub telemetry —
     its output voltage is applied to the arena (the `kv` rail walk). When the
     controller escalates its ECC scheme (core/controller.py EscalationPolicy),
     the arena is re-encoded under the stronger code and ``helpers_factory``
-    (codec name -> helpers dict) supplies a commit path matching the new
-    check-plane geometry. Without a factory there is no way to apply a
-    stronger code to the live arena, so escalation is *suppressed* around
-    each controller update (and the caller's policy restored afterwards) —
-    the controller must never advance its codec state past the protection
-    actually in force (it would mis-report and double-escalate).
+    (codec name -> helpers, see serving/steps.HelpersFactory) supplies a
+    commit path matching the new check-plane geometry. Without a factory
+    there is no way to apply a stronger code to the live arena, so
+    escalation is *suppressed* around each controller update (and the
+    caller's policy restored afterwards) — the controller must never advance
+    its codec state past the protection actually in force (it would
+    mis-report and double-escalate).
 
     Decode runs in *blocks* of up to ``max_block`` steps lowered to one
     scanned dispatch (multi-step scheduling): the block size is the largest
@@ -324,10 +375,30 @@ def serve_stream(
     scrub deadline — cuts short, so blocks never decode wasted tokens and
     the scrub cadence stays exact. ``max_block=1`` recovers the one-dispatch-
     per-token loop (what the preemption tests pin down).
+
+    ``share_prefix`` turns on the prefix-sharing trie (DESIGN.md §16):
+    identical full-page prompt prefixes map to the same physical pages
+    (refcounted; divergence is copy-on-write by construction since only
+    complete, immutable prompt pages are shared), admission scrubs the
+    shared pages *once* and chunk-prefills only the private suffix, and the
+    interval scrub deduplicates shared pages — physically each is scrubbed
+    once (that is the power/throughput win) while the DED telemetry fed to
+    the kv controller stays *reader-weighted*: a detected-uncorrectable on
+    a page with N readers is N correlated request failures, so it counts N
+    times against the physical word count and the escalation ladder trips
+    earlier (scrub-aware sharing).
+
+    ``speculative=K`` (with ``draft_params``/``draft_cfg``) drafts K-1
+    tokens per dispatch with the draft model (dense, reliable-memory lane
+    caches — the *target* cache is what lives in undervolted pages) and
+    verifies all K positions with one chunked target forward; only accepted
+    tokens' page commits land (rejected rows steer to the scratch page), so
+    the emitted stream is exactly the greedy rollout.
     """
     import jax.numpy as jnp
 
     from repro.models import lm
+    from repro.serving import steps as steps_mod
 
     geom = arena.geom
     requests = normalize_requests(requests)
@@ -341,28 +412,90 @@ def serve_stream(
         assert r.max_new_tokens >= 1 and len(r.prompt) >= 1
 
     init_cache_fn = init_cache_fn or (lambda b: lm.init_cache(cfg, b, max_len))
+    alloc = PageAllocator(arena.n_pages)
+    trie = PrefixTrie(alloc, geom.page_tokens) if share_prefix else None
     sched = ContinuousBatchingScheduler(
-        requests, n_lanes, PageAllocator(arena.n_pages), geom, arena=arena
+        requests, n_lanes, alloc, geom, arena=arena, trie=trie
     )
+    spec_k = int(speculative)
+    if spec_k >= 2:
+        assert draft_params is not None and draft_cfg is not None, (
+            "speculative decode needs draft_params + draft_cfg"
+        )
+        assert helpers.get("spec_multistep") is not None, (
+            "helpers were built without a draft config (spec_multistep)"
+        )
+        import jax
+
+        draft_prefill = jax.jit(steps_mod.make_prefill_step(draft_cfg))
+        dcache = lm.init_cache(draft_cfg, n_lanes, max_len)
+    else:
+        draft_prefill, dcache = None, None
     cache = init_cache_fn(n_lanes)
     cur_tok = np.zeros(n_lanes, np.int32)
     pos_v = np.zeros(n_lanes, np.int32)
     steps = 0
     since_scrub = 0
     kv_voltages: list = []
+    prefix_hit_tokens = 0
+    spec_dispatches = 0
+    spec_emitted = 0
 
     while sched.unfinished:
-        # -- admission: batch same-length prefills, commit the prompts' KV --
+        # -- admission: batch same-shape prefills, commit the prompts' KV --
         groups: dict = {}
         for lane, st, seq in sched.admit():
-            groups.setdefault(len(seq), []).append((lane, st, seq))
+            groups.setdefault((len(seq), st.shared_tokens), []).append(
+                (lane, st, seq)
+            )
         sched.drain_fresh_pages()  # wipe before the prompt commits below
-        for s0, grp in groups.items():
-            cachem = init_cache_fn(len(grp))
+        for (s0, sh), grp in groups.items():
+            m = len(grp)
+            cachem = init_cache_fn(m)
             seqs = np.stack([seq for _, _, seq in grp])
-            tokm, cachem = helpers["prefill"](params, jnp.asarray(seqs), cachem)
-            payload = helpers["extract_range"](cachem, s0=s0)
-            tok_idx = np.arange(s0)
+            if sh:
+                # Prefix hit: refresh the shared pages' payload into the
+                # batch cache (scrub-on-read — each *unique* page once, its
+                # counters attributed to every reader), then chunk-prefill
+                # only the private suffix at pos0 = sh.
+                n_sp = sh // geom.page_tokens
+                ptab = np.stack([st.pages[:n_sp] for _, st, _ in grp])
+                upad, rows, n_u = dedup_page_table(ptab, arena.scratch_page)
+                payload_u, cnt_u = arena.scrub_pages(upad)
+                payload = jnp.asarray(payload_u)[
+                    jnp.asarray(rows.reshape(-1))
+                ].reshape(m, sh, geom.token_f32)
+                cachem = helpers["refresh"](
+                    cachem, payload, jnp.full((m,), sh, jnp.int32)
+                )
+                tokm, cachem = helpers["chunk"](
+                    params,
+                    jnp.asarray(seqs[:, sh:]),
+                    cachem,
+                    jnp.full((m,), sh, jnp.int32),
+                )
+                payload_sfx = helpers["extract_span"](cachem, start=sh, stop=s0)
+                tok_idx = np.arange(sh, s0)
+                # physical telemetry once; per-reader attribution below
+                arena.stats.accumulate(
+                    FaultStats.from_counters(
+                        cnt_u[:n_u].sum(axis=0),
+                        words=n_u * geom.words_per_page,
+                        shard=arena.shard,
+                    )
+                )
+                for r, (_, st, _) in zip(rows, grp):
+                    st.stats.accumulate(
+                        FaultStats.from_counters(
+                            cnt_u[r].sum(axis=0),
+                            words=n_sp * geom.words_per_page,
+                        )
+                    )
+                prefix_hit_tokens += sh * m
+            else:
+                tokm, cachem = helpers["prefill"](params, jnp.asarray(seqs), cachem)
+                payload_sfx = helpers["extract_range"](cachem, s0=s0)
+                tok_idx = np.arange(s0)
             page_ids = np.stack(
                 [
                     [st.pages[t // geom.page_tokens] for t in tok_idx]
@@ -370,13 +503,23 @@ def serve_stream(
                 ]
             )
             arena.commit_tokens(
-                payload.reshape(len(grp) * s0, -1),
+                payload_sfx.reshape(m * len(tok_idx), -1),
                 page_ids.reshape(-1),
-                np.tile(tok_idx % geom.page_tokens, len(grp)),
+                np.tile(tok_idx % geom.page_tokens, m),
             )
+            if trie is not None:
+                # register the prompts' complete pages (partial tail pages
+                # stay private — that is what makes divergence CoW-free)
+                for _, st, seq in grp:
+                    trie.insert(seq, st.pages[: len(seq) // geom.page_tokens])
+            if draft_prefill is not None:
+                dcachem = lm.init_cache(draft_cfg, m, max_len)
+                _, dcachem = draft_prefill(draft_params, jnp.asarray(seqs), dcachem)
             tok_host = np.asarray(tokm).reshape(-1)
             for row, (lane, st, _) in enumerate(grp):
                 cache = helpers["load_lane"](cache, cachem, row, lane)
+                if draft_prefill is not None:
+                    dcache = helpers["load_lane"](dcache, dcachem, row, lane)
                 if not st.tokens:  # fresh admission: keep the prefill's token
                     st.tokens = [int(tok_host[row])]
                 if st.done:  # budget met by the prefill token alone
@@ -416,27 +559,66 @@ def serve_stream(
                 t = pos_v[i] + j
                 page_ids[j, i] = st.pages[t // geom.page_tokens]
                 slots[j, i] = t % geom.page_tokens
-        toks, cache, arena.lo, arena.hi, arena.parity = helpers["multistep"](
-            params,
-            jnp.asarray(cur_tok[:, None]),
-            cache,
-            arena.lo,
-            arena.hi,
-            arena.parity,
-            jnp.asarray(pos_v),
-            jnp.asarray(page_ids),
-            jnp.asarray(slots),
-        )
-        toks_host = np.asarray(toks)
-        steps += k
-        since_scrub += k
-        for i in active:
-            st = sched.lanes[i]
-            st.tokens.extend(int(t) for t in toks_host[:, i])
-            cur_tok[i] = st.tokens[-1]
-            pos_v[i] += k
-            if st.done:
-                sched.retire(st)
+        if spec_k >= 2 and k >= 2:
+            # Draft k-1 tokens, verify all k in one chunked target forward;
+            # page commits land only for the accepted prefix (rejected rows
+            # steer to the scratch page inside the dispatch).
+            kk = min(k, spec_k)
+            greedy, n_emit, cache, dcache, arena.lo, arena.hi, arena.parity = (
+                helpers["spec_multistep"](
+                    params,
+                    draft_params,
+                    jnp.asarray(cur_tok[:, None]),
+                    cache,
+                    dcache,
+                    arena.lo,
+                    arena.hi,
+                    arena.parity,
+                    jnp.asarray(pos_v),
+                    jnp.asarray(page_ids[:kk]),
+                    jnp.asarray(slots[:kk]),
+                    k=kk,
+                    scratch_page=arena.scratch_page,
+                )
+            )
+            greedy_host = np.asarray(greedy)
+            n_host = np.asarray(n_emit)
+            steps += 1
+            spec_dispatches += 1
+            adv = 0
+            for i in active:
+                st = sched.lanes[i]
+                n = int(n_host[i])
+                st.tokens.extend(int(t) for t in greedy_host[i, :n])
+                spec_emitted += n
+                adv = max(adv, n)
+                cur_tok[i] = st.tokens[-1]
+                pos_v[i] += n
+                if st.done:
+                    sched.retire(st)
+            since_scrub += adv
+        else:
+            toks, cache, arena.lo, arena.hi, arena.parity = helpers["multistep"](
+                params,
+                jnp.asarray(cur_tok[:, None]),
+                cache,
+                arena.lo,
+                arena.hi,
+                arena.parity,
+                jnp.asarray(pos_v),
+                jnp.asarray(page_ids),
+                jnp.asarray(slots),
+            )
+            toks_host = np.asarray(toks)
+            steps += k
+            since_scrub += k
+            for i in active:
+                st = sched.lanes[i]
+                st.tokens.extend(int(t) for t in toks_host[:, i])
+                cur_tok[i] = st.tokens[-1]
+                pos_v[i] += k
+                if st.done:
+                    sched.retire(st)
 
         # -- scrub interval: inject at the kv rail, scrub-on-read, refresh --
         if scrub_interval and since_scrub >= scrub_interval:
@@ -458,24 +640,58 @@ def serve_stream(
                     continue
                 table[i, : len(st.pages)] = st.pages
                 n_tok[i] = st.stored  # already counts the token committed above
-            payload, cnt = arena.scrub_pages(table.reshape(-1))
-            cache = helpers["refresh"](
-                cache,
-                payload.reshape(n_lanes, -1, geom.token_f32),
-                jnp.asarray(n_tok),
-            )
-            cnt = cnt.reshape(n_lanes, p_cols, 8)
-            interval = FaultStats()
-            for i, st in enumerate(sched.lanes):
-                if st is None:
-                    continue
-                rows = cnt[i, : len(st.pages)]
-                rs = FaultStats.from_counters(
-                    rows.sum(axis=0), words=rows.shape[0] * geom.words_per_page
+            interval = FaultStats()  # reader-weighted attribution
+            if trie is None:
+                payload, cnt = arena.scrub_pages(table.reshape(-1))
+                cache = helpers["refresh"](
+                    cache,
+                    payload.reshape(n_lanes, -1, geom.token_f32),
+                    jnp.asarray(n_tok),
                 )
-                st.stats.accumulate(rs)
-                interval.accumulate(rs)
-            arena.stats.accumulate(interval)
+                cnt = cnt.reshape(n_lanes, p_cols, 8)
+                for i, st in enumerate(sched.lanes):
+                    if st is None:
+                        continue
+                    rows = cnt[i, : len(st.pages)]
+                    rs = FaultStats.from_counters(
+                        rows.sum(axis=0), words=rows.shape[0] * geom.words_per_page
+                    )
+                    st.stats.accumulate(rs)
+                    interval.accumulate(rs)
+                # without sharing every live page has one reader: the
+                # reader-weighted view IS the physical view
+                physical = interval
+                arena.stats.accumulate(interval)
+            else:
+                # Prefix sharing: scrub each unique live page ONCE (that is
+                # the physical work and the arena.stats truth), then fan the
+                # corrected payload and the counters out to every reader —
+                # per-request stats stay reader-weighted because every
+                # reader really did consume that page's faults.
+                upad, rows, n_u = dedup_page_table(table, arena.scratch_page)
+                payload_u, cnt_u = arena.scrub_pages(upad)
+                cache = helpers["refresh"](
+                    cache,
+                    jnp.asarray(payload_u)[
+                        jnp.asarray(rows.reshape(-1))
+                    ].reshape(n_lanes, -1, geom.token_f32),
+                    jnp.asarray(n_tok),
+                )
+                for i, st in enumerate(sched.lanes):
+                    if st is None:
+                        continue
+                    rs = FaultStats.from_counters(
+                        cnt_u[rows[i, : len(st.pages)]].sum(axis=0),
+                        words=len(st.pages) * geom.words_per_page,
+                    )
+                    st.stats.accumulate(rs)
+                    interval.accumulate(rs)
+                physical = FaultStats.from_counters(
+                    cnt_u[:n_u].sum(axis=0),
+                    words=n_u * geom.words_per_page,
+                    shard=arena.shard,
+                )
+                arena.stats.accumulate(physical)
             if kv_controller is not None and not kv_controller.locked:
                 # See docstring: without a factory a stronger code cannot be
                 # applied to the live arena, so escalation is suppressed for
@@ -484,7 +700,16 @@ def serve_stream(
                 if helpers_factory is None:
                     kv_controller.escalation = None
                 try:
-                    arena.set_voltage(kv_controller.update(interval))
+                    # Scrub-aware sharing: reader-weighted counters over the
+                    # *physical* word population — a DED on an N-reader page
+                    # counts N times, so ded_rate amplifies with fan-out and
+                    # the escalation ladder trips earlier than it would for
+                    # private pages (core/controller.reader_weighted_stats).
+                    arena.set_voltage(
+                        kv_controller.update(
+                            reader_weighted_stats(interval, physical)
+                        )
+                    )
                 finally:
                     kv_controller.escalation = saved_policy
                 change = kv_controller.pop_codec_change()
@@ -494,10 +719,34 @@ def serve_stream(
                     # stronger code and the commit path switches with it.
                     # (A change can only arrive when a factory exists —
                     # escalation was suppressed above otherwise.)
-                    arena.change_codec(change)
+                    shared_now = None
+                    if trie is not None:
+                        shared_now = sorted(
+                            set(sched.alloc.shared_pages()) | set(trie.pages())
+                        )
+                    try:
+                        arena.change_codec(change, shared_pages=shared_now)
+                    except SharedPageDEDError as err:
+                        # Refuse-and-copy: a latched DED on a shared page
+                        # must not be re-sealed for N readers. Drop the
+                        # trie's claim on the poisoned prefixes, preempt
+                        # every running reader (recompute *is* the copy —
+                        # fresh pages, re-prefilled KV), then re-protect.
+                        trie.evict_pages(err.pages)
+                        bad = set(err.pages)
+                        for st in list(sched.running):
+                            if bad & set(st.pages):
+                                sched.preempt(st)
+                        arena.change_codec(change)
                     helpers = helpers_factory(change)
             kv_voltages.append(arena.voltage)
 
+    if trie is not None:
+        # Serve teardown: the prefix cache has no meaning past this stream,
+        # so release every trie reference before the free-page accounting
+        # (pages_free_at_end must see the arena fully reclaimed).
+        trie.drain()
+        sched.alloc.recycle()
     outputs = {
         rid: np.asarray(st.tokens, np.int32) for rid, st in sched.finished.items()
     }
@@ -510,4 +759,7 @@ def serve_stream(
         kv_voltages=kv_voltages,
         arena=arena,
         pages_free_at_end=sched.alloc.free_pages,
+        prefix_hit_tokens=prefix_hit_tokens,
+        spec_dispatches=spec_dispatches,
+        spec_emitted=spec_emitted,
     )

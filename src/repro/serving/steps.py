@@ -16,7 +16,9 @@ C-order) is defined *only* here — extract and refresh are exact inverses.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -48,16 +50,24 @@ def _extract_tokens(cache, idx, *, geom: KVGeometry):
     return jnp.concatenate(parts, axis=1).astype(jnp.float32)
 
 
-def _extract_range(cachem, *, s0: int, geom: KVGeometry):
-    """Prompt payload: batch-of-m cache -> (m, s0, token_f32), tokens 0..s0-1."""
+def _extract_span(cachem, *, start: int, stop: int, geom: KVGeometry):
+    """Window payload: batch-of-m cache -> (m, stop-start, token_f32) for
+    cache positions start..stop-1 (prefix sharing commits only the private
+    suffix — the shared pages already hold positions 0..start-1)."""
     parts = []
+    span = stop - start
     for j in geom.attn_positions:
         for name in ("k", "v"):
             c = cachem[f"p{j}"][name]  # (g, m, S, H, D)
             m = c.shape[1]
-            sel = jnp.moveaxis(c[:, :, :s0], 0, 2)  # (m, s0, g, H, D)
-            parts.append(sel.reshape(m, s0, -1))
+            sel = jnp.moveaxis(c[:, :, start:stop], 0, 2)  # (m, span, g, H, D)
+            parts.append(sel.reshape(m, span, -1))
     return jnp.concatenate(parts, axis=2).astype(jnp.float32)
+
+
+def _extract_range(cachem, *, s0: int, geom: KVGeometry):
+    """Prompt payload: batch-of-m cache -> (m, s0, token_f32), tokens 0..s0-1."""
+    return _extract_span(cachem, start=0, stop=s0, geom=geom)
 
 
 def _refresh_cache(cache, payload, n_tok, *, geom: KVGeometry):
@@ -136,31 +146,188 @@ def _multistep(
     return toks, cache, lo, hi, par
 
 
-def make_paged_helpers(cfg: ModelConfig, geom: KVGeometry, codec: str = "secded72"):
+def _chunk_prefill(params, tokens, cache, pos0, *, cfg):
+    """Chunked prefill of ``tokens`` (m, s) at per-lane cache position
+    ``pos0`` (m,): the prefix-sharing admission path — the shared prefix is
+    already in the cache (refreshed from its pages), only the private
+    suffix runs through the model. Returns (next_tok (m,), cache)."""
+    logits, cache = lm.chunk_step(params, tokens, cfg, cache, pos0)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+def _spec_multistep(
+    params, dparams, tok, cache, dcache, lo, hi, par, pos0, page_ids, slots,
+    *, cfg, dcfg, geom, codec="secded72", k, scratch_page,
+):
+    """Draft k-1 tokens with the draft model, verify all k positions with
+    the target model in ONE chunk dispatch, commit pages only for accepted
+    tokens (DESIGN.md §16).
+
+    tok: (L, 1) current token; cache/dcache: target/draft lane caches;
+    pos0: (L,) position of ``tok``; page_ids/slots: (k, L) host page
+    targets for positions pos0..pos0+k-1 (inactive lanes already point at
+    the scratch page).
+
+    Greedy acceptance: the target's chunk logits give greedy[:, i] =
+    argmax P(. | t0, d1..d_i); draft d_{i+1} is accepted iff it equals
+    greedy[:, i], and ``n_emit = 1 + #accepted-prefix`` in [1, k] — so the
+    emitted tokens greedy[:, :n_emit] are exactly the tokens step-by-step
+    greedy decode would have produced, regardless of draft quality (the
+    accepted-prefix property, tested). Rejected drafts' K/V rows stay in
+    the dense lane cache beyond the valid length (masked by every later
+    attention and overwritten before they are ever attended) and their
+    page commits are steered to the scratch row.
+
+    Returns (greedy (L, k), n_emit (L,), cache, dcache, lo, hi, par).
+    """
+    from repro.core.kvpages import _commit_tokens
+
+    length = tok.shape[0]
+
+    def draft_body(carry, _):
+        t, dc, p = carry
+        logits, dc = lm.decode_step(dparams, t, dcfg, dc, p)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, dc, p + 1), nxt[:, 0]
+
+    if k > 1:
+        # length=k, not k-1: the k-th step's sampled token is discarded but
+        # its decode writes tokens_v[:, k-1]'s K/V into the draft cache —
+        # otherwise full acceptance leaves a hole at pos0+k-1 that the next
+        # block's draft would attend as garbage (hurting acceptance, never
+        # correctness: the target verifies regardless).
+        (_, dcache, _), drafts = jax.lax.scan(
+            draft_body, (tok, dcache, pos0), None, length=k
+        )
+        tokens_v = jnp.concatenate([tok, drafts[:-1].T], axis=1)  # (L, k)
+    else:
+        tokens_v = tok  # degenerate k=1: plain single-step decode via chunk
+    full, cache = lm.chunk_logits(params, tokens_v, cfg, cache, pos0)
+    greedy = jnp.argmax(full, axis=-1).astype(jnp.int32)  # (L, k)
+    if k > 1:
+        match = (tokens_v[:, 1:] == greedy[:, :-1]).astype(jnp.int32)
+        n_emit = 1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1)  # (L,)
+    else:
+        n_emit = jnp.ones((length,), jnp.int32)
+
+    # Commit positions pos0+i only where i < n_emit: the committed rows are
+    # exactly the block's accepted sequence [t0, accepted drafts] — the same
+    # resume_seq prefix the non-speculative path commits.
+    payloads = jax.vmap(
+        lambda i: _extract_tokens(cache, pos0 + i, geom=geom)
+    )(jnp.arange(k))  # (k, L, F)
+    accept = jnp.arange(k)[:, None] < n_emit[None, :]
+    commit_ids = jnp.where(accept, page_ids, scratch_page)
+    lo, hi, par = _commit_tokens(
+        lo, hi, par,
+        payloads.reshape(k * length, -1),
+        commit_ids.reshape(-1),
+        slots.reshape(-1),
+        token_words=geom.token_words,
+        words_per_page=geom.words_per_page,
+        codec=codec,
+    )
+    return greedy, n_emit, cache, dcache, lo, hi, par
+
+
+@runtime_checkable
+class DecodeBlockHelpers(Protocol):
+    """The decode-block helper contract the continuous-batching scheduler
+    consumes (DESIGN.md §11/§16). ``make_paged_helpers`` is the canonical
+    producer; anything item-accessible with these keys satisfies it."""
+
+    def __getitem__(self, name: str) -> Callable: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedHelpers:
     """jit'd continuous-batching helpers sharing one payload layout.
 
-    Returns a dict of:
+    Attribute and ``helpers["name"]`` access are both supported — the
+    scheduler historically indexed a plain dict and external factories may
+    still return one (see :class:`DecodeBlockHelpers`).
+
       prefill(params, tokens (m,s), cachem)       -> (next_tok (m,), cachem)
       multistep(params, tok, cache, lo, hi, par,
                 pos (L,), page_ids (k,L), slots)  -> (toks (k,L), cache, planes)
-      extract_range(cachem, s)                    -> (m, s, token_f32) payload
+      extract_range(cachem, s0=s)                 -> (m, s, token_f32) payload
+      extract_span(cachem, start=a, stop=b)       -> (m, b-a, token_f32)
       load_lane(cache, cachem, src_row, lane)     -> cache
       refresh(cache, payload (L,T,F), n_tok (L,)) -> cache
+      chunk(params, tokens (m,s), cachem, pos0)   -> (next_tok (m,), cachem)
+      spec_multistep(params, dparams, tok, cache, dcache, lo, hi, par,
+                pos (L,), page_ids (k,L), slots, k=, scratch_page=)
+                -> (greedy (L,k), n_emit (L,), cache, dcache, planes)
 
     Single-step decode is multistep with k=1 (one (1, L) page row); the
-    per-token extract lives inside the multistep scan body.
+    per-token extract lives inside the multistep scan body. ``codec`` is
+    the SECDED-family codec the commit path encodes with — rebuild the
+    helpers (via the engine's helpers factory) when the kv rail escalates.
     """
-    return {
-        "prefill": jax.jit(make_prefill_step(cfg)),
-        "multistep": jax.jit(
+
+    codec: str
+    prefill: Callable
+    multistep: Callable
+    extract_range: Callable
+    extract_span: Callable
+    load_lane: Callable
+    refresh: Callable
+    chunk: Callable
+    spec_multistep: Optional[Callable] = None
+
+    def __getitem__(self, name: str) -> Callable:
+        fn = getattr(self, name)
+        if fn is None:
+            raise KeyError(name)
+        return fn
+
+    def get(self, name: str, default: Any = None) -> Any:
+        return getattr(self, name, default) or default
+
+
+@runtime_checkable
+class HelpersFactory(Protocol):
+    """codec name -> decode-block helpers, called by the scheduler when the
+    kv rail's escalation ladder changes the arena's codec mid-serve."""
+
+    def __call__(self, codec: str) -> DecodeBlockHelpers: ...
+
+
+def make_paged_helpers(
+    cfg: ModelConfig,
+    geom: KVGeometry,
+    codec: str = "secded72",
+    draft_cfg: ModelConfig | None = None,
+) -> PagedHelpers:
+    """Build the jit'd :class:`PagedHelpers` bundle for one (config,
+    geometry, codec) triple. ``draft_cfg`` enables ``spec_multistep`` (the
+    draft model's decode runs inside the same scanned dispatch)."""
+    spec = None
+    if draft_cfg is not None:
+        spec = jax.jit(
+            functools.partial(
+                _spec_multistep, cfg=cfg, dcfg=draft_cfg, geom=geom, codec=codec
+            ),
+            static_argnames=("k", "scratch_page"),
+        )
+    return PagedHelpers(
+        codec=codec,
+        prefill=jax.jit(make_prefill_step(cfg)),
+        multistep=jax.jit(
             functools.partial(_multistep, cfg=cfg, geom=geom, codec=codec)
         ),
-        "extract_range": jax.jit(
+        extract_range=jax.jit(
             functools.partial(_extract_range, geom=geom), static_argnames=("s0",)
         ),
-        "load_lane": jax.jit(_load_lane),
-        "refresh": jax.jit(functools.partial(_refresh_cache, geom=geom)),
-    }
+        extract_span=jax.jit(
+            functools.partial(_extract_span, geom=geom),
+            static_argnames=("start", "stop"),
+        ),
+        load_lane=jax.jit(_load_lane),
+        refresh=jax.jit(functools.partial(_refresh_cache, geom=geom)),
+        chunk=jax.jit(functools.partial(_chunk_prefill, cfg=cfg)),
+        spec_multistep=spec,
+    )
 
 
 def make_serve_step(cfg: ModelConfig):
