@@ -158,7 +158,44 @@ def _check_serve(threshold: float, results: list | None = None) -> int:
     else:
         results.append(("serve_throughput cont_over_fixed", "pass", detail))
     rc = _check_shared_prefix(threshold, results) or rc
+    rc = _check_traced(results) or rc
     return rc
+
+
+# Flight-recorder overhead floor: traced serving must retain at least this
+# fraction of untraced tokens/s. Absolute (no baseline trend): tracing is an
+# always-on-capable diagnostic, so its cost budget is "in the noise" forever,
+# not "no worse than last time".
+TRACE_FLOOR = 0.95
+
+
+def _check_traced(results: list) -> int:
+    """Observability overhead gate: traced_over_untraced >= TRACE_FLOOR.
+
+    Skips when the current run predates the serve_traced row (older
+    serve_throughput.json artifacts), exactly like the shared-prefix gate
+    skips metric-less baselines."""
+    tnow = _serve_metric(SERVE_CURRENT, "serve_traced", "traced_over_untraced")
+    if tnow is None:
+        results.append(
+            ("serve traced_over_untraced", "skipped", "no serve_traced row")
+        )
+        return 0
+    print(
+        f"serve_traced: traced_over_untraced {tnow:.3f} "
+        f"(absolute floor {TRACE_FLOOR:.2f})"
+    )
+    detail = f"{tnow:.3f} (absolute floor {TRACE_FLOOR:.2f})"
+    if tnow < TRACE_FLOOR:
+        print(
+            f"FAIL: tracing costs serving throughput "
+            f"(ratio {tnow:.3f} < floor {TRACE_FLOOR:.2f})",
+            file=sys.stderr,
+        )
+        results.append(("serve traced_over_untraced", "fail", detail))
+        return 1
+    results.append(("serve traced_over_untraced", "pass", detail))
+    return 0
 
 
 def _check_shared_prefix(threshold: float, results: list) -> int:

@@ -54,11 +54,13 @@ def _grid():
 
 def _row(pname: str, v: float, st: FaultStats, prof, us: float) -> dict:
     mbits = N_WORDS * 72 / (1024 * 1024)
+    # raw counters come from the shared serialization (telemetry.to_dict);
+    # only the Fig. 1 derived metrics are computed here
     return {
         "platform": pname,
         "voltage": float(v),
+        **st.to_dict(),
         "faults_per_mbit": st.faulty_bits / mbits,
-        "faulty_words": st.faulty_words,
         "residual_after_ecc": st.detected + st.silent,
         "ecc_reduction": 1.0 - (st.detected + st.silent) / max(st.faulty_words, 1),
         "model_rate_per_mbit": prof.faults_per_mbit(float(v)),

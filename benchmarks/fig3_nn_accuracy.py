@@ -47,7 +47,6 @@ def run() -> list[dict]:
         mlp.set_voltage(float(v), ecc=True)
         pred_ecc, us = timed(mlp.predict, xte, repeat=1)
         err_ecc = float((pred_ecc != yte).mean())
-        cov = mlp.stats.coverage()
         p_ecc = mlp.power_w()
         mlp.set_voltage(float(v), ecc=False)
         pred_raw = mlp.predict(xte)
@@ -64,8 +63,7 @@ def run() -> list[dict]:
                 "divergence_vs_clean": campaign.label_divergence(pred0, pred_ecc),
                 "divergence_no_ecc": campaign.label_divergence(pred0, pred_raw),
                 "scorer_version": campaign.SCORER_VERSION,
-                "faulty_words": mlp.stats.faulty_words,
-                "coverage_correctable": cov["correctable"],
+                **mlp.stats.coverage_row(),
                 "power_w": p_ecc,
                 "bram_saving_vs_vmin": voltage.power_saving(prof.v_min, float(v), ecc=True),
                 "us": us,

@@ -116,11 +116,14 @@ def run(samples: int = 3) -> list[dict]:
         share_prefix=on,
     )
 
+    from repro.obs import TraceRecorder
+
     _run_fixed(eng, reqs)  # warmup / compile
     rep = run_cont()
     run_shared(False), run_shared(True)  # warm both trie states' shapes
     tf, tc = [], []
     tp, ts = [], []
+    tt, n_events = [], 0
     for _ in range(samples):
         t0 = time.perf_counter()
         _run_fixed(eng, reqs)
@@ -134,9 +137,18 @@ def run(samples: int = 3) -> list[dict]:
         t0 = time.perf_counter()
         srep = run_shared(True)
         ts.append(time.perf_counter() - t0)
+        # traced sample: same serve loop with the flight recorder attached
+        # (fresh per sample so the event list never amortizes across runs)
+        eng.recorder = TraceRecorder()
+        t0 = time.perf_counter()
+        run_cont()
+        tt.append(time.perf_counter() - t0)
+        n_events = len(eng.recorder.events)
+        eng.recorder = None
 
     tps_fixed = useful_tokens / min(tf)
     tps_cont = useful_tokens / min(tc)
+    tps_traced = useful_tokens / min(tt)
     shared_tokens = sum(n for _, n in shared_reqs)
     tps_private = shared_tokens / min(tp)
     tps_shared = shared_tokens / min(ts)
@@ -165,6 +177,20 @@ def run(samples: int = 3) -> list[dict]:
             "tokens_s_shared": tps_shared,
             "shared_over_private": tps_shared / tps_private,
         },
+        {
+            # observability overhead: the same continuous-batching serve with
+            # the flight recorder on. Gated absolutely (>= 0.95): tracing must
+            # stay in the noise, never a tax on serving throughput.
+            "kernel": "serve_traced",
+            "n_requests": len(reqs),
+            "n_lanes": N_LANES,
+            "useful_tokens": useful_tokens,
+            "scrub_interval": SCRUB_INTERVAL,
+            "trace_events": n_events,
+            "tokens_s_untraced": tps_cont,
+            "tokens_s_traced": tps_traced,
+            "traced_over_untraced": tps_traced / tps_cont,
+        },
     ]
     emit(rows, "serve_throughput")
     return rows
@@ -192,6 +218,16 @@ def main():
             f"tokens_s_shared={s['tokens_s_shared']:.1f};"
             f"tokens_s_private={s['tokens_s_private']:.1f};"
             f"prefix_hit_tokens={s['prefix_hit_tokens']}",
+        )
+    )
+    t = rows[2]
+    print(
+        csv_line(
+            f"serve/traced_{t['n_requests']}req_{t['n_lanes']}lane",
+            1e6 / t["tokens_s_traced"],
+            f"traced_over_untraced={t['traced_over_untraced']:.2f};"
+            f"tokens_s_traced={t['tokens_s_traced']:.1f};"
+            f"trace_events={t['trace_events']}",
         )
     )
 

@@ -227,6 +227,60 @@ def share_demo():
     assert identical, "speculative serve must emit exactly the greedy rollout"
 
 
+def trace_demo(out_dir=None):
+    """Reliability flight recorder (docs/OBSERVABILITY.md): serve a small
+    stream with the trace recorder attached, then export + validate the run
+    timeline in every format. Run with::
+
+        PYTHONPATH=src python examples/serve_lm_ecc.py --trace-demo [DIR]
+    """
+    import json
+    import os
+    import tempfile
+
+    from repro.obs import TraceRecorder, read_jsonl, validate_events
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    rec = TraceRecorder()
+    eng = ServingEngine(
+        cfg, params,
+        rel=ReliabilityConfig(
+            platform="vc707", ecc=True, voltage=1.0, mode="inline",
+            rails=RailsConfig(multi_rail=True, start_v=0.62),
+        ),
+        max_len=64, recorder=rec,
+    )
+    eng.autotune_voltage(max_rounds=6)  # rail_step / escalation events
+    prompts = rng.integers(0, cfg.vocab, size=(4, 8)).astype(np.int32)
+    stream = [
+        (prompts[i % 4][: 4 + (3 * i) % 5], 6 + (7 * i) % 13) for i in range(6)
+    ]
+    report = eng.serve(
+        stream, n_lanes=2, page_tokens=8, scrub_interval=4,
+        walk_kv=True, kv_voltage=0.60,
+    )
+
+    out_dir = out_dir or tempfile.mkdtemp(prefix="repro_trace_")
+    os.makedirs(out_dir, exist_ok=True)
+    jsonl = os.path.join(out_dir, "trace.jsonl")
+    rec.to_jsonl(jsonl)
+    n = validate_events(read_jsonl(jsonl))  # schema + causal-order check
+    chrome = os.path.join(out_dir, "trace.json")
+    rec.to_chrome_trace(chrome)
+    with open(chrome) as f:
+        ct = json.load(f)
+    assert ct["traceEvents"], "chrome trace must not be empty"
+    print(
+        f"served {len(report.outputs)} requests in {report.steps} steps; "
+        f"{n} validated trace events -> {jsonl}"
+    )
+    print(f"chrome trace ({len(ct['traceEvents'])} entries) -> {chrome}")
+    print()
+    print(rec.summary_markdown())
+
+
 def mesh_demo():
     """Mesh-sharded serving (DESIGN.md §13): every data-parallel replica is
     its own chip — own fault population, own rails. Run with forced host
@@ -281,5 +335,8 @@ if __name__ == "__main__":
         mesh_demo()
     elif "--share-demo" in sys.argv:
         share_demo()
+    elif "--trace-demo" in sys.argv:
+        rest = [a for a in sys.argv[1:] if not a.startswith("--")]
+        trace_demo(rest[0] if rest else None)
     else:
         main()

@@ -250,15 +250,18 @@ class CampaignSpec:
         return sweep.campaign_voltage_grid(profile)
 
 
-def run_campaign(spec: CampaignSpec) -> list[dict]:
+def run_campaign(spec: CampaignSpec, recorder=None) -> list[dict]:
     """Run the campaign; one row dict per (environment, codec, voltage).
 
     Per (environment, codec) an inline single-rail ServingEngine is built at
     nominal, the clean reference rollout + teacher-forced logits are cached,
     and each grid voltage re-injects faults (``set_voltage``) and re-scores.
-    Rows join the DivergenceReport with the engine's scrub telemetry, the
-    vmapped sweep's counter proxy at the same point, and the modeled BRAM
-    power saving — everything the accuracy-vs-voltage figure needs.
+    Rows join the DivergenceReport with the engine's scrub telemetry
+    (``FaultStats.to_dict``), the vmapped sweep's counter proxy at the same
+    point, and the modeled BRAM power saving — everything the
+    accuracy-vs-voltage figure needs. An optional ``recorder``
+    (obs.TraceRecorder) gets one ``campaign_point`` event per row, with the
+    step clock advancing once per grid point.
     """
     import jax
     import jax.numpy as jnp
@@ -328,17 +331,19 @@ def run_campaign(spec: CampaignSpec) -> list[dict]:
                     "voltage": float(v),
                     "nominal": float(v) >= profile.v_min,
                     **dataclasses.asdict(rep),
-                    "words": st.words,
-                    "faulty_words": st.faulty_words,
-                    "corrected": st.corrected,
-                    "detected": st.detected,
-                    "silent": st.silent,
+                    **st.to_dict(),
                     "bram_saving_vs_nominal": vmod.power_saving(
                         profile.v_nom, float(v), ecc=True
                     ),
                     "seed": spec.seed,
                     "us": us,
                 }
+                if recorder:
+                    recorder.advance(1)
+                    recorder.emit(
+                        "campaign_point", voltage=float(v), codec=codec,
+                        divergence=float(rep.divergence),
+                    )
                 pr = proxy.get(round(float(v), 4))
                 if pr is not None:
                     row.update(

@@ -107,6 +107,7 @@ class UndervoltController:
         shard: int = -1,
         adaptive: bool = False,
         divergence_slo: float | None = None,
+        domain: str | None = None,
     ):
         self.platform = platform
         self.step_v = step_v
@@ -115,6 +116,8 @@ class UndervoltController:
         self.adaptive = adaptive
         self.divergence_slo = divergence_slo
         self.shard = int(shard)
+        self.domain = domain  # rail name when owned by a MultiRailController
+        self.recorder = None  # optional obs.TraceRecorder (flight recorder)
         # Warm start: the guardband is fault-free by definition (paper §III),
         # so a search may legally begin anywhere in [v_min, v_nom].
         self.voltage = (
@@ -135,6 +138,12 @@ class UndervoltController:
         KVPageArena.change_codec) before the next telemetry interval."""
         change, self._pending_codec = self._pending_codec, None
         return change
+
+    def bind_recorder(self, recorder) -> None:
+        """Attach a flight recorder (obs.TraceRecorder); every ``update``
+        mirrors its ControllerRecord as a ``rail_step`` event (plus
+        ``codec_escalate`` / ``canary_trip`` on those decisions)."""
+        self.recorder = recorder
 
     def update(
         self, stats: FaultStats, divergence: float | None = None
@@ -157,6 +166,7 @@ class UndervoltController:
             self.escalation.next_codec(self.codec) if self.escalation else None
         )
         ded_rate = stats.detected / max(stats.words, 1)
+        codec_before = self.codec
         if self.locked:
             if self.adaptive and trip:
                 # A locked rail is only safe while the flux that locked it
@@ -206,6 +216,34 @@ class UndervoltController:
                 0.0 if divergence is None else float(divergence),
             )
         )
+        rec = self.recorder
+        if rec:
+            # The joinability contract (DESIGN.md §17): every rail decision
+            # event carries the very counters that caused it, so a retreat
+            # or escalation in the trace needs no side lookup to explain.
+            div = 0.0 if divergence is None else float(divergence)
+            rec.emit(
+                "rail_step", domain=self.domain, shard=self.shard,
+                action=action, voltage=float(self.voltage), codec=self.codec,
+                corrected=int(stats.corrected), detected=int(stats.detected),
+                silent=int(stats.silent), words=int(stats.words),
+                divergence=div,
+            )
+            rec.metrics.counter(
+                "rail.actions", domain=self.domain or "", action=action,
+                shard=self.shard,
+            ).inc()
+            if action == "escalate":
+                rec.emit(
+                    "codec_escalate", domain=self.domain, shard=self.shard,
+                    codec_from=codec_before, codec_to=self.codec,
+                    ded_rate=ded_rate, acc_trip=bool(acc_trip),
+                )
+            if acc_trip:
+                rec.emit(
+                    "canary_trip", domain=self.domain, shard=self.shard,
+                    divergence=div, slo=float(self.divergence_slo),
+                )
         return self.voltage
 
 
@@ -252,12 +290,21 @@ class MultiRailController:
             adaptive=adaptive,
             divergence_slo=divergence_slo,
         )
+        self.recorder = None
         self.rails = {
             d: UndervoltController(
-                profiles.get(d, platform), codec=codecs.get(d), **self._defaults
+                profiles.get(d, platform), codec=codecs.get(d), domain=d,
+                **self._defaults,
             )
             for d in self.domains
         }
+
+    def bind_recorder(self, recorder) -> None:
+        """Attach a flight recorder to every rail (late-bound rails added
+        via ``add_rail`` inherit it)."""
+        self.recorder = recorder
+        for c in self.rails.values():
+            c.bind_recorder(recorder)
 
     def add_rail(
         self,
@@ -274,8 +321,11 @@ class MultiRailController:
         if domain not in self.rails:
             self.domains = self.domains + (domain,)
             self.rails[domain] = UndervoltController(
-                profile or self._platform, codec=codec, **self._defaults
+                profile or self._platform, codec=codec, domain=domain,
+                **self._defaults,
             )
+            if self.recorder is not None:
+                self.rails[domain].bind_recorder(self.recorder)
         return self.rails[domain]
 
     @property
@@ -374,6 +424,11 @@ class MeshRailController:
         """The MultiRailController judging shard ``s`` (the shared one under
         the uniform policy)."""
         return self.shards[0] if self.policy == "uniform" else self.shards[s]
+
+    def bind_recorder(self, recorder) -> None:
+        """Attach a flight recorder to every shard's controller."""
+        for c in self.shards:
+            c.bind_recorder(recorder)
 
     def add_rail(self, domain: str, profile=None, codec=None) -> list:
         """Attach a late-bound rail (the `kv` cache) on every shard's

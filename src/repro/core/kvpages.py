@@ -51,6 +51,7 @@ from repro.core.telemetry import FaultStats
 from repro.core.voltage import PlatformProfile
 from repro.kernels import ops as kops
 from repro.kernels import paged_gather
+from repro.obs import profile as obs_profile
 
 PAGE_TOKENS = 8  # default page size (tokens); 2^k keeps slot math cheap
 
@@ -255,12 +256,22 @@ class PrefixTrie:
 
     OWNER = "<prefix-trie>"
 
-    def __init__(self, alloc: PageAllocator, page_tokens: int):
+    def __init__(
+        self,
+        alloc: PageAllocator,
+        page_tokens: int,
+        recorder=None,
+        shard: int = -1,
+    ):
         self.alloc = alloc
         self.page_tokens = int(page_tokens)
         self._root = _TrieNode(None, None, None)
         self._by_page: dict[int, _TrieNode] = {}
         self._clock = 0
+        # Optional flight recorder (obs.TraceRecorder): registrations and
+        # evictions land as trie_insert / trie_evict events (DESIGN.md §17).
+        self.recorder = recorder
+        self.shard = int(shard)
 
     def __len__(self) -> int:
         return len(self._by_page)
@@ -302,6 +313,7 @@ class PrefixTrie:
         assert len(pages) <= len(chunks), "pages beyond full-page prefix"
         node = self._root
         self._clock += 1
+        fresh = 0
         for key, page in zip(chunks, pages):
             child = node.children.get(key)
             if child is None:
@@ -309,8 +321,11 @@ class PrefixTrie:
                 child = _TrieNode(key, int(page), node)
                 node.children[key] = child
                 self._by_page[child.page] = child
+                fresh += 1
             child.stamp = self._clock
             node = child
+        if fresh and self.recorder:
+            self.recorder.emit("trie_insert", shard=self.shard, pages=fresh)
 
     def _drop(self, node: _TrieNode) -> None:
         del node.parent.children[node.key]
@@ -333,6 +348,10 @@ class PrefixTrie:
             victim = min(victims, key=lambda nd: nd.stamp)
             freed.append(victim.page)
             self._drop(victim)
+        if freed and self.recorder:
+            self.recorder.emit(
+                "trie_evict", shard=self.shard, pages=len(freed), reason="lru"
+            )
         return freed
 
     def pages(self) -> list[int]:
@@ -358,6 +377,11 @@ class PrefixTrie:
                 if nd.page in self._by_page:
                     dropped.append(nd.page)
                     self._drop(nd)
+        if dropped and self.recorder:
+            self.recorder.emit(
+                "trie_evict", shard=self.shard, pages=len(dropped),
+                reason="forced",
+            )
         return dropped
 
     def drain(self) -> list[int]:
@@ -579,7 +603,9 @@ class KVPageArena:
         )
         key = jax.random.fold_in(self._key, self._interval)
         self.faulted = True
-        mlo, mhi, mpar = _device_chunk_masks_jit()(
+        mlo, mhi, mpar = obs_profile.call(
+            "kv.inject_masks",
+            _device_chunk_masks_jit(),
             key, self._total_words, jnp.float32(rate),
             jnp.float32(self.profile.row_sigma), n_check=self.codec.n_check,
             burst=self._burst,
@@ -614,7 +640,9 @@ class KVPageArena:
         """Write one token per row: payload (N, token_f32) f32, page_ids and
         slots (N,) int32 (slot = position within the page). Rows steered to
         the scratch page are don't-cares (inactive lanes)."""
-        self.lo, self.hi, self.parity = _commit_tokens(
+        self.lo, self.hi, self.parity = obs_profile.call(
+            "kv.commit_tokens",
+            _commit_tokens,
             self.lo,
             self.hi,
             self.parity,
@@ -631,7 +659,9 @@ class KVPageArena:
         (payload (P, page_tokens, token_f32) f32, counters (P, 8) np.int32)
         and commits the corrected planes (scrub write-back)."""
         ids = jnp.asarray(page_ids, jnp.int32).reshape(-1)
-        self.lo, self.hi, self.parity, olo, ohi, cnt = _scrub_rows(
+        self.lo, self.hi, self.parity, olo, ohi, cnt = obs_profile.call(
+            "kv.paged_gather_scrub",
+            _scrub_rows,
             self.lo,
             self.hi,
             self.parity,

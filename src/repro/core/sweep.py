@@ -403,7 +403,6 @@ def sweep_codec_schemes(
             total += np.asarray(fn(jax.random.fold_in(key, ci), rates, sigmas, m))
         for i, (p, v) in enumerate(grid):
             st = FaultStats.from_counters(total[i], n_words)
-            cov = st.coverage()
             row_env = {} if env is None else {"environment": env.name}
             rows.append(
                 {
@@ -413,15 +412,7 @@ def sweep_codec_schemes(
                     "overhead": codec.overhead,
                     "platform": p.name,
                     "voltage": float(v),
-                    "words": st.words,
-                    "faulty_words": st.faulty_words,
-                    "faulty_bits": st.faulty_bits,
-                    "corrected": st.corrected,
-                    "detected": st.detected,
-                    "silent": st.silent,
-                    "coverage_correctable": cov["correctable"],
-                    "coverage_detectable": cov["detectable"],
-                    "coverage_silent": cov["silent"],
+                    **st.coverage_row(),
                 }
             )
     return rows
@@ -484,12 +475,7 @@ def main(argv=None) -> None:
         {
             "platform": p.platform,
             "voltage": p.voltage,
-            "words": p.stats.words,
-            "faulty_words": p.stats.faulty_words,
-            "faulty_bits": p.stats.faulty_bits,
-            "corrected": p.stats.corrected,
-            "detected": p.stats.detected,
-            "silent": p.stats.silent,
+            **p.stats.coverage_row(),
             "coverage": p.stats.coverage(),
             "dispatches": dispatch_count(),
         }

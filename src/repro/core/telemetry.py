@@ -86,6 +86,32 @@ class FaultStats:
             "silent": self.silent / n,
         }
 
+    def to_dict(self) -> dict:
+        """Flat JSON-ready counter dict: ``words``, every COUNTER_FIELDS
+        entry, the derived ``faulty_words``, plus ``shard`` when tagged —
+        the one serialization the benchmark/campaign/obs rows share instead
+        of each hand-rolling its own field subset."""
+        out = {"words": self.words}
+        out.update({f: getattr(self, f) for f in COUNTER_FIELDS})
+        out["faulty_words"] = self.faulty_words
+        if self.shard >= 0:
+            out["shard"] = self.shard
+        return out
+
+    def coverage_row(self) -> dict:
+        """The sweep/benchmark row shape: raw counters + the flattened
+        per-outcome coverage fractions (``coverage_<outcome>``)."""
+        cov = self.coverage()
+        return {
+            "words": self.words,
+            "faulty_words": self.faulty_words,
+            "faulty_bits": self.faulty_bits,
+            "corrected": self.corrected,
+            "detected": self.detected,
+            "silent": self.silent,
+            **{f"coverage_{k}": v for k, v in cov.items()},
+        }
+
     @classmethod
     def from_counters(cls, counters, words: int, shard: int = -1) -> "FaultStats":
         """Build stats from the fused kernel's device-reduced counter vector."""
@@ -239,7 +265,23 @@ class ShardFaultStats:
         return self.reduced().total()
 
     def accumulate(self, other: "ShardFaultStats") -> None:
-        while len(self.by_shard) < len(other.by_shard):
-            self.by_shard.append(DomainFaultStats(shard=len(self.by_shard)))
         for s, st in enumerate(other.by_shard):
-            self.by_shard[s].accumulate(st)
+            if s < len(self.by_shard):
+                self.by_shard[s].accumulate(st)
+            else:
+                # Growth path: adopt ``other``'s row outright (a fresh deep
+                # copy via the pure reduction). Seeding an empty row with
+                # shard=row-index and merging would collapse the tag to -1
+                # whenever other's shard ids are not index-aligned (e.g. a
+                # sub-fleet slice carrying shards 4..7).
+                self.by_shard.append(DomainFaultStats.summed([st]))
+
+    @classmethod
+    def summed(cls, stats) -> "ShardFaultStats":
+        """Pure cross-run reduction: sum an iterable of ShardFaultStats
+        into a fresh one, row-aligned by shard index (the accumulate
+        symmetry partner — no input is mutated or aliased)."""
+        out = cls()
+        for s in stats:
+            out.accumulate(s)
+        return out

@@ -43,6 +43,7 @@ from repro.core.faultsim import _check_dtype, _device_chunk_masks
 from repro.distributed import collectives
 from repro.distributed.sharding import reliability_axes, reliability_shards
 from repro.kernels import ops as kops
+from repro.obs import profile as obs_profile
 
 __all__ = [
     "arena_sharding",
@@ -154,7 +155,12 @@ def make_rail_step(
     )
     # counters come back already sliced to the 8 telemetry lanes:
     # kops.inject_scrub_domains drops the lane padding and the spill row
-    return jax.jit(fn)
+    jitted = jax.jit(fn)
+
+    def step(*args):
+        return obs_profile.call("mesh.rail_step", jitted, *args)
+
+    return step
 
 
 @functools.lru_cache(maxsize=None)
@@ -206,7 +212,12 @@ def make_kv_scrub_step(
         out_specs=(spec, spec, spec, spec, spec, spec),
         check_rep=False,
     )
-    return jax.jit(fn)
+    jitted = jax.jit(fn)
+
+    def step(*args):
+        return obs_profile.call("mesh.kv_scrub_step", jitted, *args)
+
+    return step
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,103 @@
+"""Opt-in wall-clock kernel profiling hooks (DESIGN.md §17).
+
+Wall-clock is the one thing the deterministic trace must never contain, so
+profiling rows live here, beside the recorder rather than inside it. A
+``KernelProfiler`` is installed globally (``enable()``); instrumented
+dispatch sites route through :func:`call`, which is a single module-global
+``None`` check when profiling is off — the hot path pays nothing and the
+dispatch result is returned untouched either way.
+
+When profiling is on, each call is bracketed with ``jax.block_until_ready``
+on the dispatch *result* (async dispatch would otherwise attribute device
+time to whoever synchronizes next) and the row is tagged ``interpret`` or
+``compiled`` from the kernel backend actually in force
+(kernels/ops.use_interpret) — the BENCH trajectory story's key column.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+class KernelProfiler:
+    """Aggregating wall-clock rows for named dispatch sites."""
+
+    def __init__(self):
+        self.rows: dict[str, dict] = {}
+
+    def record(self, name: str, ms: float) -> None:
+        row = self.rows.get(name)
+        if row is None:
+            row = self.rows[name] = {
+                "name": name, "calls": 0, "total_ms": 0.0,
+                "min_ms": None, "max_ms": 0.0, "backend": backend_tag(),
+            }
+        row["calls"] += 1
+        row["total_ms"] += ms
+        row["min_ms"] = ms if row["min_ms"] is None else min(row["min_ms"], ms)
+        row["max_ms"] = max(row["max_ms"], ms)
+
+    def to_rows(self) -> list[dict]:
+        """BENCH-shaped rows (sorted by name, mean included)."""
+        return [
+            {**r, "mean_ms": r["total_ms"] / max(r["calls"], 1)}
+            for _, r in sorted(self.rows.items())
+        ]
+
+    def summary_markdown(self) -> str:
+        lines = [
+            "## Kernel profile (wall-clock)", "",
+            "| dispatch | backend | calls | mean ms | min ms | max ms |",
+            "|---|---|---|---|---|---|",
+        ]
+        for r in self.to_rows():
+            lines.append(
+                f"| {r['name']} | {r['backend']} | {r['calls']} "
+                f"| {r['mean_ms']:.3f} | {r['min_ms']:.3f} "
+                f"| {r['max_ms']:.3f} |"
+            )
+        return "\n".join(lines) + "\n"
+
+
+_ACTIVE: KernelProfiler | None = None
+
+
+def backend_tag() -> str:
+    """``interpret`` / ``compiled``: which Pallas lowering is in force."""
+    from repro.kernels import ops as kops
+
+    return "interpret" if kops.use_interpret() else "compiled"
+
+
+def enable(profiler: KernelProfiler | None = None) -> KernelProfiler:
+    """Install (and return) the active profiler."""
+    global _ACTIVE
+    _ACTIVE = profiler or KernelProfiler()
+    return _ACTIVE
+
+
+def disable() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active() -> KernelProfiler | None:
+    return _ACTIVE
+
+
+def call(name: str, fn, *args, **kwargs):
+    """Dispatch ``fn(*args, **kwargs)``, profiled when a profiler is active.
+
+    The off path is one global ``None`` check; the on path blocks on the
+    result so the row measures the dispatch it brackets, not the next sync
+    point downstream.
+    """
+    if _ACTIVE is None:
+        return fn(*args, **kwargs)
+    import jax
+
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    out = jax.block_until_ready(out)
+    _ACTIVE.record(name, (time.perf_counter() - t0) * 1e3)
+    return out

@@ -13,6 +13,7 @@ protocol layers load first (keeps the package safe to import from any entry
 point, including ``repro.serving.scheduler`` itself).
 """
 
+from repro.obs import MetricsRegistry, TraceRecorder
 from repro.serving.scheduler import (
     ContinuousBatchingScheduler,
     MeshServeReport,
@@ -49,6 +50,7 @@ __all__ = [
     "FaultModelConfig",
     "HelpersFactory",
     "MeshServeReport",
+    "MetricsRegistry",
     "PagedHelpers",
     "ProtectionConfig",
     "RailsConfig",
@@ -59,6 +61,7 @@ __all__ = [
     "ServeReport",
     "ServeRequest",
     "ServingEngine",
+    "TraceRecorder",
     "make_paged_helpers",
     "make_prefill_step",
     "make_serve_step",

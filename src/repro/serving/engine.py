@@ -463,11 +463,17 @@ class ServingEngine:
         rel: ReliabilityConfig | None = None,
         max_len: int = 512,
         mesh=None,
+        recorder=None,
     ):
         self.cfg = cfg
         self.rel = rel
         self.max_len = max_len
         self.mesh = mesh
+        # Optional reliability flight recorder (obs.TraceRecorder): every
+        # rail decision, serve-loop event and canary probe lands in one
+        # causally-ordered deterministic trace. None (the default) is the
+        # bit-identical zero-overhead path (DESIGN.md §17).
+        self.recorder = recorder
         # One typed gate replaces the historical scattered inline asserts:
         # every contradictory combination (mesh-sharded reliability included,
         # DESIGN.md §13) raises ReliabilityConfigError before any state is
@@ -584,6 +590,8 @@ class ServingEngine:
                 self.set_rails({d: self.voltage for d in self._store.domains})
             else:
                 self.set_voltage(self.voltage)
+        if recorder is not None and self.controller is not None:
+            self.controller.bind_recorder(recorder)
 
         self._decode = jax.jit(
             lambda p, t, c, pos: lm.decode_step(p, t, cfg, c, pos)
@@ -798,7 +806,10 @@ class ServingEngine:
                 prompts, self.rel.canary_tokens, params=clean
             )
         cur = self.generate(prompts, self.rel.canary_tokens)
-        return campaign.token_divergence(self._canary_ref, cur)
+        div = campaign.token_divergence(self._canary_ref, cur)
+        if self.recorder:
+            self.recorder.emit("canary_probe", divergence=float(div))
+        return div
 
     # -- continuous batching over the paged SECDED KV cache --------------------
     def serve(
@@ -945,6 +956,7 @@ class ServingEngine:
             speculative=speculative,
             draft_params=draft_params,
             draft_cfg=draft_cfg,
+            recorder=self.recorder,
         )
         # Fold the cache telemetry + storage into the engine's books: the kv
         # domain now has real words (power weighting) and real counters.
@@ -1043,6 +1055,7 @@ class ServingEngine:
                 speculative=speculative,
                 draft_params=draft_params,
                 draft_cfg=draft_cfg,
+                recorder=self.recorder,
             )
             reports.append(report)
             self._store.register_domain_words(
@@ -1098,6 +1111,8 @@ class ServingEngine:
         if self.rel.multi_rail:
             return self._autotune_rails(max_rounds)
         for _ in range(max_rounds):
+            if self.recorder:
+                self.recorder.advance(1)  # one autotune round == one clock step
             round_stats = (
                 self._last_scrub if self.rel.mode == "inline" else self._domain_scrub()
             )
@@ -1120,6 +1135,8 @@ class ServingEngine:
         # not from the weight scrub, and must not stall this loop.
         arena_rails = self._store.domains
         for _ in range(max_rounds):
+            if self.recorder:
+                self.recorder.advance(1)
             # Scalar canary score broadcast to every rail: the canary rollout
             # exercises the whole model, so a violation retreats all rails
             # (protect-accuracy semantics; see MultiRailController.update).
@@ -1150,6 +1167,8 @@ class ServingEngine:
         self.set_rails(self.controller.voltages)
         arena_rails = self._store.domains
         for _ in range(max_rounds):
+            if self.recorder:
+                self.recorder.advance(1)
             schedule = self.controller.update(
                 self._last_scrub, divergence=self.canary_divergence()
             )

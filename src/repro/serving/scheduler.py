@@ -75,6 +75,10 @@ class RequestState:
     stats: FaultStats = dataclasses.field(default_factory=FaultStats)
     preemptions: int = 0
     shared_tokens: int = 0  # leading tokens served from trie-shared pages
+    # flight-recorder bookkeeping (step-clock values; -1 = never/not traced)
+    admit_step: int = -1  # clock at FIRST admission (re-admissions keep it)
+    first_token_step: int = -1
+    finish_step: int = -1
 
     @property
     def rid(self) -> int:
@@ -205,6 +209,7 @@ class ContinuousBatchingScheduler:
         geom: KVGeometry,
         arena: KVPageArena | None = None,
         trie: PrefixTrie | None = None,
+        recorder=None,
     ):
         self.waiting = deque(RequestState(r) for r in requests)
         self.lanes: list = [None] * n_lanes
@@ -212,6 +217,8 @@ class ContinuousBatchingScheduler:
         self.geom = geom
         self.arena = arena  # needed to wipe recycled pages before reuse
         self.trie = trie  # prefix-sharing radix tree (None = private pages)
+        self.recorder = recorder  # optional obs.TraceRecorder
+        self.shard = arena.shard if arena is not None else -1
         self.finished: dict = {}
         self.preemptions = 0
         self._admit_counter = 0
@@ -295,6 +302,20 @@ class ContinuousBatchingScheduler:
             st.admit_seq = self._admit_counter
             self._admit_counter += 1
             self.lanes[lane] = st
+            rec = self.recorder
+            if rec:
+                if st.admit_step < 0:
+                    st.admit_step = rec.step
+                rec.emit(
+                    "admit", request_id=st.rid, shard=self.shard, lane=lane,
+                    prompt_len=len(seq), shared_tokens=st.shared_tokens,
+                )
+                rec.metrics.counter("serve.admissions").inc()
+                if shared:
+                    rec.emit(
+                        "prefix_hit", request_id=st.rid, shard=self.shard,
+                        tokens=st.shared_tokens, pages=len(shared),
+                    )
             yield lane, st, seq
 
     def ensure_pages(self, st: RequestState, until: int | None = None) -> bool:
@@ -303,19 +324,31 @@ class ContinuousBatchingScheduler:
         under pressure. False if ``st`` itself had to be preempted (i.e. it
         is the youngest and the arena is full)."""
         until = st.stored if until is None else until
+        added = 0
         while until // self.geom.page_tokens >= len(st.pages):
             page = self._alloc(st.rid)
             if page is not None:
                 st.pages.append(page)
+                added += 1
                 continue
             victim = max(self.running, key=lambda s: s.admit_seq)
             self.preempt(victim)
             if victim is st:
                 return False
+        if added and self.recorder:
+            self.recorder.emit(
+                "page_grow", request_id=st.rid, shard=self.shard,
+                pages_added=added, pages_total=len(st.pages),
+            )
         return True
 
     def preempt(self, st: RequestState) -> None:
         """Recompute-style preemption: drop pages, re-queue at the front."""
+        if self.recorder:
+            self.recorder.emit(
+                "preempt", request_id=st.rid, shard=self.shard, lane=st.lane,
+                pages_freed=len(st.pages), preemptions=st.preemptions + 1,
+            )
         self.alloc.free(st.pages, st.rid)
         self.lanes[st.lane] = None
         st.pages, st.lane, st.admit_seq = [], -1, -1
@@ -326,6 +359,21 @@ class ContinuousBatchingScheduler:
         self.waiting.appendleft(st)
 
     def retire(self, st: RequestState) -> None:
+        rec = self.recorder
+        if rec:
+            st.finish_step = rec.step
+            lat = rec.step - st.admit_step if st.admit_step >= 0 else 0
+            rec.emit(
+                "retire", request_id=st.rid, shard=self.shard,
+                tokens=len(st.tokens), latency_steps=lat,
+                first_token_step=st.first_token_step,
+                preemptions=st.preemptions,
+            )
+            rec.metrics.histogram("request.latency_steps").observe(lat)
+            if st.first_token_step >= 0 and st.admit_step >= 0:
+                rec.metrics.histogram("request.first_token_steps").observe(
+                    st.first_token_step - st.admit_step
+                )
         self.alloc.free(st.pages, st.rid)
         self.lanes[st.lane] = None
         st.pages, st.lane = [], -1
@@ -352,6 +400,7 @@ def serve_stream(
     speculative: int = 0,
     draft_params=None,
     draft_cfg=None,
+    recorder=None,
 ) -> ServeReport:
     """Drive a request stream to completion over the paged cache.
 
@@ -413,10 +462,24 @@ def serve_stream(
 
     init_cache_fn = init_cache_fn or (lambda b: lm.init_cache(cfg, b, max_len))
     alloc = PageAllocator(arena.n_pages)
-    trie = PrefixTrie(alloc, geom.page_tokens) if share_prefix else None
-    sched = ContinuousBatchingScheduler(
-        requests, n_lanes, alloc, geom, arena=arena, trie=trie
+    rec = recorder
+    trie = (
+        PrefixTrie(
+            alloc, geom.page_tokens, recorder=rec, shard=arena.shard
+        )
+        if share_prefix
+        else None
     )
+    sched = ContinuousBatchingScheduler(
+        requests, n_lanes, alloc, geom, arena=arena, trie=trie, recorder=rec
+    )
+    if rec:
+        rec.emit(
+            "serve_begin", shard=arena.shard, n_requests=len(requests),
+            n_lanes=n_lanes, scrub_interval=scrub_interval,
+            share_prefix=bool(share_prefix), speculative=int(speculative),
+            voltage=float(arena.voltage), codec=arena.codec_name,
+        )
     spec_k = int(speculative)
     if spec_k >= 2:
         assert draft_params is not None and draft_cfg is not None, (
@@ -522,6 +585,8 @@ def serve_stream(
                     dcache = helpers["load_lane"](dcache, dcachem, row, lane)
                 if not st.tokens:  # fresh admission: keep the prefill's token
                     st.tokens = [int(tok_host[row])]
+                    if rec and st.first_token_step < 0:
+                        st.first_token_step = rec.step
                 if st.done:  # budget met by the prefill token alone
                     sched.retire(st)
                     continue
@@ -585,13 +650,25 @@ def serve_stream(
             n_host = np.asarray(n_emit)
             steps += 1
             spec_dispatches += 1
-            adv = 0
+            adv = max((int(n_host[i]) for i in active), default=0)
+            if rec:
+                # clock first so same-dispatch retires see the post-block step
+                rec.advance(max(adv, 1))
+                rec.emit(
+                    "spec_block", shard=arena.shard, k=kk,
+                    lanes=len(active),
+                    emitted=int(sum(n_host[i] for i in active)),
+                    slots=kk * len(active),
+                )
+                rec.metrics.counter("spec.slots").inc(kk * len(active))
+                rec.metrics.counter("spec.emitted").inc(
+                    int(sum(n_host[i] for i in active))
+                )
             for i in active:
                 st = sched.lanes[i]
                 n = int(n_host[i])
                 st.tokens.extend(int(t) for t in greedy_host[i, :n])
                 spec_emitted += n
-                adv = max(adv, n)
                 cur_tok[i] = st.tokens[-1]
                 pos_v[i] += n
                 if st.done:
@@ -612,6 +689,8 @@ def serve_stream(
             toks_host = np.asarray(toks)
             steps += k
             since_scrub += k
+            if rec:
+                rec.advance(k)  # the deterministic clock IS decode progress
             for i in active:
                 st = sched.lanes[i]
                 st.tokens.extend(int(t) for t in toks_host[:, i])
@@ -713,6 +792,11 @@ def serve_stream(
                 finally:
                     kv_controller.escalation = saved_policy
                 change = kv_controller.pop_codec_change()
+                if change and rec:
+                    rec.emit(
+                        "kv_codec_change", shard=arena.shard, domain="kv",
+                        codec=change,
+                    )
                 if change:
                     # Escalate right after the scrub above flushed every
                     # correctable fault: the arena re-encodes under the
@@ -734,11 +818,39 @@ def serve_stream(
                         # fresh pages, re-prefilled KV), then re-protect.
                         trie.evict_pages(err.pages)
                         bad = set(err.pages)
+                        preempted = 0
                         for st in list(sched.running):
                             if bad & set(st.pages):
                                 sched.preempt(st)
+                                preempted += 1
                         arena.change_codec(change)
+                        if rec:
+                            rec.emit(
+                                "shared_ded_recovery", shard=arena.shard,
+                                domain="kv", pages=len(err.pages),
+                                preempted=preempted,
+                            )
                     helpers = helpers_factory(change)
+            if rec:
+                rec.emit(
+                    "kv_scrub", shard=arena.shard, domain="kv",
+                    interval=len(kv_voltages), voltage=float(arena.voltage),
+                    codec=arena.codec_name, corrected=physical.corrected,
+                    detected=physical.detected, silent=physical.silent,
+                    words=physical.words,
+                )
+                m = rec.metrics
+                lbl = {"shard": arena.shard} if arena.shard >= 0 else {}
+                m.observe_fault_stats("kv.scrub", physical, **lbl)
+                for gname, val in (
+                    ("kv.pages_free", sched.alloc.free_pages),
+                    ("sched.queue_depth", len(sched.waiting)),
+                    ("sched.lanes_active", len(sched.running)),
+                ):
+                    m.gauge(gname, **lbl).set(val)
+                    rec.emit(
+                        "gauge", shard=arena.shard, name=gname, value=val
+                    )
             kv_voltages.append(arena.voltage)
 
     if trie is not None:
@@ -750,6 +862,17 @@ def serve_stream(
     outputs = {
         rid: np.asarray(st.tokens, np.int32) for rid, st in sched.finished.items()
     }
+    if rec:
+        rec.emit(
+            "serve_end", shard=arena.shard, steps=steps,
+            preemptions=sched.preemptions, finished=len(outputs),
+        )
+        lbl = {"shard": arena.shard} if arena.shard >= 0 else {}
+        rec.metrics.counter("serve.steps", **lbl).inc(steps)
+        rec.metrics.counter("serve.preemptions", **lbl).inc(sched.preemptions)
+        rec.metrics.counter("serve.prefix_hit_tokens", **lbl).inc(
+            prefix_hit_tokens
+        )
     return ServeReport(
         outputs=outputs,
         request_stats={rid: st.stats for rid, st in sched.finished.items()},

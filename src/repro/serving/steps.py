@@ -26,6 +26,24 @@ import jax.numpy as jnp
 from repro.core.kvpages import KVGeometry
 from repro.models import lm
 from repro.models.base import ModelConfig
+from repro.obs import profile as obs_profile
+
+
+def _profiled(name: str, fn):
+    """Route a jit'd dispatch through the opt-in wall-clock profiler.
+
+    When no profiler is enabled this is a single ``is None`` check on top
+    of the call (obs/profile.call) — the deterministic event log never
+    sees these timings, so traces stay bit-reproducible either way.
+    """
+    if fn is None:
+        return None
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        return obs_profile.call(name, fn, *args, **kwargs)
+
+    return wrapped
 
 
 def make_prefill_step(cfg: ModelConfig):
@@ -304,17 +322,24 @@ def make_paged_helpers(
     draft model's decode runs inside the same scanned dispatch)."""
     spec = None
     if draft_cfg is not None:
-        spec = jax.jit(
-            functools.partial(
-                _spec_multistep, cfg=cfg, dcfg=draft_cfg, geom=geom, codec=codec
+        spec = _profiled(
+            "decode.spec_multistep",
+            jax.jit(
+                functools.partial(
+                    _spec_multistep,
+                    cfg=cfg, dcfg=draft_cfg, geom=geom, codec=codec,
+                ),
+                static_argnames=("k", "scratch_page"),
             ),
-            static_argnames=("k", "scratch_page"),
         )
     return PagedHelpers(
         codec=codec,
-        prefill=jax.jit(make_prefill_step(cfg)),
-        multistep=jax.jit(
-            functools.partial(_multistep, cfg=cfg, geom=geom, codec=codec)
+        prefill=_profiled("decode.prefill", jax.jit(make_prefill_step(cfg))),
+        multistep=_profiled(
+            "decode.multistep",
+            jax.jit(
+                functools.partial(_multistep, cfg=cfg, geom=geom, codec=codec)
+            ),
         ),
         extract_range=jax.jit(
             functools.partial(_extract_range, geom=geom), static_argnames=("s0",)
@@ -325,7 +350,10 @@ def make_paged_helpers(
         ),
         load_lane=jax.jit(_load_lane),
         refresh=jax.jit(functools.partial(_refresh_cache, geom=geom)),
-        chunk=jax.jit(functools.partial(_chunk_prefill, cfg=cfg)),
+        chunk=_profiled(
+            "decode.chunk_prefill",
+            jax.jit(functools.partial(_chunk_prefill, cfg=cfg)),
+        ),
         spec_multistep=spec,
     )
 
