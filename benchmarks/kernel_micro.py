@@ -1,6 +1,9 @@
-"""Pallas kernel micro-benchmarks (interpret mode on CPU) + roofline model.
+"""Pallas kernel micro-benchmarks + roofline model.
 
-Wall-times here are CPU-interpret numbers (NOT TPU performance); the derived
+Every row is tagged with the kernel backend in force (``compiled`` where the
+platform lowers Pallas for real — TPU Mosaic / GPU Triton — ``interpret``
+elsewhere; kernels/backend.py). On a CPU runner the wall-times are
+interpret-lane numbers (NOT TPU performance); the derived
 column reports the *kernel roofline model* for TPU v5e — the quantity used in
 EXPERIMENTS.md §Perf to compare the fused ECC-matmul read path against the
 naive decode-then-matmul baseline:
@@ -16,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_line, emit, timed
+from repro.kernels import backend as kbackend
 from repro.kernels import ops, ref
 
 HBM_BW = 819e9
@@ -131,6 +135,32 @@ def run() -> list[dict]:
                 "fused_over_pair": us_f / us_p,
             }
         )
+    # compiled-vs-interpret ratio on the flagship fused kernel (DESIGN.md
+    # §18): `lane` is whatever backend.resolve() picks (compiled where a
+    # Pallas lowering exists, interpret elsewhere), `interp` is forced
+    # interpret. On an interpret-only host the two lanes are the same code
+    # path and the ratio sits at ~1.0 — the trajectory row exists so a host
+    # WITH a compiled lowering fails loudly if compiled ever regresses past
+    # interpret (check_regression --only kernel).
+
+    def lane():
+        return jax.block_until_ready(
+            ops.inject_scrub(lo, hi, par, mlo, mhi, mpar)[3]
+        )
+
+    def interp():
+        return jax.block_until_ready(
+            ops.inject_scrub(lo, hi, par, mlo, mhi, mpar, interpret=True)[3]
+        )
+
+    us_l, us_i = _interleaved_min(lane, interp)
+    rows.append(
+        {
+            "kernel": "backend_ratio", "words": n_words,
+            "us": us_l, "us_interpret": us_i,
+            "compiled_over_interpret": us_l / us_i,
+        }
+    )
     # fused vs naive ecc_matmul
     for (m, k, n) in ((128, 1024, 512), (256, 2048, 1024)):
         x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
@@ -150,6 +180,8 @@ def run() -> list[dict]:
             }
         )
     rows.append(voltage_sweep())
+    for r in rows:  # every row carries the lowering it was measured under
+        r.setdefault("backend", kbackend.tag())
     emit(rows, "kernel_micro")
     return rows
 
@@ -172,7 +204,15 @@ def main():
                 csv_line(
                     f"kernel/inject_scrub_{r['words']}w", r["us"],
                     f"fused_over_pair={r['fused_over_pair']:.2f};"
-                    f"pair_us={r['us_pair']:.1f}",
+                    f"pair_us={r['us_pair']:.1f};backend={r['backend']}",
+                )
+            )
+        elif r["kernel"] == "backend_ratio":
+            print(
+                csv_line(
+                    f"kernel/backend_ratio_{r['words']}w", r["us"],
+                    f"compiled_over_interpret={r['compiled_over_interpret']:.2f};"
+                    f"backend={r['backend']}",
                 )
             )
         elif r["kernel"] == "ecc_matmul":
@@ -185,7 +225,10 @@ def main():
                 )
             )
         else:
-            print(csv_line(f"kernel/{r['kernel']}_{r['words']}w", r["us"], "interpret"))
+            print(csv_line(
+                f"kernel/{r['kernel']}_{r['words']}w", r["us"],
+                f"backend={r['backend']}",
+            ))
 
 
 if __name__ == "__main__":

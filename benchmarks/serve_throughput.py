@@ -45,6 +45,11 @@ from benchmarks.common import csv_line, emit
 N_LANES = 4
 MAX_LEN = 72
 SCRUB_INTERVAL = 16
+# the overlap experiment scrubs on a tight cadence so the scrub launch is a
+# real fraction of the loop (at 16 it is amortized into the noise): the
+# serialized path blocks on counters inside every interval, the overlapped
+# path (DESIGN.md #18) defers the harvest one interval and lets decode run
+OVERLAP_SCRUB_INTERVAL = 4
 # one long generation per wave of four: budgets 48 / 5, prompts 8 tokens
 STREAM = [(8, 48 if i % 4 == 0 else 5) for i in range(16)]
 # prefix-sharing stream: a 48-token common prompt prefix (6 full pages at
@@ -115,15 +120,23 @@ def run(samples: int = 3) -> list[dict]:
         scrub_interval=SCRUB_INTERVAL,
         share_prefix=on,
     )
+    run_overlap = lambda on: eng.serve(
+        reqs,
+        n_lanes=N_LANES,
+        scrub_interval=OVERLAP_SCRUB_INTERVAL,
+        scrub_overlap=on,
+    )
 
     from repro.obs import TraceRecorder
 
     _run_fixed(eng, reqs)  # warmup / compile
     rep = run_cont()
     run_shared(False), run_shared(True)  # warm both trie states' shapes
+    run_overlap(False), run_overlap(True)  # warm the tight-cadence shapes
     tf, tc = [], []
     tp, ts = [], []
     tt, n_events = [], 0
+    tser, tovl = [], []
     for _ in range(samples):
         t0 = time.perf_counter()
         _run_fixed(eng, reqs)
@@ -145,6 +158,12 @@ def run(samples: int = 3) -> list[dict]:
         tt.append(time.perf_counter() - t0)
         n_events = len(eng.recorder.events)
         eng.recorder = None
+        t0 = time.perf_counter()
+        run_overlap(False)
+        tser.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_overlap(True)
+        tovl.append(time.perf_counter() - t0)
 
     tps_fixed = useful_tokens / min(tf)
     tps_cont = useful_tokens / min(tc)
@@ -152,6 +171,8 @@ def run(samples: int = 3) -> list[dict]:
     shared_tokens = sum(n for _, n in shared_reqs)
     tps_private = shared_tokens / min(tp)
     tps_shared = shared_tokens / min(ts)
+    tps_serialized = useful_tokens / min(tser)
+    tps_overlapped = useful_tokens / min(tovl)
     rows = [
         {
             "kernel": "serve_throughput",
@@ -191,6 +212,20 @@ def run(samples: int = 3) -> list[dict]:
             "tokens_s_traced": tps_traced,
             "traced_over_untraced": tps_traced / tps_cont,
         },
+        {
+            # async scrub off the decode critical path (DESIGN.md #18):
+            # identical stream and cadence, scrub_overlap forced off vs on.
+            # Gated absolutely in check_regression: overlapping a launch the
+            # serialized path blocks on must never cost throughput.
+            "kernel": "serve_scrub_overlap",
+            "n_requests": len(reqs),
+            "n_lanes": N_LANES,
+            "useful_tokens": useful_tokens,
+            "scrub_interval": OVERLAP_SCRUB_INTERVAL,
+            "tokens_s_serialized": tps_serialized,
+            "tokens_s_overlapped": tps_overlapped,
+            "overlapped_over_serialized": tps_overlapped / tps_serialized,
+        },
     ]
     emit(rows, "serve_throughput")
     return rows
@@ -228,6 +263,16 @@ def main():
             f"traced_over_untraced={t['traced_over_untraced']:.2f};"
             f"tokens_s_traced={t['tokens_s_traced']:.1f};"
             f"trace_events={t['trace_events']}",
+        )
+    )
+    o = rows[3]
+    print(
+        csv_line(
+            f"serve/scrub_overlap_{o['n_requests']}req_si{o['scrub_interval']}",
+            1e6 / o["tokens_s_overlapped"],
+            f"overlapped_over_serialized={o['overlapped_over_serialized']:.2f};"
+            f"tokens_s_overlapped={o['tokens_s_overlapped']:.1f};"
+            f"tokens_s_serialized={o['tokens_s_serialized']:.1f}",
         )
     )
 

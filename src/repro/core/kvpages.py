@@ -654,10 +654,13 @@ class KVPageArena:
             codec=self.codec_name,
         )
 
-    def scrub_pages(self, page_ids):
-        """Scrub-on-read of ``page_ids`` (any shape, flattened): returns
-        (payload (P, page_tokens, token_f32) f32, counters (P, 8) np.int32)
-        and commits the corrected planes (scrub write-back)."""
+    def scrub_pages_async(self, page_ids):
+        """Asynchronously dispatched scrub-on-read of ``page_ids`` (any
+        shape, flattened): commits the corrected planes (scrub write-back)
+        and returns (payload (P, page_tokens, token_f32) f32 device array,
+        counters (P, 8) int32 DEVICE array) with no host sync — the caller
+        defers the counter harvest (``np.asarray``) past whatever decode
+        work it wants the scrub to overlap (DESIGN.md §18)."""
         ids = jnp.asarray(page_ids, jnp.int32).reshape(-1)
         self.lo, self.hi, self.parity, olo, ohi, cnt = obs_profile.call(
             "kv.paged_gather_scrub",
@@ -674,4 +677,11 @@ class KVPageArena:
             olo.reshape(-1, self.geom.token_words),
             ohi.reshape(-1, self.geom.token_words),
         ).reshape(ids.shape[0], self.geom.page_tokens, self.geom.token_f32)
+        return payload, cnt
+
+    def scrub_pages(self, page_ids):
+        """Scrub-on-read of ``page_ids`` (any shape, flattened): returns
+        (payload (P, page_tokens, token_f32) f32, counters (P, 8) np.int32)
+        and commits the corrected planes (scrub write-back)."""
+        payload, cnt = self.scrub_pages_async(page_ids)
         return payload, np.asarray(cnt)

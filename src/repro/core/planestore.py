@@ -23,11 +23,23 @@ uniform-SECDED default is exactly one group whose planes alias the master
 arrays, so the historical single-launch behaviour (and its bit patterns) is
 unchanged. ``set_domain_codec`` re-encodes a domain under a stronger code at
 runtime — the controller escalation path.
+
+Async dispatch + double buffering (DESIGN.md §18): every voltage step also
+has a ``*_async`` form that dispatches the fused launches and returns
+immediately with a ``PendingFaultStats`` — the ``np.asarray(counters)``
+host sync (the only serialization point) is deferred to ``harvest()``, so
+decode work dispatched after the step overlaps the scrub. On compiled
+backends each codec group's planes rotate through a depth-2 buffer ring and
+the launch donates the two-steps-stale faulty planes back to XLA
+(``donate_argnums``), making the steady-state soak allocation-free; the
+interpret/CPU lane skips donation (unsupported there) but keeps the same
+dispatch order, so both lanes are bit-identical to the serial path.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import zlib
 from typing import Any
 
@@ -48,6 +60,73 @@ def leaf_seed(base_seed: int, key: str) -> int:
     """Per-leaf fault-field seed; must stay stable across refactors — the
     fault pattern is a property of (silicon sample, rail), i.e. (seed, leaf)."""
     return (base_seed * 0x9E3779B1 + zlib.crc32(key.encode())) & 0x7FFFFFFF
+
+
+@dataclasses.dataclass
+class PendingFaultStats:
+    """Deferred telemetry from an asynchronously dispatched voltage step.
+
+    Holds the per-group device counter blocks of a ``set_voltage_async`` /
+    ``set_rails_async`` / ``set_rails_sharded_async`` dispatch. The planes
+    are already usable (JAX async dispatch); ``harvest()`` performs the one
+    host sync the synchronous method would have done inline and returns
+    exactly the stats object it would have returned — same counters,
+    same reduction, same denominators (tested bit-identical).
+    """
+
+    counters: list
+    finish: Any  # callable(list[np.ndarray]) -> FaultStats-family object
+
+    def harvest(self):
+        return self.finish([np.asarray(c) for c in self.counters])
+
+
+# Double-buffer donation (DESIGN.md §18): the stale faulty planes handed
+# back to XLA are matched to the step's outputs by shape/dtype
+# (input-output aliasing), so on these platforms the steady-state soak
+# rotates two plane buffers instead of allocating a third every step. CPU
+# and other interpret-lane platforms don't honor donation — they take the
+# plain launch with identical math.
+_DONATE_PLATFORMS = ("gpu", "cuda", "rocm", "tpu")
+
+
+def _donation_supported() -> bool:
+    return jax.default_backend() in _DONATE_PLATFORMS
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codec", "reencode"),
+    donate_argnums=(6, 7, 8),
+    keep_unused=True,
+)
+def _fused_step_donated(
+    lo, hi, check, mlo, mhi, mpar, stale_lo, stale_hi, stale_check,
+    *, codec, reencode,
+):
+    # The stale planes contribute storage, not values: the kernel math is
+    # exactly kops.inject_scrub.
+    del stale_lo, stale_hi, stale_check
+    return kops.inject_scrub(
+        lo, hi, check, mlo, mhi, mpar, codec=codec, reencode=reencode
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codec", "reencode", "n_domains"),
+    donate_argnums=(7, 8, 9),
+    keep_unused=True,
+)
+def _fused_domains_step_donated(
+    lo, hi, check, mlo, mhi, mpar, dom_ids, stale_lo, stale_hi, stale_check,
+    *, n_domains, codec, reencode,
+):
+    del stale_lo, stale_hi, stale_check
+    return kops.inject_scrub_domains(
+        lo, hi, check, mlo, mhi, mpar, dom_ids, n_domains,
+        codec=codec, reencode=reencode,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -273,6 +352,9 @@ class PlaneStore:
                 )
             )
         self._groups = groups
+        # Depth-2 plane buffer ring per codec group (§18): regrouping (codec
+        # escalation) changes plane geometry, so stale buffers are dropped.
+        self._plane_hist: dict[str, list] = {}
         if self.mesh is not None:
             self._build_sharded_groups()
         # Per-leaf host oracle fields, keyed like the historical per-leaf
@@ -390,16 +472,12 @@ class PlaneStore:
         assert len(schedule) == n, (len(schedule), n)
         return schedule
 
-    def set_rails_sharded(self, schedule, ecc: bool = True):
-        """Per-(shard, domain) voltage step across the whole mesh.
-
-        One shard_map'd fused inject+scrub launch per codec group: every
-        shard injects its own fault population at its own rails and tallies
-        its own counter rows; only the (n_shards, n_domains, 8) counter
-        block (plus its psum) crosses to host. Returns
-        (faulty_leaves, ShardFaultStats). A uniform schedule on a 1-shard
-        mesh is bit-identical to ``set_rails`` with device masks.
-        """
+    def set_rails_sharded_async(self, schedule, ecc: bool = True):
+        """Asynchronously dispatched ``set_rails_sharded``: the collective-
+        free shard_map'd launches (meshrel.make_rail_step) go out per codec
+        group and the (n_shards, n_domains, 8) per-shard counter blocks stay
+        on device until ``pending.harvest()`` — a soak of N intervals pays
+        one counter sync instead of N (DESIGN.md §18)."""
         from repro.core.telemetry import ShardFaultStats
         from repro.distributed import meshrel
 
@@ -407,9 +485,10 @@ class PlaneStore:
         schedule = self._normalize_schedule(schedule)
         n_shards = self.n_shards
         if self.n_words == 0:
-            return list(self._leaves), ShardFaultStats(
+            empty = ShardFaultStats(
                 [DomainFaultStats(shard=s) for s in range(n_shards)]
             )
+            return list(self._leaves), PendingFaultStats([], lambda _c: empty)
         profiles = {d: self.domain_profile(d) for d in self.domains}
         sigma = next(iter({p.row_sigma for p in profiles.values()}))
         # One scrub interval per rail step: the aging clock. At env=None or
@@ -430,8 +509,7 @@ class PlaneStore:
         rates = meshrel.schedule_rates(
             schedule, self.domains, profiles, n_shards, shard_multipliers=mult
         )
-        total = np.zeros((n_shards, len(self.domains), 8), np.int64)
-        planes = {}
+        counters, planes = [], {}
         host = jax.devices()[0]
         for g in self._groups:
             sg = g.sharded
@@ -440,20 +518,40 @@ class PlaneStore:
                 sg.seed, float(sigma), reencode=not ecc,
                 burst=self._burst,
             )
-            flo, fhi, fpar, per_shard, _agg = step(
+            flo, fhi, fpar, per_shard = step(
                 sg.lo, sg.hi, sg.check, sg.dom, jnp.asarray(rates)
             )
-            total += np.asarray(per_shard)
+            counters.append(per_shard)
             # The CPU engine's decode path is single-device, so the faulty
             # planes are gathered once per rail step; a TP mesh would keep
             # them sharded in place (the weights are consumed sharded).
             planes[g.name] = tuple(
                 jax.device_put(x, host) for x in (flo, fhi, fpar)
             )
-        stats = ShardFaultStats.from_counter_blocks(
-            total, self.domains, self.shard_words_by_domain()
-        )
-        return self._slice_leaves(planes), stats
+
+        def finish(host_counters):
+            total = np.zeros((n_shards, len(self.domains), 8), np.int64)
+            for c in host_counters:
+                total += c
+            return ShardFaultStats.from_counter_blocks(
+                total, self.domains, self.shard_words_by_domain()
+            )
+
+        return self._slice_leaves(planes), PendingFaultStats(counters, finish)
+
+    def set_rails_sharded(self, schedule, ecc: bool = True):
+        """Per-(shard, domain) voltage step across the whole mesh.
+
+        One collective-free shard_map'd fused inject+scrub launch per codec
+        group: every shard injects its own fault population at its own rails
+        and tallies its own counter rows; only the (n_shards, n_domains, 8)
+        counter block crosses to host (any fleet aggregate is the caller's
+        one-per-soak ``meshrel.fold_counters``). Returns
+        (faulty_leaves, ShardFaultStats). A uniform schedule on a 1-shard
+        mesh is bit-identical to ``set_rails`` with device masks.
+        """
+        leaves, pending = self.set_rails_sharded_async(schedule, ecc=ecc)
+        return leaves, pending.harvest()
 
     def set_domain_codec(self, domain: str, codec_name: str) -> None:
         """Re-protect ``domain`` under another registered code (the
@@ -575,6 +673,84 @@ class PlaneStore:
         return self._group_masks(self._groups[0], v)
 
     # -- the batched voltage step --------------------------------------------
+    def _stale_planes(self, name: str):
+        """Pop the two-steps-old faulty planes for donation (None until the
+        ring has depth 2, or off compiled backends)."""
+        if not _donation_supported():
+            return None
+        hist = self._plane_hist.setdefault(name, [])
+        return hist.pop(0) if len(hist) >= 2 else None
+
+    def _retire_planes(self, name: str, planes) -> None:
+        hist = self._plane_hist.setdefault(name, [])
+        hist.append(planes)
+        del hist[:-2]
+
+    def _fused_group_step(self, g: _CodecGroup, mlo, mhi, mpar, *,
+                          reencode: bool, domains: bool):
+        """One fused inject+scrub launch for a codec group, donating the
+        stale buffer ring slot on compiled backends (§18)."""
+        stale = self._stale_planes(g.name)
+        if domains:
+            if stale is not None:
+                out = _fused_domains_step_donated(
+                    g.lo, g.hi, g.check, mlo, mhi, mpar, g.dom_ids, *stale,
+                    n_domains=len(self.domains), codec=g.name,
+                    reencode=reencode,
+                )
+            else:
+                out = kops.inject_scrub_domains(
+                    g.lo, g.hi, g.check, mlo, mhi, mpar,
+                    g.dom_ids, len(self.domains), codec=g.name,
+                    reencode=reencode,
+                )
+        elif stale is not None:
+            out = _fused_step_donated(
+                g.lo, g.hi, g.check, mlo, mhi, mpar, *stale,
+                codec=g.name, reencode=reencode,
+            )
+        else:
+            out = kops.inject_scrub(
+                g.lo, g.hi, g.check, mlo, mhi, mpar,
+                codec=g.name, reencode=reencode,
+            )
+        self._retire_planes(g.name, out[:3])
+        return out
+
+    def set_voltage_async(self, v: float, ecc: bool = True):
+        """Asynchronously dispatched ``set_voltage``: the fused launches go
+        out, nothing syncs to host. Returns (faulty_leaves,
+        PendingFaultStats) immediately — the leaves are usable right away
+        (async dispatch) and ``pending.harvest()`` is the one deferred
+        counter sync, so decode work dispatched in between overlaps the
+        scrub instead of serializing behind it (DESIGN.md §18).
+
+        Donation contract: on compiled backends the launch donates the
+        group's two-steps-stale faulty planes; callers must not hold plane
+        references across two or more voltage steps.
+        """
+        assert self.mesh is None, "mesh-sharded stores step via set_rails_sharded"
+        if self.n_words == 0:
+            return list(self._leaves), PendingFaultStats(
+                [], lambda _c: FaultStats()
+            )
+        counters, planes = [], {}
+        for g in self._groups:
+            mlo, mhi, mpar = self._group_masks(g, v)
+            flo, fhi, fpar, cnt = self._fused_group_step(
+                g, mlo, mhi, mpar, reencode=not ecc, domains=False
+            )
+            counters.append(cnt)
+            planes[g.name] = (flo, fhi, fpar)
+
+        def finish(host_counters, n_words=self.n_words):
+            total = np.zeros(8, np.int64)
+            for c in host_counters:
+                total += c
+            return FaultStats.from_counters(total, words=n_words)
+
+        return self._slice_leaves(planes), PendingFaultStats(counters, finish)
+
     def set_voltage(self, v: float, ecc: bool = True):
         """One fused inject+scrub launch per codec group for the whole store.
 
@@ -582,21 +758,37 @@ class PlaneStore:
         EccWeight leaves with lo/hi/parity replaced by arena slices at rail
         voltage ``v`` (scale/k/n/fuse untouched).
         """
+        leaves, pending = self.set_voltage_async(v, ecc=ecc)
+        return leaves, pending.harvest()
+
+    def set_rails_async(self, volts: dict, ecc: bool = True):
+        """Asynchronously dispatched ``set_rails`` (same deferred-harvest
+        and donation contract as ``set_voltage_async``)."""
         assert self.mesh is None, "mesh-sharded stores step via set_rails_sharded"
+        missing = set(self.domains) - set(volts)
+        assert not missing, f"rails missing for domains: {sorted(missing)}"
         if self.n_words == 0:
-            return list(self._leaves), FaultStats()
-        total = np.zeros(8, np.int64)
-        planes = {}
-        for g in self._groups:
-            mlo, mhi, mpar = self._group_masks(g, v)
-            flo, fhi, fpar, counters = kops.inject_scrub(
-                g.lo, g.hi, g.check, mlo, mhi, mpar,
-                codec=g.name, reencode=not ecc,
+            return list(self._leaves), PendingFaultStats(
+                [], lambda _c: DomainFaultStats()
             )
-            total += np.asarray(counters)
+        counters, planes = [], {}
+        for g in self._groups:
+            mlo, mhi, mpar = self._group_masks(g, dict(volts))
+            flo, fhi, fpar, cnt = self._fused_group_step(
+                g, mlo, mhi, mpar, reencode=not ecc, domains=True
+            )
+            counters.append(cnt)
             planes[g.name] = (flo, fhi, fpar)
-        stats = FaultStats.from_counters(total, words=self.n_words)
-        return self._slice_leaves(planes), stats
+
+        def finish(host_counters):
+            total = np.zeros((len(self.domains), 8), np.int64)
+            for c in host_counters:
+                total += c
+            return FaultStats.from_counter_matrix(
+                total, self.domains, self.words_by_domain()
+            )
+
+        return self._slice_leaves(planes), PendingFaultStats(counters, finish)
 
     def set_rails(self, volts: dict, ecc: bool = True):
         """One fused inject+scrub launch per codec group with a separate rail
@@ -607,25 +799,8 @@ class PlaneStore:
         crosses to host. A uniform schedule is bit-identical to
         ``set_voltage`` (same fields/streams, same kernel math; tested).
         """
-        assert self.mesh is None, "mesh-sharded stores step via set_rails_sharded"
-        missing = set(self.domains) - set(volts)
-        assert not missing, f"rails missing for domains: {sorted(missing)}"
-        if self.n_words == 0:
-            return list(self._leaves), DomainFaultStats()
-        total = np.zeros((len(self.domains), 8), np.int64)
-        planes = {}
-        for g in self._groups:
-            mlo, mhi, mpar = self._group_masks(g, dict(volts))
-            flo, fhi, fpar, counters = kops.inject_scrub_domains(
-                g.lo, g.hi, g.check, mlo, mhi, mpar,
-                g.dom_ids, len(self.domains), codec=g.name, reencode=not ecc,
-            )
-            total += np.asarray(counters)
-            planes[g.name] = (flo, fhi, fpar)
-        stats = FaultStats.from_counter_matrix(
-            total, self.domains, self.words_by_domain()
-        )
-        return self._slice_leaves(planes), stats
+        leaves, pending = self.set_rails_async(volts, ecc=ecc)
+        return leaves, pending.harvest()
 
     def _slice_leaves(self, planes: dict):
         """Reassemble per-leaf EccWeight views from per-group faulty planes."""

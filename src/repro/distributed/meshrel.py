@@ -15,16 +15,23 @@ measures per-board V_min spread), so this module makes the layer mesh-native:
     with ``collectives.shard_key`` (``jax.lax.axis_index`` folded into the
     PRNG key), so shards draw independent fault populations — shard 0 keeps
     the unsharded key, the bit-identity anchor for the 1-device mesh;
-  * per-shard (n_shards, n_domains, 8) counter blocks come back alongside a
-    ``collectives.psum_counters`` aggregate, so both rail policies are fed:
-    `uniform` (one schedule, worst-shard canary via the psum view) and
-    `per_shard` (each shard walks its own V_min).
+  * per-shard (n_shards, n_domains, 8) counter blocks come back with NO
+    collective inside the step: the per-interval scrub is collective-free,
+    and the single cross-shard counter reduction (``fold_counters``, or
+    ``make_rail_step(..., with_psum=True)`` for the historical in-step
+    ``collectives.psum_counters``) is hoisted out so a soak of N intervals
+    pays one reduction instead of N. Both rail policies stay fed: `uniform`
+    (one schedule, worst-shard canary via the folded view) and `per_shard`
+    (each shard walks its own V_min).
 
-Collective traffic per rail step: one counter psum of n_domains x 128 int32
-lanes — independent of arena size. The plane data itself never crosses
-shards (each chip scrubs its own words); the CPU serving engine additionally
-gathers the faulty planes to one device because its decode path is
-single-device (a real TP mesh would consume them sharded in place).
+Collective traffic per rail *soak*: one counter reduction of
+n_domains x 128 int32 lanes — independent of arena size AND of the number
+of intervals in the soak (this is what fixed the d8-below-d4 words/sec dip
+in BENCH_mesh.json: at 8 forced host devices the per-interval psum dispatch
+dominated the tiny per-shard scrub slices). The plane data itself never
+crosses shards (each chip scrubs its own words); the CPU serving engine
+additionally gathers the faulty planes to one device because its decode
+path is single-device (a real TP mesh would consume them sharded in place).
 """
 
 from __future__ import annotations
@@ -47,6 +54,7 @@ from repro.obs import profile as obs_profile
 
 __all__ = [
     "arena_sharding",
+    "fold_counters",
     "make_kv_scrub_step",
     "make_rail_step",
     "pad_to_shards",
@@ -54,6 +62,15 @@ __all__ = [
     "reliability_shards",
     "schedule_rates",
 ]
+
+
+@jax.jit
+def fold_counters(per_shard):
+    """The hoisted once-per-soak counter reduction: sum an
+    (n_shards, ...) per-shard counter block over the shard axis on device.
+    Replaces the per-interval in-step psum — call it once after a soak (or
+    whenever a worst-shard/fleet view is actually needed), not per step."""
+    return jnp.sum(per_shard, axis=0)
 
 
 def _axes_spec(axes) -> P:
@@ -107,20 +124,28 @@ def make_rail_step(
     reencode: bool = False,
     chunk_words: int = 1 << 18,
     burst=None,
+    with_psum: bool = False,
 ):
     """Build the shard_map'd fused inject+scrub step for one codec group.
 
     Returns a jitted callable
         fn(lo, hi, check, dom, rates) ->
             (faulty_lo, faulty_hi, faulty_check,
-             per_shard_counters (n_shards, n_domains, 8),
-             psum_counters (n_domains, 8))
+             per_shard_counters (n_shards, n_domains, 8))
     where the planes are flat (n_shards * local_words,) arrays sharded over
     the mesh's reliability axes, ``dom`` the per-word domain index (spill
     index ``n_domains`` for pad words), and ``rates`` an
     (n_shards, n_domains + 1) per-(shard, domain) fault-rate table (spill
     column 0.0). Every shard draws its masks from its own stream
-    (collectives.shard_key); the counter psum is the step's only collective.
+    (collectives.shard_key).
+
+    The step itself is collective-free: the per-shard counter block comes
+    back sharded and any cross-shard view is the caller's one-per-soak
+    ``fold_counters`` call. ``with_psum=True`` restores the historical
+    in-step ``collectives.psum_counters`` aggregate as a fifth output
+    (``(n_domains, 8)`` replicated) for callers that genuinely need the
+    fleet view every interval.
+
     ``burst`` (a hashable scenario.BurstProfile, static under the cache)
     turns the per-shard draws into correlated multi-bit upsets; environment
     flux and per-shard aging drift arrive through the rate table itself
@@ -143,14 +168,17 @@ def make_rail_step(
             lo, hi, check, mlo, mhi, mpar, dom, n_domains,
             codec=codec, reencode=reencode,
         )
-        agg = collectives.psum_counters(cnt, axes)
-        return flo, fhi, fpar, cnt[None], agg
+        if with_psum:
+            agg = collectives.psum_counters(cnt, axes)
+            return flo, fhi, fpar, cnt[None], agg
+        return flo, fhi, fpar, cnt[None]
 
+    out_specs = (spec, spec, spec, spec) + ((P(),) if with_psum else ())
     fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(spec, spec, spec, spec, spec),
-        out_specs=(spec, spec, spec, spec, P()),
+        out_specs=out_specs,
         check_rep=False,
     )
     # counters come back already sliced to the 8 telemetry lanes:
@@ -170,6 +198,7 @@ def make_kv_scrub_step(
     local_words: int,
     table_cols: int,
     codec: str = "secded72",
+    with_payload: bool = True,
 ):
     """Shard_map'd paged scrub-on-read over per-replica KV arenas.
 
@@ -182,6 +211,11 @@ def make_kv_scrub_step(
     ever crosses a shard boundary. Returns a jitted callable
         fn(lo, hi, par, table) -> (lo, hi, par, payload_lo, payload_hi,
                                    counters (n_shards, table_cols, 8))
+    ``with_payload=False`` drops the two payload outputs (callable returns
+    (lo, hi, par, counters)): a scrub-only soak — the background scrubber
+    and the BENCH_mesh throughput record — needs corrected planes and
+    counters but never reads the gathered payload, and skipping it removes
+    2 * table_cols * words_per_page words of per-step output traffic.
     """
     from repro.kernels import paged_gather
 
@@ -196,20 +230,21 @@ def make_kv_scrub_step(
         olo, ohi, opar, cnt = paged_gather.gather_scrub_pages(
             lo[idx], hi[idx], par[idx], codec=codec, interpret=interpret
         )
-        return (
+        out = (
             lo.at[idx].set(olo),
             hi.at[idx].set(ohi),
             par.at[idx].set(opar),
-            olo[None],
-            ohi[None],
-            cnt[None],
         )
+        if with_payload:
+            out += (olo[None], ohi[None])
+        return out + (cnt[None],)
 
+    n_out = 6 if with_payload else 4
     fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, spec, spec, spec, spec, spec),
+        out_specs=(spec,) * n_out,
         check_rep=False,
     )
     jitted = jax.jit(fn)

@@ -1,0 +1,135 @@
+"""Pallas lowering selection: the compiled lane vs the interpret lane.
+
+Every kernel wrapper in ``kernels/ops.py`` (and the mesh/paged callers that
+bake ``interpret`` into a jit cache key) routes its lowering decision through
+this module (DESIGN.md §18):
+
+  * ``resolve()`` returns the backend in force — ``"compiled"`` when the
+    runtime platform has a Pallas lowering (TPU Mosaic, GPU Triton) that
+    passes a one-time compile probe, ``"interpret"`` otherwise.
+  * The choice can be forced with the ``REPRO_KERNEL_BACKEND`` environment
+    variable (``auto`` | ``compiled`` | ``interpret``) or ``set_backend()``.
+    Forcing ``compiled`` on a host whose platform cannot lower Pallas does
+    NOT error: the probe fails, the interpret lane engages automatically,
+    and ``fallback_engaged()`` reports it — CI asserts exactly this on
+    CPU-only runners (kernel-backend-smoke).
+  * Per-call ``interpret=False`` requests go through ``resolve_interpret``:
+    an explicit compiled request is honored when the probe passes and falls
+    back to interpret (recorded) when it cannot, so no call site ever has to
+    guard on the platform.
+
+The probe compiles and runs one tiny SECDED encode with ``interpret=False``
+and caches the verdict per JAX platform; it is the only place a compiled
+lowering is attempted speculatively.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+VALID = ("auto", "compiled", "interpret")
+
+# Platforms with a real Pallas lowering (Mosaic / Triton). Everything else
+# (cpu, plugin backends without Pallas) auto-selects the interpret lane
+# without even running the probe.
+_COMPILED_PLATFORMS = ("tpu", "gpu", "cuda", "rocm")
+
+_override: list[str | None] = [None]  # set_backend() beats the env var
+_probe_cache: dict[str, bool] = {}  # platform -> compiled lowering works
+_fallback: dict[str, bool] = {"engaged": False}
+
+
+def set_backend(mode: str | None) -> None:
+    """Force the lane programmatically (tests); ``None`` restores auto."""
+    if mode is not None and mode not in VALID:
+        raise ValueError(f"backend must be one of {VALID}, got {mode!r}")
+    _override[0] = mode
+    _fallback["engaged"] = False
+
+
+def requested() -> str:
+    """The requested mode: set_backend() > REPRO_KERNEL_BACKEND > auto."""
+    if _override[0] is not None:
+        return _override[0]
+    mode = os.environ.get("REPRO_KERNEL_BACKEND", "auto").strip().lower()
+    return mode if mode in VALID else "auto"
+
+
+def compiled_available() -> bool:
+    """Whether a compiled Pallas lowering works on this platform (cached
+    one-time probe; never raises)."""
+    platform = jax.default_backend()
+    if platform in _probe_cache:
+        return _probe_cache[platform]
+    ok = False
+    if platform in _COMPILED_PLATFORMS:
+        try:
+            import jax.numpy as jnp
+
+            from repro.kernels import secded as _secded
+
+            z = jnp.zeros((8, 128), jnp.uint32)
+            jax.block_until_ready(
+                _secded.encode_2d(z, z, block=(8, 128), codec="secded72",
+                                  interpret=False)
+            )
+            ok = True
+        except Exception:  # lowering/compile failure -> interpret lane
+            ok = False
+    _probe_cache[platform] = ok
+    return ok
+
+
+def resolve() -> str:
+    """The lane in force: ``"compiled"`` or ``"interpret"``.
+
+    ``auto``: compiled wherever the probe passes. ``compiled``: same, but a
+    probe failure records the fallback (CI asserts it engaged on CPU).
+    ``interpret``: always the interpret lane, even on TPU/GPU.
+    """
+    mode = requested()
+    if mode == "interpret":
+        return "interpret"
+    if compiled_available():
+        return "compiled"
+    if mode == "compiled":
+        _fallback["engaged"] = True
+    return "interpret"
+
+
+def use_interpret() -> bool:
+    """Backwards-compatible boolean view of ``resolve()``."""
+    return resolve() == "interpret"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a per-call ``interpret`` request to a concrete lowering.
+
+    ``None``  -> the lane in force (``resolve()``).
+    ``False`` -> explicit compiled request: honored when the platform can
+                 lower Pallas, otherwise the interpret fallback engages
+                 (recorded via ``fallback_engaged()``) instead of erroring.
+    ``True``  -> interpret, always honored.
+    """
+    if interpret is None:
+        return use_interpret()
+    if interpret is False and not compiled_available():
+        _fallback["engaged"] = True
+        return True
+    return bool(interpret)
+
+
+def fallback_engaged() -> bool:
+    """True once any compiled request has fallen back to interpret."""
+    return _fallback["engaged"]
+
+
+def reset_fallback() -> None:
+    _fallback["engaged"] = False
+
+
+def tag() -> str:
+    """Row tag for benchmarks/profiler: the lane in force."""
+    return resolve()

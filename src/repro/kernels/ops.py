@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import backend as _backend
 from repro.kernels import ecc_matmul as _mm
 from repro.kernels import fault_inject as _fi
 from repro.kernels import inject_scrub as _isc
@@ -49,7 +50,10 @@ def _round_up(x: int, m: int) -> int:
 
 
 def use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """True when the interpret lane is in force (see kernels/backend.py:
+    honors REPRO_KERNEL_BACKEND / set_backend and the compiled-lowering
+    probe, falling back to interpret automatically)."""
+    return _backend.use_interpret()
 
 
 def _to_2d(*planes, lanes=LANES, block_rows=256):
@@ -76,7 +80,7 @@ def _to_2d(*planes, lanes=LANES, block_rows=256):
 def encode(lo: jnp.ndarray, hi: jnp.ndarray, *, codec: str = "secded72",
            interpret: bool | None = None):
     """ECC check plane for word planes of any shape (codec's check dtype)."""
-    interpret = use_interpret() if interpret is None else interpret
+    interpret = _backend.resolve_interpret(interpret)
     _count_launch()
     (lo2, hi2), n, block = _to_2d(lo, hi)
     par = _secded.encode_2d(lo2, hi2, block=block, codec=codec, interpret=interpret)
@@ -85,7 +89,7 @@ def encode(lo: jnp.ndarray, hi: jnp.ndarray, *, codec: str = "secded72",
 
 def decode(lo, hi, parity, *, codec: str = "secded72", interpret: bool | None = None):
     """ECC decode for planes of any shape -> (lo', hi', status int32)."""
-    interpret = use_interpret() if interpret is None else interpret
+    interpret = _backend.resolve_interpret(interpret)
     _count_launch()
     (lo2, hi2, par2), n, block = _to_2d(lo, hi, parity)
     olo, ohi, st = _secded.decode_2d(
@@ -97,7 +101,7 @@ def decode(lo, hi, parity, *, codec: str = "secded72", interpret: bool | None = 
 
 def inject(lo, hi, parity, mlo, mhi, mparity, *, interpret: bool | None = None):
     """Apply XOR flip masks to planes of any shape."""
-    interpret = use_interpret() if interpret is None else interpret
+    interpret = _backend.resolve_interpret(interpret)
     _count_launch()
     (a, b, c, d, e, f), n, block = _to_2d(lo, hi, parity, mlo, mhi, mparity)
     olo, ohi, opar = _fi.inject_2d(a, b, c, d, e, f, block=block, interpret=interpret)
@@ -117,7 +121,7 @@ def inject_scrub(
     Zero-padding added by the 2D layout decodes clean with zero flips, so the
     pad count is subtracted from the clean counter before returning.
     """
-    interpret = use_interpret() if interpret is None else interpret
+    interpret = _backend.resolve_interpret(interpret)
     _count_launch()
     (a, b, c, d, e, f), n, block = _to_2d(lo, hi, parity, mlo, mhi, mparity)
     olo, ohi, opar, cnt = _isc.inject_scrub_2d(
@@ -140,7 +144,7 @@ def inject_scrub_domains(
     row inside the kernel, so no pad correction is needed. Returns
     (faulty_lo, faulty_hi, faulty_parity, counters (n_domains, N_COUNTERS)).
     """
-    interpret = use_interpret() if interpret is None else interpret
+    interpret = _backend.resolve_interpret(interpret)
     _count_launch()
     (a, b, c, d, e, f), n, block = _to_2d(lo, hi, parity, mlo, mhi, mparity)
     # Pad the domain plane with the spill index (not 0: pad words must not
@@ -222,7 +226,7 @@ def ecc_matmul(
     fuse=False: naive baseline — full decode pass materialises corrected int8
                 weights to HBM, then a plain matmul re-reads them.
     """
-    interpret = use_interpret() if interpret is None else interpret
+    interpret = _backend.resolve_interpret(interpret)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, w.k)
     if fuse:

@@ -149,9 +149,10 @@ def gather_scrub_pages(lo, hi, parity, *, codec="secded72", interpret: bool | No
     valid codeword of every registered linear code) and are
     trimmed/subtracted.
     """
+    from repro.kernels import backend as _backend
     from repro.kernels import ops as kops
 
-    interpret = kops.use_interpret() if interpret is None else interpret
+    interpret = _backend.resolve_interpret(interpret)
     kops._count_launch()
     p_rows, w = lo.shape
     pad_w = (-w) % 128

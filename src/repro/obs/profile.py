@@ -11,7 +11,15 @@ When profiling is on, each call is bracketed with ``jax.block_until_ready``
 on the dispatch *result* (async dispatch would otherwise attribute device
 time to whoever synchronizes next) and the row is tagged ``interpret`` or
 ``compiled`` from the kernel backend actually in force
-(kernels/ops.use_interpret) — the BENCH trajectory story's key column.
+(kernels/backend.resolve) — the BENCH trajectory story's key column.
+
+Besides the timing rows, the profiler carries *gauges*: wall-clock-derived
+scalars that are observations about overlap/efficiency rather than per-call
+latencies — e.g. ``serve.scrub_overlap_frac``, the fraction of each async
+scrub's dispatch-to-counters-ready window that decode blocks covered
+(DESIGN.md §18). Gauges live here and NOT in the recorder's metrics for the
+same reason the timing rows do: wall-clock must never enter the
+deterministic trace.
 """
 
 from __future__ import annotations
@@ -24,6 +32,29 @@ class KernelProfiler:
 
     def __init__(self):
         self.rows: dict[str, dict] = {}
+        self.gauges: dict[str, dict] = {}
+
+    def record_gauge(self, name: str, value: float) -> None:
+        """Observe one wall-clock-derived scalar (running mean + last +
+        min/max), e.g. the §18 scrub overlap fraction."""
+        g = self.gauges.get(name)
+        if g is None:
+            g = self.gauges[name] = {
+                "name": name, "n": 0, "sum": 0.0,
+                "last": 0.0, "min": None, "max": None,
+            }
+        v = float(value)
+        g["n"] += 1
+        g["sum"] += v
+        g["last"] = v
+        g["min"] = v if g["min"] is None else min(g["min"], v)
+        g["max"] = v if g["max"] is None else max(g["max"], v)
+
+    def gauge_rows(self) -> list[dict]:
+        return [
+            {**g, "mean": g["sum"] / max(g["n"], 1)}
+            for _, g in sorted(self.gauges.items())
+        ]
 
     def record(self, name: str, ms: float) -> None:
         row = self.rows.get(name)
@@ -56,6 +87,16 @@ class KernelProfiler:
                 f"| {r['mean_ms']:.3f} | {r['min_ms']:.3f} "
                 f"| {r['max_ms']:.3f} |"
             )
+        if self.gauges:
+            lines += [
+                "", "| gauge | n | mean | last | min | max |",
+                "|---|---|---|---|---|---|",
+            ]
+            for g in self.gauge_rows():
+                lines.append(
+                    f"| {g['name']} | {g['n']} | {g['mean']:.3f} "
+                    f"| {g['last']:.3f} | {g['min']:.3f} | {g['max']:.3f} |"
+                )
         return "\n".join(lines) + "\n"
 
 
@@ -64,9 +105,16 @@ _ACTIVE: KernelProfiler | None = None
 
 def backend_tag() -> str:
     """``interpret`` / ``compiled``: which Pallas lowering is in force."""
-    from repro.kernels import ops as kops
+    from repro.kernels import backend as _backend
 
-    return "interpret" if kops.use_interpret() else "compiled"
+    return _backend.tag()
+
+
+def gauge(name: str, value: float) -> None:
+    """Record a wall-clock-derived gauge on the active profiler (no-op —
+    one global ``None`` check — when profiling is off)."""
+    if _ACTIVE is not None:
+        _ACTIVE.record_gauge(name, value)
 
 
 def enable(profiler: KernelProfiler | None = None) -> KernelProfiler:

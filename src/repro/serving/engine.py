@@ -827,6 +827,7 @@ class ServingEngine:
         speculative: int = 0,
         draft_params=None,
         draft_cfg: ModelConfig | None = None,
+        scrub_overlap: bool | None = None,
     ) -> sched.ServeReport:
         """Serve a stream of variable-length requests (DESIGN.md §11/§16).
 
@@ -851,6 +852,12 @@ class ServingEngine:
         ``walk_kv`` (multi-rail engines): attach a `kv` rail to the
         MultiRailController and let the per-interval scrub DED counters walk
         the cache voltage independently of the weight rails.
+
+        ``scrub_overlap`` (None = auto, DESIGN.md §18): overlap the interval
+        scrub with the decode blocks by deferring its counter harvest to the
+        next interval boundary — bit-identical outputs/stats/rail walks to
+        the serialized path; auto demotes to serialized when codec
+        escalation is live. ``False`` forces the serialized path.
 
         Mesh engines (DESIGN.md §13) serve the stream data-parallel: the
         requests are partitioned round-robin across the reliability shards,
@@ -882,6 +889,7 @@ class ServingEngine:
                 speculative=speculative,
                 draft_params=draft_params,
                 draft_cfg=draft_cfg,
+                scrub_overlap=scrub_overlap,
             )
         profile = self.platform or vmod.PLATFORMS["vc707"]
         envp = self.rel.environment_profile if self.rel is not None else None
@@ -957,6 +965,7 @@ class ServingEngine:
             draft_params=draft_params,
             draft_cfg=draft_cfg,
             recorder=self.recorder,
+            scrub_overlap=scrub_overlap,
         )
         # Fold the cache telemetry + storage into the engine's books: the kv
         # domain now has real words (power weighting) and real counters.
@@ -986,6 +995,7 @@ class ServingEngine:
         speculative: int = 0,
         draft_params=None,
         draft_cfg: ModelConfig | None = None,
+        scrub_overlap: bool | None = None,
     ) -> "sched.MeshServeReport":
         """Data-parallel continuous batching across the reliability shards.
 
@@ -1056,6 +1066,7 @@ class ServingEngine:
                 draft_params=draft_params,
                 draft_cfg=draft_cfg,
                 recorder=self.recorder,
+                scrub_overlap=scrub_overlap,
             )
             reports.append(report)
             self._store.register_domain_words(

@@ -33,10 +33,12 @@ prompt length).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import numpy as np
 
+from repro.obs import profile as obs_profile
 from repro.core.kvpages import (
     KVGeometry,
     KVPageArena,
@@ -401,6 +403,7 @@ def serve_stream(
     draft_params=None,
     draft_cfg=None,
     recorder=None,
+    scrub_overlap: bool | None = None,
 ) -> ServeReport:
     """Drive a request stream to completion over the paged cache.
 
@@ -443,6 +446,24 @@ def serve_stream(
     verifies all K positions with one chunked target forward; only accepted
     tokens' page commits land (rejected rows steer to the scratch page), so
     the emitted stream is exactly the greedy rollout.
+
+    ``scrub_overlap`` (DESIGN.md §18) moves the interval scrub off the
+    decode critical path: tick + scrub-on-read + cache refresh are
+    dispatched as usual (device-side dependencies keep the refresh ordered
+    before the next decode block), but the counter harvest — the
+    ``np.asarray`` host sync plus all stats/controller/recorder work — is
+    deferred until just before the *next* interval's tick (and stream end),
+    so the decode blocks in between overlap the scrub instead of waiting
+    for it. Bit-identity is structural: the controller's rail move from
+    interval N's counters lands before interval N+1's injection exactly as
+    in the serialized path, per-lane attribution is captured at dispatch
+    time (preemption between intervals can't skew it), and the device
+    work is the same launches in the same order — planes, counters, tokens
+    and rail walks are byte-identical (tested). ``None`` (auto) overlaps
+    except when codec escalation is live (``kv_controller.escalation`` with
+    a ``helpers_factory``): escalation rebinds the commit path mid-stream,
+    which must stay synchronous with the scrub that flushed the arena, so
+    those streams auto-demote to the serialized path.
     """
     import jax.numpy as jnp
 
@@ -503,6 +524,209 @@ def serve_stream(
     prefix_hit_tokens = 0
     spec_dispatches = 0
     spec_emitted = 0
+
+    overlap = scrub_overlap
+    if overlap is None:
+        # Auto-demotion (see docstring): live codec escalation must rebind
+        # the commit path synchronously with the scrub that flushed it.
+        overlap = not (
+            kv_controller is not None
+            and helpers_factory is not None
+            and getattr(kv_controller, "escalation", None) is not None
+        )
+    pending_scrub = None  # deferred interval harvest (overlap mode)
+
+    def _dispatch_scrub():
+        """Interval scrub device work: tick, scrub-on-read, cache refresh —
+        all async dispatch, no host sync. Returns the capture the deferred
+        harvest needs: the device counters plus dispatch-time attribution
+        (the (state, n_pages) pairs and dedup rows as of THIS interval —
+        preemption or retirement before the harvest must not skew them)."""
+        nonlocal cache
+        arena.tick()
+        # Table width tracks the *live* page maximum (power-of-two
+        # bucketed so the jit shape set stays logarithmic), not worst-
+        # case stream capacity: the scrub pass scales with pages that
+        # actually hold tokens, and scratch filler rows are pure waste.
+        live_max = max(len(st.pages) for st in sched.running)
+        p_cols = 1 << max(live_max - 1, 0).bit_length()
+        table = np.full((n_lanes, p_cols), arena.scratch_page, np.int32)
+        n_tok = np.zeros(n_lanes, np.int32)
+        lanes_cap: list = []
+        for i, st in enumerate(sched.lanes):
+            if st is None:
+                lanes_cap.append(None)
+                continue
+            table[i, : len(st.pages)] = st.pages
+            n_tok[i] = st.stored  # already counts the token committed above
+            lanes_cap.append((st, len(st.pages)))
+        if trie is None:
+            payload, cnt = arena.scrub_pages_async(table.reshape(-1))
+            cache = helpers["refresh"](
+                cache,
+                payload.reshape(n_lanes, -1, geom.token_f32),
+                jnp.asarray(n_tok),
+            )
+            cap = {"mode": "private", "cnt": cnt, "p_cols": p_cols}
+        else:
+            # Prefix sharing: scrub each unique live page ONCE (that is
+            # the physical work and the arena.stats truth), then fan the
+            # corrected payload out to every reader's lane cache.
+            upad, rows, n_u = dedup_page_table(table, arena.scratch_page)
+            payload_u, cnt = arena.scrub_pages_async(upad)
+            cache = helpers["refresh"](
+                cache,
+                payload_u[jnp.asarray(rows.reshape(-1))].reshape(
+                    n_lanes, -1, geom.token_f32
+                ),
+                jnp.asarray(n_tok),
+            )
+            cap = {"mode": "shared", "cnt": cnt, "rows": rows, "n_u": n_u}
+        cap["lanes"] = lanes_cap
+        # Gauge values describe the interval being scrubbed, so snapshot
+        # them now — at harvest time the scheduler has moved on.
+        cap["gauges"] = (
+            sched.alloc.free_pages, len(sched.waiting), len(sched.running)
+        )
+        cap["t_dispatch"] = time.perf_counter()
+        return cap
+
+    def _harvest_scrub(cap):
+        """The deferred half of the interval scrub: the one host sync plus
+        all stats / controller / recorder work, bit-identical to running
+        inline (same counters, same reduction order, same rail move)."""
+        nonlocal helpers
+        t0 = time.perf_counter()
+        cnt = np.asarray(cap["cnt"])
+        t1 = time.perf_counter()
+        if overlap and obs_profile.active():
+            # Overlap efficiency: fraction of the dispatch->counters-ready
+            # window the decode blocks covered; the residue (t1 - t0) is
+            # what serving still waited on the scrub.
+            span = max(t1 - cap["t_dispatch"], 1e-9)
+            obs_profile.gauge(
+                "serve.scrub_overlap_frac",
+                (t0 - cap["t_dispatch"]) / span,
+            )
+        interval = FaultStats()  # reader-weighted attribution
+        if cap["mode"] == "private":
+            cnt = cnt.reshape(n_lanes, cap["p_cols"], 8)
+            for i, lc in enumerate(cap["lanes"]):
+                if lc is None:
+                    continue
+                st, n_p = lc
+                rows_c = cnt[i, :n_p]
+                rs = FaultStats.from_counters(
+                    rows_c.sum(axis=0), words=n_p * geom.words_per_page
+                )
+                st.stats.accumulate(rs)
+                interval.accumulate(rs)
+            # without sharing every live page has one reader: the
+            # reader-weighted view IS the physical view
+            physical = interval
+            arena.stats.accumulate(interval)
+        else:
+            rows, n_u = cap["rows"], cap["n_u"]
+            for i, lc in enumerate(cap["lanes"]):
+                if lc is None:
+                    continue
+                st, n_p = lc
+                rs = FaultStats.from_counters(
+                    cnt[rows[i, :n_p]].sum(axis=0),
+                    words=n_p * geom.words_per_page,
+                )
+                st.stats.accumulate(rs)
+                interval.accumulate(rs)
+            physical = FaultStats.from_counters(
+                cnt[:n_u].sum(axis=0),
+                words=n_u * geom.words_per_page,
+                shard=arena.shard,
+            )
+            arena.stats.accumulate(physical)
+        if kv_controller is not None and not kv_controller.locked:
+            # See docstring: without a factory a stronger code cannot be
+            # applied to the live arena, so escalation is suppressed for
+            # this update only (the caller's policy is left intact).
+            saved_policy = kv_controller.escalation
+            if helpers_factory is None:
+                kv_controller.escalation = None
+            try:
+                # Scrub-aware sharing: reader-weighted counters over the
+                # *physical* word population — a DED on an N-reader page
+                # counts N times, so ded_rate amplifies with fan-out and
+                # the escalation ladder trips earlier than it would for
+                # private pages (core/controller.reader_weighted_stats).
+                arena.set_voltage(
+                    kv_controller.update(
+                        reader_weighted_stats(interval, physical)
+                    )
+                )
+            finally:
+                kv_controller.escalation = saved_policy
+            change = kv_controller.pop_codec_change()
+            if change and rec:
+                rec.emit(
+                    "kv_codec_change", shard=arena.shard, domain="kv",
+                    codec=change,
+                )
+            if change:
+                # Escalate right after the scrub above flushed every
+                # correctable fault: the arena re-encodes under the
+                # stronger code and the commit path switches with it.
+                # (A change can only arrive when a factory exists —
+                # escalation was suppressed above otherwise. Escalation-
+                # capable streams run serialized — see scrub_overlap — so
+                # this runs at the same point the inline path would.)
+                shared_now = None
+                if trie is not None:
+                    shared_now = sorted(
+                        set(sched.alloc.shared_pages()) | set(trie.pages())
+                    )
+                try:
+                    arena.change_codec(change, shared_pages=shared_now)
+                except SharedPageDEDError as err:
+                    # Refuse-and-copy: a latched DED on a shared page
+                    # must not be re-sealed for N readers. Drop the
+                    # trie's claim on the poisoned prefixes, preempt
+                    # every running reader (recompute *is* the copy —
+                    # fresh pages, re-prefilled KV), then re-protect.
+                    trie.evict_pages(err.pages)
+                    bad = set(err.pages)
+                    preempted = 0
+                    for st in list(sched.running):
+                        if bad & set(st.pages):
+                            sched.preempt(st)
+                            preempted += 1
+                    arena.change_codec(change)
+                    if rec:
+                        rec.emit(
+                            "shared_ded_recovery", shard=arena.shard,
+                            domain="kv", pages=len(err.pages),
+                            preempted=preempted,
+                        )
+                helpers = helpers_factory(change)
+        if rec:
+            rec.emit(
+                "kv_scrub", shard=arena.shard, domain="kv",
+                interval=len(kv_voltages), voltage=float(arena.voltage),
+                codec=arena.codec_name, corrected=physical.corrected,
+                detected=physical.detected, silent=physical.silent,
+                words=physical.words,
+            )
+            m = rec.metrics
+            lbl = {"shard": arena.shard} if arena.shard >= 0 else {}
+            m.observe_fault_stats("kv.scrub", physical, **lbl)
+            free_pages, queue_depth, lanes_active = cap["gauges"]
+            for gname, val in (
+                ("kv.pages_free", free_pages),
+                ("sched.queue_depth", queue_depth),
+                ("sched.lanes_active", lanes_active),
+            ):
+                m.gauge(gname, **lbl).set(val)
+                rec.emit(
+                    "gauge", shard=arena.shard, name=gname, value=val
+                )
+        kv_voltages.append(arena.voltage)
 
     while sched.unfinished:
         # -- admission: batch same-shape prefills, commit the prompts' KV --
@@ -704,154 +928,26 @@ def serve_stream(
             since_scrub = 0
         else:
             continue
+        # Off-critical-path scrub (§18): interval N's counters are
+        # harvested immediately before interval N+1's tick, so the
+        # controller's rail move still lands before the next injection —
+        # exactly where the serialized path puts it — while the decode
+        # blocks in between overlapped interval N's scrub device work.
+        if pending_scrub is not None:
+            _harvest_scrub(pending_scrub)
+            pending_scrub = None
         if sched.running:
-            arena.tick()
-            # Table width tracks the *live* page maximum (power-of-two
-            # bucketed so the jit shape set stays logarithmic), not worst-
-            # case stream capacity: the scrub pass scales with pages that
-            # actually hold tokens, and scratch filler rows are pure waste.
-            live_max = max(len(st.pages) for st in sched.running)
-            p_cols = 1 << max(live_max - 1, 0).bit_length()
-            table = np.full((n_lanes, p_cols), arena.scratch_page, np.int32)
-            n_tok = np.zeros(n_lanes, np.int32)
-            for i, st in enumerate(sched.lanes):
-                if st is None:
-                    continue
-                table[i, : len(st.pages)] = st.pages
-                n_tok[i] = st.stored  # already counts the token committed above
-            interval = FaultStats()  # reader-weighted attribution
-            if trie is None:
-                payload, cnt = arena.scrub_pages(table.reshape(-1))
-                cache = helpers["refresh"](
-                    cache,
-                    payload.reshape(n_lanes, -1, geom.token_f32),
-                    jnp.asarray(n_tok),
-                )
-                cnt = cnt.reshape(n_lanes, p_cols, 8)
-                for i, st in enumerate(sched.lanes):
-                    if st is None:
-                        continue
-                    rows = cnt[i, : len(st.pages)]
-                    rs = FaultStats.from_counters(
-                        rows.sum(axis=0), words=rows.shape[0] * geom.words_per_page
-                    )
-                    st.stats.accumulate(rs)
-                    interval.accumulate(rs)
-                # without sharing every live page has one reader: the
-                # reader-weighted view IS the physical view
-                physical = interval
-                arena.stats.accumulate(interval)
+            cap = _dispatch_scrub()
+            if overlap:
+                pending_scrub = cap
             else:
-                # Prefix sharing: scrub each unique live page ONCE (that is
-                # the physical work and the arena.stats truth), then fan the
-                # corrected payload and the counters out to every reader —
-                # per-request stats stay reader-weighted because every
-                # reader really did consume that page's faults.
-                upad, rows, n_u = dedup_page_table(table, arena.scratch_page)
-                payload_u, cnt_u = arena.scrub_pages(upad)
-                cache = helpers["refresh"](
-                    cache,
-                    jnp.asarray(payload_u)[
-                        jnp.asarray(rows.reshape(-1))
-                    ].reshape(n_lanes, -1, geom.token_f32),
-                    jnp.asarray(n_tok),
-                )
-                for i, st in enumerate(sched.lanes):
-                    if st is None:
-                        continue
-                    rs = FaultStats.from_counters(
-                        cnt_u[rows[i, : len(st.pages)]].sum(axis=0),
-                        words=len(st.pages) * geom.words_per_page,
-                    )
-                    st.stats.accumulate(rs)
-                    interval.accumulate(rs)
-                physical = FaultStats.from_counters(
-                    cnt_u[:n_u].sum(axis=0),
-                    words=n_u * geom.words_per_page,
-                    shard=arena.shard,
-                )
-                arena.stats.accumulate(physical)
-            if kv_controller is not None and not kv_controller.locked:
-                # See docstring: without a factory a stronger code cannot be
-                # applied to the live arena, so escalation is suppressed for
-                # this update only (the caller's policy is left intact).
-                saved_policy = kv_controller.escalation
-                if helpers_factory is None:
-                    kv_controller.escalation = None
-                try:
-                    # Scrub-aware sharing: reader-weighted counters over the
-                    # *physical* word population — a DED on an N-reader page
-                    # counts N times, so ded_rate amplifies with fan-out and
-                    # the escalation ladder trips earlier than it would for
-                    # private pages (core/controller.reader_weighted_stats).
-                    arena.set_voltage(
-                        kv_controller.update(
-                            reader_weighted_stats(interval, physical)
-                        )
-                    )
-                finally:
-                    kv_controller.escalation = saved_policy
-                change = kv_controller.pop_codec_change()
-                if change and rec:
-                    rec.emit(
-                        "kv_codec_change", shard=arena.shard, domain="kv",
-                        codec=change,
-                    )
-                if change:
-                    # Escalate right after the scrub above flushed every
-                    # correctable fault: the arena re-encodes under the
-                    # stronger code and the commit path switches with it.
-                    # (A change can only arrive when a factory exists —
-                    # escalation was suppressed above otherwise.)
-                    shared_now = None
-                    if trie is not None:
-                        shared_now = sorted(
-                            set(sched.alloc.shared_pages()) | set(trie.pages())
-                        )
-                    try:
-                        arena.change_codec(change, shared_pages=shared_now)
-                    except SharedPageDEDError as err:
-                        # Refuse-and-copy: a latched DED on a shared page
-                        # must not be re-sealed for N readers. Drop the
-                        # trie's claim on the poisoned prefixes, preempt
-                        # every running reader (recompute *is* the copy —
-                        # fresh pages, re-prefilled KV), then re-protect.
-                        trie.evict_pages(err.pages)
-                        bad = set(err.pages)
-                        preempted = 0
-                        for st in list(sched.running):
-                            if bad & set(st.pages):
-                                sched.preempt(st)
-                                preempted += 1
-                        arena.change_codec(change)
-                        if rec:
-                            rec.emit(
-                                "shared_ded_recovery", shard=arena.shard,
-                                domain="kv", pages=len(err.pages),
-                                preempted=preempted,
-                            )
-                    helpers = helpers_factory(change)
-            if rec:
-                rec.emit(
-                    "kv_scrub", shard=arena.shard, domain="kv",
-                    interval=len(kv_voltages), voltage=float(arena.voltage),
-                    codec=arena.codec_name, corrected=physical.corrected,
-                    detected=physical.detected, silent=physical.silent,
-                    words=physical.words,
-                )
-                m = rec.metrics
-                lbl = {"shard": arena.shard} if arena.shard >= 0 else {}
-                m.observe_fault_stats("kv.scrub", physical, **lbl)
-                for gname, val in (
-                    ("kv.pages_free", sched.alloc.free_pages),
-                    ("sched.queue_depth", len(sched.waiting)),
-                    ("sched.lanes_active", len(sched.running)),
-                ):
-                    m.gauge(gname, **lbl).set(val)
-                    rec.emit(
-                        "gauge", shard=arena.shard, name=gname, value=val
-                    )
-            kv_voltages.append(arena.voltage)
+                _harvest_scrub(cap)
+
+    if pending_scrub is not None:
+        # Stream drained with a scrub in flight: harvest before teardown so
+        # the report's stats/voltages match the serialized path exactly.
+        _harvest_scrub(pending_scrub)
+        pending_scrub = None
 
     if trie is not None:
         # Serve teardown: the prefix cache has no meaning past this stream,

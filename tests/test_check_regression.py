@@ -241,3 +241,47 @@ def test_summary_skipped_serve_row(gate, tmp_path):
     assert "| serve_throughput cont_over_fixed | ➖ skipped | no baseline |" in (
         summary.read_text()
     )
+
+
+def test_overlap_gate_holds_floor(gate):
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.0}))
+    gate("SERVE_BASELINE", _serve_rows(1.3))
+    rows = _serve_rows(1.3) + [
+        {"kernel": "serve_scrub_overlap", "overlapped_over_serialized": 1.02}
+    ]
+    gate("SERVE_CURRENT", rows)
+    assert cr.check(threshold=0.20) == 0
+    rows[-1]["overlapped_over_serialized"] = 0.90  # overlap became a tax
+    gate("SERVE_CURRENT", rows)
+    assert cr.check(threshold=0.20) == 1
+
+
+def test_overlap_gate_skips_old_artifacts(gate):
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    gate("CURRENT", _kernel_rows({1: 1.0}))
+    gate("SERVE_BASELINE", _serve_rows(1.3))
+    gate("SERVE_CURRENT", _serve_rows(1.3))  # predates the overlap row
+    assert cr.check(threshold=0.20) == 0
+
+
+def test_backend_ratio_gate(gate):
+    gate("BASELINE", _kernel_rows({1: 1.0}))
+    # interpret lane: ratio ~1.0 passes trivially whatever its value
+    gate("CURRENT", _kernel_rows({1: 1.0}) + [
+        {"kernel": "backend_ratio", "compiled_over_interpret": 1.4,
+         "backend": "interpret"},
+    ])
+    assert cr.check(threshold=0.20) == 0
+    # compiled lane slower than the interpreter by > threshold: regression
+    gate("CURRENT", _kernel_rows({1: 1.0}) + [
+        {"kernel": "backend_ratio", "compiled_over_interpret": 1.4,
+         "backend": "compiled"},
+    ])
+    assert cr.check(threshold=0.20) == 1
+    # compiled lane faster than interpret: the expected state, passes
+    gate("CURRENT", _kernel_rows({1: 1.0}) + [
+        {"kernel": "backend_ratio", "compiled_over_interpret": 0.1,
+         "backend": "compiled"},
+    ])
+    assert cr.check(threshold=0.20) == 0
